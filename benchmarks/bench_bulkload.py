@@ -1,0 +1,45 @@
+"""Paper Fig. 10: bulk-loading time (NF transform + index build)."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.data.datasets import make_dataset
+
+from benchmarks.common import INDEXES, make_bench_index
+
+
+def run(n_keys: int = 200_000, datasets=("longlat", "lognormal", "ycsb"),
+        indexes=None) -> List[Tuple[str, str, float, dict]]:
+    indexes = indexes or INDEXES
+    rows_out = []
+    for ds in datasets:
+        keys = make_dataset(ds, n_keys)
+        pv = np.arange(len(keys), dtype=np.int64)
+        half = len(keys) // 2
+        for index in indexes:
+            idx = make_bench_index(index)
+            t0 = time.perf_counter()
+            idx.bulkload(keys[:half], pv[:half])
+            dt = time.perf_counter() - t0
+            extra = {}
+            if hasattr(idx, "metrics"):
+                extra = {k: idx.metrics[k] for k in
+                         ("flow_train_s", "transform_s", "index_build_s")
+                         if k in idx.metrics}
+            rows_out.append((ds, index, dt, extra))
+            parts = (f" (flow={extra.get('flow_train_s', 0):.2f}s "
+                     f"transform={extra.get('transform_s', 0):.2f}s "
+                     f"build={extra.get('index_build_s', 0):.2f}s)"
+                     if extra else "")
+            print(f"[fig10] {ds:11s} {index:6s} bulkload {dt:7.3f}s{parts}")
+    return rows_out
+
+
+def rows(results):
+    return [(f"fig10_bulkload/{ds}/{index}", dt * 1e6,
+             ";".join(f"{k}={v:.2f}" for k, v in extra.items()))
+            for ds, index, dt, extra in results]

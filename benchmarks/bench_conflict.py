@@ -1,0 +1,45 @@
+"""Paper Table 3: tail conflict degrees, original vs after-NF, load vs run."""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.conflict import dataset_tail_conflict
+from repro.core.flow import FlowConfig, transform_keys
+from repro.core.train_flow import FlowTrainConfig, train_flow
+from repro.data.datasets import make_dataset
+
+from benchmarks.common import ALL_DATASETS
+
+
+def run(n_keys: int = 100_000, datasets=None) -> List[Tuple]:
+    datasets = datasets or ALL_DATASETS
+    rows_out = []
+    cfg = FlowConfig()
+    for ds in datasets:
+        keys = make_dataset(ds, n_keys)
+        half = len(keys) // 2
+        load, extra = keys[:half], keys[half:]
+        run_set = np.sort(np.concatenate([load, extra]))
+
+        tail_load = dataset_tail_conflict(load)
+        tail_run = dataset_tail_conflict(run_set)
+        params, norm, _ = train_flow(load, cfg, FlowTrainConfig(epochs=2))
+        z_load = transform_keys(params, norm, load, cfg)
+        z_run = transform_keys(params, norm, run_set, cfg)
+        tail_load_nf = dataset_tail_conflict(z_load)
+        tail_run_nf = dataset_tail_conflict(z_run)
+        rows_out.append((ds, tail_load, tail_run, tail_load_nf, tail_run_nf))
+        print(f"[table3] {ds:11s} tail(L)={tail_load:6d} tail(R)={tail_run:6d}"
+              f"  NF: tail(L)={tail_load_nf:4d} tail(R)={tail_run_nf:4d}")
+    return rows_out
+
+
+def rows(results):
+    out = []
+    for ds, tl, tr, tln, trn in results:
+        out.append((f"table3_tail/{ds}/raw", float(tl), f"run={tr}"))
+        out.append((f"table3_tail/{ds}/nf", float(tln), f"run={trn}"))
+    return out

@@ -1,0 +1,33 @@
+"""Paper Fig. 11: index size after the write-heavy running phase."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.data.datasets import make_dataset
+
+from benchmarks.common import INDEXES, run_workload
+
+
+def run(n_keys: int = 100_000, datasets=("longlat", "facebook"),
+        indexes=None):
+    indexes = indexes or INDEXES
+    results = []
+    for ds in datasets:
+        keys = make_dataset(ds, n_keys)
+        per_ds = {}
+        for index in indexes:
+            r = run_workload(index, keys, "write_heavy", n_ops=20_000)
+            r.dataset = ds
+            per_ds[index] = r
+            results.append(r)
+        base = per_ds["alex"].size_bytes or 1
+        for index, r in per_ds.items():
+            print(f"[fig11] {ds:11s} {index:6s} {r.size_bytes/1e6:8.2f} MB "
+                  f"({r.size_bytes/base:5.2f}x ALEX)")
+    return results
+
+
+def rows(results):
+    return [(f"fig11_size/{r.dataset}/{r.index}", float(r.size_bytes) / 1e6,
+             f"{r.size_bytes}B") for r in results]

@@ -1,0 +1,44 @@
+"""Paper Fig. 8 (P99) and Fig. 9 (P99.99/max) per-op tail latency.
+
+The paper measures per-batch latency divided by batch size (§4.3); the
+harness already records those percentiles during the throughput runs, so
+this module re-runs the representative workloads at higher op counts for a
+stable tail.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.data.datasets import make_dataset
+
+from benchmarks.common import INDEXES, BenchResult, run_workload
+
+REPRESENTATIVE = ["longlat", "facebook"]  # the paper's high-conflict pair
+
+
+def run(n_keys: int = 100_000, n_ops: int = 60_000,
+        mixes=("read_only", "write_heavy"), indexes=None) -> List[BenchResult]:
+    indexes = indexes or INDEXES
+    results = []
+    for ds in REPRESENTATIVE:
+        keys = make_dataset(ds, n_keys)
+        for mix in mixes:
+            for index in indexes:
+                r = run_workload(index, keys, mix, n_ops=n_ops)
+                r.dataset = ds
+                results.append(r)
+                print(f"[fig8/9] {ds:9s} {mix:11s} {index:6s} "
+                      f"p99={r.p99_ns:9.0f}ns p99.99={r.p9999_ns:9.0f}ns "
+                      f"max={r.max_ns:10.0f}ns")
+    return results
+
+
+def rows(results: List[BenchResult]):
+    out = []
+    for r in results:
+        out.append((f"fig8_p99/{r.dataset}/{r.mix}/{r.index}",
+                    r.p99_ns / 1e3, f"p9999={r.p9999_ns:.0f}ns"))
+        out.append((f"fig9_max/{r.dataset}/{r.mix}/{r.index}",
+                    r.max_ns / 1e3, f"p50={r.p50_ns:.0f}ns"))
+    return out

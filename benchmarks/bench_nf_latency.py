@@ -1,0 +1,60 @@
+"""Paper Table 2: per-key NF inference latency vs batch size and flow size.
+
+Two backends: the jnp host path and the fused Pallas kernel (interpret mode
+on CPU; on TPU the same call compiles to Mosaic).  The paper's headline —
+per-key cost collapses with batching — must reproduce on both.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.feature import expand_features
+from repro.core.flow import FlowConfig, transform_keys
+from repro.core.train_flow import FlowTrainConfig, train_flow
+from repro.data.datasets import make_dataset
+from repro.kernels import ops
+
+FLOW_SIZES = {
+    "2H2L": FlowConfig(dim=2, hidden=2, layers=2),
+    "2H4L": FlowConfig(dim=2, hidden=2, layers=4),
+    "4H3L": FlowConfig(dim=2, hidden=4, layers=3),
+}
+BATCHES = (1, 8, 32, 128, 256, 1024, 2048)
+
+
+def _time_per_key(fn, keys, batch, repeats=5):
+    # warmup + best-of timing, per the paper's averaged-latency methodology
+    fn(keys[:batch])
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(keys[:batch])
+        best = min(best, (time.perf_counter() - t0) / batch)
+    return best * 1e9
+
+
+def run(n_keys: int = 10_000) -> List[Tuple]:
+    keys = make_dataset("lognormal", n_keys)
+    rows_out = []
+    for name, cfg in FLOW_SIZES.items():
+        params, norm, _ = train_flow(keys, cfg, FlowTrainConfig(epochs=1))
+
+        host = lambda ks: transform_keys(params, norm, ks, cfg)
+        kern = lambda ks: ops.nf_transform_keys(params, norm, ks, cfg)
+        for batch in BATCHES:
+            ns_host = _time_per_key(host, keys, batch)
+            ns_kern = _time_per_key(kern, keys, batch)
+            rows_out.append((name, batch, ns_host, ns_kern))
+            print(f"[table2] {name} batch={batch:5d} "
+                  f"host={ns_host:10.1f} ns/key  pallas={ns_kern:10.1f} ns/key")
+    return rows_out
+
+
+def rows(results):
+    return [(f"table2_nf_latency/{name}/b{batch}", ns_host / 1e3,
+             f"pallas_ns={ns_kern:.0f}")
+            for name, batch, ns_host, ns_kern in results]

@@ -1,0 +1,62 @@
+"""§Perf hillclimb 3: probe-path batch-size sweep.
+
+Compares the paper-style host tree walk (AFLI python probe) against the
+TPU-native vectorized FlatAFLI probe across request batch sizes — the
+crossover shows where batched device probes pay off (the paper's own
+Table 2 insight, applied to the index probe instead of the NF).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.afli import AFLI
+from repro.core.flat_afli import FlatAFLI
+from repro.data.datasets import make_dataset
+
+BATCHES = (64, 256, 1024, 8192, 65536)
+
+
+def _best_ns_per_key(fn, keys, batch, repeats=5):
+    fn(keys[:batch])
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(keys[:batch])
+        best = min(best, (time.perf_counter() - t0) / batch)
+    return best * 1e9
+
+
+def run(n_keys: int = 200_000) -> List[Tuple]:
+    keys = make_dataset("lognormal", n_keys)
+    pv = np.arange(len(keys), dtype=np.int64)
+
+    tree = AFLI()
+    tree.bulkload(keys, pv)
+
+    flat = FlatAFLI()
+    flat.build(keys, pv)
+
+    def tree_lookup(ks):
+        lk = tree.lookup
+        return [lk(float(k)) for k in ks]
+
+    rows_out = []
+    rng = np.random.default_rng(0)
+    probe_keys = rng.choice(keys, size=max(BATCHES), replace=True)
+    for b in BATCHES:
+        ns_tree = _best_ns_per_key(tree_lookup, probe_keys, b)
+        ns_flat = _best_ns_per_key(flat.lookup_batch, probe_keys, b)
+        rows_out.append((b, ns_tree, ns_flat))
+        print(f"[probe_batch] batch={b:6d} tree={ns_tree:9.1f} ns/key "
+              f"flat={ns_flat:9.1f} ns/key  speedup={ns_tree/ns_flat:5.2f}x")
+    return rows_out
+
+
+def rows(results):
+    return [(f"perf_probe_batch/b{b}", ns_flat / 1e3,
+             f"tree_ns={ns_tree:.0f};speedup={ns_tree/ns_flat:.2f}")
+            for b, ns_tree, ns_flat in results]

@@ -1,0 +1,46 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts.
+
+compute  = HLO_FLOPs_per_device * depth_correction / peak_FLOPs
+memory   = HLO_bytes_per_device * depth_correction / HBM_bw
+collective = wire_bytes_per_device * depth_correction / link_bw
+
+cost_analysis counts scan bodies once; utils.roofline derives the per-layer
+correction from the artifact metadata (layer count vs. probe depth).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from repro.utils.roofline import analyze_artifact, ARTIFACT_DIR
+
+
+def run(mesh: str | None = None) -> List[dict]:
+    rows_out = []
+    if not os.path.isdir(ARTIFACT_DIR):
+        print("[roofline] no dry-run artifacts; run repro.launch.dryrun first")
+        return rows_out
+    for fn in sorted(os.listdir(ARTIFACT_DIR)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(ARTIFACT_DIR, fn)) as f:
+            art = json.load(f)
+        if mesh and art["mesh"] != mesh:
+            continue
+        row = analyze_artifact(art)
+        rows_out.append(row)
+        print(f"[roofline] {row['arch']:22s} {row['shape']:11s} "
+              f"{row['mesh']:8s} compute={row['compute_s']*1e3:9.3f}ms "
+              f"memory={row['memory_s']*1e3:9.3f}ms "
+              f"coll={row['collective_s']*1e3:9.3f}ms "
+              f"bound={row['bound']:10s} useful={row['useful_frac']:6.1%}")
+    return rows_out
+
+
+def rows(results):
+    return [(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             r[r['bound'] + '_s'] * 1e6,
+             f"bound={r['bound']};useful={r['useful_frac']:.3f}")
+            for r in results]

@@ -1,0 +1,38 @@
+"""Paper Fig. 7: throughput of NFL vs baselines across datasets x mixes."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.data.datasets import make_dataset
+
+from benchmarks.common import (DEFAULT_DATASETS, DEFAULT_MIXES, INDEXES,
+                               BenchResult, run_workload)
+
+
+def run(n_keys: int = 100_000, n_ops: int = 30_000,
+        datasets=None, mixes=None, indexes=None) -> List[BenchResult]:
+    datasets = datasets or DEFAULT_DATASETS
+    mixes = mixes or DEFAULT_MIXES
+    indexes = indexes or INDEXES
+    results = []
+    for ds in datasets:
+        keys = make_dataset(ds, n_keys)
+        for mix in mixes:
+            for index in indexes:
+                r = run_workload(index, keys, mix, n_ops=n_ops)
+                r.dataset = ds
+                results.append(r)
+                print(f"[fig7] {ds:11s} {mix:11s} {index:6s} "
+                      f"{r.throughput_mops:7.3f} Mops/s  p99={r.p99_ns:8.0f}ns"
+                      f"  wrong={r.wrong}")
+    return results
+
+
+def rows(results: List[BenchResult]):
+    out = []
+    for r in results:
+        us_per_op = 1.0 / r.throughput_mops if r.throughput_mops else 0.0
+        out.append((f"fig7_throughput/{r.dataset}/{r.mix}/{r.index}",
+                    us_per_op, f"{r.throughput_mops:.4f}Mops"))
+    return out

@@ -1,0 +1,70 @@
+"""Benchmark runner — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows after each module's own
+human-readable logging.  ``--full`` widens to all 7 datasets and larger op
+counts; the default profile finishes on a laptop-class CPU.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig7,table2,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig7,fig8,fig10,fig11,table1,table2,"
+                         "table3,roofline")
+    ap.add_argument("--n-keys", type=int, default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (bench_alex_nf, bench_bulkload, bench_conflict,
+                            bench_index_size, bench_latency, bench_nf_latency,
+                            bench_probe_batch, bench_roofline,
+                            bench_throughput)
+    from benchmarks.common import ALL_DATASETS, DEFAULT_DATASETS
+
+    n_keys = args.n_keys or (400_000 if args.full else 100_000)
+    datasets = ALL_DATASETS if args.full else DEFAULT_DATASETS
+    rows = []
+
+    def want(tag):
+        return only is None or tag in only
+
+    t0 = time.time()
+    if want("fig7"):
+        rows += bench_throughput.rows(bench_throughput.run(
+            n_keys=n_keys, n_ops=60_000 if args.full else 30_000,
+            datasets=datasets))
+    if want("fig8"):
+        rows += bench_latency.rows(bench_latency.run(n_keys=n_keys))
+    if want("fig10"):
+        rows += bench_bulkload.rows(bench_bulkload.run(n_keys=2 * n_keys))
+    if want("fig11"):
+        rows += bench_index_size.rows(bench_index_size.run(n_keys=n_keys))
+    if want("table1"):
+        rows += bench_alex_nf.rows(bench_alex_nf.run(n_keys=n_keys))
+    if want("table2"):
+        rows += bench_nf_latency.rows(bench_nf_latency.run())
+    if want("probe_batch"):
+        rows += bench_probe_batch.rows(bench_probe_batch.run())
+    if want("table3"):
+        rows += bench_conflict.rows(bench_conflict.run(
+            n_keys=n_keys, datasets=datasets if not args.full else None))
+    if want("roofline"):
+        rows += bench_roofline.rows(bench_roofline.run())
+
+    print(f"\n# benchmarks completed in {time.time() - t0:.1f}s")
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""NFL as a standalone key-value index service handling the paper's four
+workload mixes in request batches — the 'serving' shape of the paper.
+
+  PYTHONPATH=src python examples/index_service.py --dataset facebook
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.nfl import NFL, NFLConfig
+from repro.data.datasets import dataset_names, make_dataset
+from repro.data.workloads import MIXES, WorkloadConfig, make_workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="facebook", choices=dataset_names())
+    ap.add_argument("--n-keys", type=int, default=200_000)
+    ap.add_argument("--n-ops", type=int, default=100_000)
+    ap.add_argument("--batch-size", type=int, default=256)
+    args = ap.parse_args()
+
+    keys = make_dataset(args.dataset, args.n_keys)
+    for mix in MIXES:
+        wl = make_workload(keys, WorkloadConfig(
+            mix=mix, n_ops=args.n_ops, batch_size=args.batch_size))
+        nfl = NFL(NFLConfig())
+        t0 = time.perf_counter()
+        nfl.bulkload(wl.load_keys, wl.load_payloads)
+        t_load = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        wrong = 0
+        for op, k, v in wl.batches:
+            reads = op == 0
+            if reads.any():
+                res = nfl.lookup_batch(k[reads])
+                wrong += int((res != v[reads]).sum())
+            if (~reads).any():
+                nfl.insert_batch(k[~reads], v[~reads])
+        dt = time.perf_counter() - t0
+        print(f"{args.dataset:10s} {mix:11s} load={t_load:5.1f}s "
+              f"run={dt:6.2f}s {args.n_ops / dt / 1e6:6.3f} Mops/s "
+              f"flow={'on' if nfl.use_flow else 'off'} wrong={wrong}")
+
+
+if __name__ == "__main__":
+    main()

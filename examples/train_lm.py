@@ -1,0 +1,89 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the internlm2 family at a width that lands near 100M params, the
+synthetic Markov corpus (learnable n-gram structure), AdamW + cosine,
+checkpointing every 50 steps.  Loss must drop well below the unigram
+entropy to demonstrate real learning.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.configs.base import AttnConfig
+from repro.data.tokens import SyntheticTokens
+from repro.models.model import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.schedule import ScheduleConfig
+from repro.train.train_step import TrainConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def lm_100m():
+    base = get_config("internlm2-1.8b")
+    return dataclasses.replace(
+        base,
+        n_layers=8,
+        d_model=512,
+        d_ff=2048,
+        vocab=4096,
+        attn=AttnConfig(n_heads=8, kv_heads=4, head_dim=64),
+        param_dtype="float32",
+        compute_dtype="float32",
+        loss_chunk=64,
+        remat="none",
+        tie_embeddings=False,
+    )  # ~34M backbone + embeddings ~8.4M -> runs in minutes on CPU
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--resume", action="store_true",
+                    help="keep an existing checkpoint dir (default: fresh)")
+    args = ap.parse_args()
+
+    if not args.resume:
+        import shutil
+
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    cfg = lm_100m()
+    model = build_model(cfg)
+    print(f"params: {cfg.param_count() / 1e6:.1f}M")
+    # near-deterministic latent chain: ~3.5 nats of learnable headroom
+    # between the unigram floor and the band-conditional entropy
+    data = SyntheticTokens(vocab=cfg.vocab, seq=args.seq,
+                           local_batch=args.batch, seed=42,
+                           n_states=32, alpha=0.03)
+    trainer = Trainer(
+        model,
+        TrainerConfig(
+            train=TrainConfig(
+                optimizer=AdamWConfig(lr=3e-3, weight_decay=0.0),
+                schedule=ScheduleConfig(peak_lr=3e-3, warmup_steps=30,
+                                        total_steps=args.steps,
+                                        min_ratio=0.5),
+            ),
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=50,
+        ),
+        data,
+    )
+    out = trainer.run(args.steps)
+    losses = [m["loss"] for m in trainer.metrics_log]
+    first = sum(losses[:5]) / max(len(losses[:5]), 1)
+    last = sum(losses[-5:]) / max(len(losses[-5:]), 1)
+    print(f"steps={out['final_step']} loss first={first:.3f} "
+          f"last={last:.3f} stragglers={out['stragglers']}")
+    assert last < first - 1.0, f"model did not learn ({first:.2f}->{last:.2f})"
+    print(f"OK: loss dropped by {first - last:.2f} nats (structure learned)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Feature-space expansion (paper Alg 3.1).
+
+Lifts 1-D numerical keys into a d-dimensional feature vector so the
+Numerical NF has something to learn from.  The lift is a 1-to-1 map:
+
+  1. scaled min-max normalization:  x_norm = (x - min) / ((max - min) / scale)
+     so x_norm always has both an integral and a fractional part,
+  2. repeated split of integral / fractional parts in base ``theta``:
+     vec = [int(x_norm), digit_1, ..., digit_{d-2}, residual_float].
+
+The decoder simply sums the flow's output vector back to a 1-D key
+(paper Alg 3.1 lines 19-22).
+
+Host-side encoding runs in float64 numpy (keys are 'double' in the paper);
+the returned features are cast to the requested dtype (f32 for the TPU
+kernel path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "KeyNormalizer",
+    "expand_features",
+    "expand_features_jnp",
+    "decode_features",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyNormalizer:
+    """Scaled min-max normalization parameters (Alg 3.1 line 2).
+
+    ``x_norm = (x - mu) / sigma`` with ``sigma = (max - min) / scale`` so that
+    normalized keys span ``[0, scale]`` and are guaranteed a non-trivial
+    integral part and fractional part.
+    """
+
+    mu: float
+    sigma: float
+    scale: float
+
+    @staticmethod
+    def fit(keys: np.ndarray, scale: float = 1e4) -> "KeyNormalizer":
+        keys = np.asarray(keys, dtype=np.float64)
+        lo = float(keys.min())
+        hi = float(keys.max())
+        span = hi - lo
+        if span <= 0.0:
+            span = 1.0
+        return KeyNormalizer(mu=lo, sigma=span / scale, scale=scale)
+
+    def normalize(self, keys: np.ndarray) -> np.ndarray:
+        return (np.asarray(keys, dtype=np.float64) - self.mu) / self.sigma
+
+    def normalize_jnp(self, keys: jnp.ndarray) -> jnp.ndarray:
+        return (keys - self.mu) / self.sigma
+
+
+def expand_features(
+    keys: np.ndarray,
+    normalizer: KeyNormalizer,
+    dim: int = 2,
+    theta: float = 1e3,
+    dtype=np.float64,
+) -> np.ndarray:
+    """Alg 3.1 lines 3-17, vectorized over the key batch.
+
+    Returns an ``[n, dim]`` array: ``[int_part, digits..., residual]``.
+    ``dim >= 2``; with dim == 2 this is simply [integral, fractional].
+    """
+    if dim < 2:
+        raise ValueError(f"feature dim must be >= 2, got {dim}")
+    x = normalizer.normalize(np.asarray(keys, dtype=np.float64))
+    feats = np.empty((x.shape[0], dim), dtype=np.float64)
+    x_int = np.floor(x)
+    x_float = x - x_int
+    feats[:, 0] = x_int
+    for k in range(1, dim - 1):
+        x_float = x_float * theta
+        x_int = np.floor(x_float)
+        x_float = x_float - x_int
+        feats[:, k] = x_int
+    feats[:, dim - 1] = x_float
+    return feats.astype(dtype)
+
+
+def expand_features_jnp(
+    keys: jnp.ndarray,
+    normalizer: KeyNormalizer,
+    dim: int = 2,
+    theta: float = 1e3,
+) -> jnp.ndarray:
+    """Traceable version of :func:`expand_features` (for jit'd pipelines).
+
+    Precision note (DESIGN.md 'Hardware adaptation'): on TPU this runs in
+    f32, so digit extraction loses precision beyond ~7 significant digits;
+    the f64 numpy path is the oracle used for index construction.
+    """
+    x = normalizer.normalize_jnp(keys)
+    cols = []
+    x_int = jnp.floor(x)
+    x_float = x - x_int
+    cols.append(x_int)
+    for _ in range(1, dim - 1):
+        x_float = x_float * theta
+        x_int = jnp.floor(x_float)
+        x_float = x_float - x_int
+        cols.append(x_int)
+    cols.append(x_float)
+    return jnp.stack(cols, axis=-1)
+
+
+def decode_features(z: np.ndarray | jnp.ndarray) -> np.ndarray | jnp.ndarray:
+    """Alg 3.1 lines 19-22: merge the d-dim flow output back into 1-D keys."""
+    return z.sum(axis=-1)
+
+
+def feature_scales(dim: int, theta: float) -> np.ndarray:
+    """Per-dimension magnitude scale of the expanded features.
+
+    Column 0 spans [0, normalizer.scale]; digit columns span [0, theta);
+    the residual spans [0, 1). Used to standardize flow inputs.
+    """
+    scales = np.ones((dim,), dtype=np.float64)
+    scales[0] = 1.0  # rescaled by caller using normalizer.scale
+    for k in range(1, dim - 1):
+        scales[k] = theta
+    scales[dim - 1] = 1.0
+    return scales

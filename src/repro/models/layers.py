@@ -1,0 +1,147 @@
+"""Shared neural-net layers (pure functional, explicit params pytrees)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import constrain
+
+__all__ = [
+    "rms_norm", "softcap", "rope", "swiglu", "gelu_mlp", "init_dense",
+    "init_mlp", "chunked_cross_entropy", "Initializer",
+]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+class Initializer:
+    """Deterministic param init: split keys on demand from one root."""
+
+    def __init__(self, rng: jax.Array, dtype):
+        self._rng = rng
+        self.dtype = dtype
+
+    def next_key(self) -> jax.Array:
+        self._rng, k = jax.random.split(self._rng)
+        return k
+
+    def normal(self, shape, stddev: float):
+        return (jax.random.normal(self.next_key(), shape, jnp.float32)
+                * stddev).astype(self.dtype)
+
+    def zeros(self, shape):
+        return jnp.zeros(shape, self.dtype)
+
+    def ones(self, shape):
+        return jnp.ones(shape, self.dtype)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embeddings. x [..., L, H, Dh]; positions [..., L]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angle = positions[..., None].astype(jnp.float32) * freq  # [..., L, half]
+    cos = jnp.cos(angle)[..., None, :]
+    sin = jnp.sin(angle)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x32_1, x32_2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x32_1 * cos - x32_2 * sin, x32_2 * cos + x32_1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def init_dense(init: Initializer, d_in: int, d_out: int,
+               stddev: Optional[float] = None) -> jnp.ndarray:
+    return init.normal((d_in, d_out), stddev or d_in ** -0.5)
+
+
+def init_mlp(init: Initializer, d: int, f: int, act: str):
+    p = {
+        "w_up": init_dense(init, d, f),
+        "w_down": init_dense(init, f, d, stddev=f ** -0.5),
+    }
+    if act == "swiglu":
+        p["w_gate"] = init_dense(init, d, f)
+    return p
+
+
+def swiglu(x: jnp.ndarray, p, act: str = "swiglu") -> jnp.ndarray:
+    """MLP block: SwiGLU or GELU, d_ff sharded over 'model' (Megatron TP)."""
+    up = x @ p["w_up"]
+    up = constrain(up, "batch", None, "mlp")
+    if act == "swiglu":
+        gate = x @ p["w_gate"]
+        gate = constrain(gate, "batch", None, "mlp")
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    out = h @ p["w_down"]
+    return constrain(out, "batch", "seq", None)
+
+
+gelu_mlp = swiglu  # same entry point; act selects the nonlinearity
+
+
+def chunked_cross_entropy(
+    x: jnp.ndarray,            # [B, L, D] final hidden states
+    unembed: jnp.ndarray,      # [V, D] (tied or free)
+    targets: jnp.ndarray,      # [B, L] int32
+    chunk: int,
+    logit_softcap: Optional[float] = None,
+    mask: Optional[jnp.ndarray] = None,
+    logit_scale: float = 1.0,
+) -> jnp.ndarray:
+    """Sequence-chunked softmax cross-entropy.
+
+    Never materializes the full [B, L, V] logits: the unembedding matmul and
+    the log-sum-exp run per sequence chunk with vocab sharded over 'model'
+    (GSPMD turns the reductions into all-reduces).  Returns mean nll.
+    """
+    b, l, d = x.shape
+    # re-gather the sequence-parallel residual stream before chunking
+    x = constrain(x, "batch", None, None)
+    n_chunks = max(l // chunk, 1)
+    chunk = l // n_chunks
+    xs = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)      # [C, B, c, D]
+    ts = targets.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    if mask is None:
+        ms = jnp.ones((n_chunks, b, chunk), jnp.float32)
+    else:
+        ms = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1).astype(jnp.float32)
+
+    @jax.checkpoint  # recompute the [B, c, V] logits in the backward pass
+    def body(carry, inp):
+        xc, tc, mc = inp
+        logits = (xc * logit_scale) @ unembed.T                # [B, c, V]
+        logits = constrain(logits, "batch", None, "vocab")
+        logits = softcap(logits.astype(jnp.float32), logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (carry[0] + nll.sum(), carry[1] + mc.sum()), None
+
+    (total, count), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                     (xs, ts, ms))
+    return total / jnp.maximum(count, 1.0)

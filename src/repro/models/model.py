@@ -1,0 +1,86 @@
+"""Unified model API: one entry point over all architecture families."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tfm
+from repro.models.layers import dtype_of
+
+__all__ = ["ModelAPI", "build_model", "input_specs", "decode_state_shapes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    param_specs: Callable[[], Any]
+    train_loss: Callable[..., Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]]
+    prefill: Callable[..., Tuple[Any, jnp.ndarray]]
+    decode_step: Callable[..., Tuple[jnp.ndarray, Any]]
+    init_decode_state: Callable[[int, int], Any]
+    decode_state_specs: Callable[[], Any]
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        mod = encdec_mod
+    else:
+        mod = tfm
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda rng: mod.init_params(rng, cfg),
+        param_specs=lambda: mod.param_specs(cfg),
+        train_loss=lambda params, batch: mod.train_loss(params, batch, cfg),
+        prefill=lambda params, tokens, max_len, extra=None: mod.prefill(
+            params, tokens, cfg, max_len, extra=extra),
+        decode_step=lambda params, state, tokens, extra=None: mod.decode_step(
+            params, state, tokens, cfg, extra=extra),
+        init_decode_state=lambda batch, max_len: mod.init_decode_state(
+            cfg, batch, max_len),
+        decode_state_specs=lambda: mod.decode_state_specs(cfg),
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins + logical sharding axes for every input.
+
+    Returns {name: (jax.ShapeDtypeStruct, logical_axes_tuple)}.
+    No device allocation — this is the dry-run/AOT input surface.
+    """
+    gb, l = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+
+    def add(name, shp, dtype, axes):
+        specs[name] = (jax.ShapeDtypeStruct(shp, dtype), axes)
+
+    if shape.kind == "train":
+        add("tokens", (gb, l), jnp.int32, ("batch", None))
+        add("targets", (gb, l), jnp.int32, ("batch", None))
+    elif shape.kind == "prefill":
+        add("tokens", (gb, l), jnp.int32, ("batch", None))
+    else:  # decode: one new token against an l-entry KV cache
+        add("tokens", (gb, 1), jnp.int32, ("batch", None))
+
+    if cfg.family == "encdec":
+        add("frames", (gb, cfg.enc_seq, cfg.d_model), jnp.float32,
+            ("batch", None, None))
+    if cfg.family == "vlm":
+        add("patches", (gb, cfg.n_patches, cfg.d_model), jnp.float32,
+            ("batch", None, None))
+    return specs
+
+
+def decode_state_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct tree for the decode state (no allocation)."""
+    state = jax.eval_shape(
+        lambda: (encdec_mod if cfg.family == "encdec" else tfm)
+        .init_decode_state(cfg, batch, max_len)
+    )
+    return state

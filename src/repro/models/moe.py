@@ -1,0 +1,141 @@
+"""Mixture-of-Experts with expert parallelism (EP over the 'model' axis).
+
+Top-k token-choice routing, sort-based slot ranking, global-capacity
+dispatch buffer.  GSPMD-critical details, learned the hard way (the
+hypothesis->measure log is in EXPERIMENTS.md §Perf):
+
+* the k-fold token duplication is a broadcast+reshape, never x[tok_idx] —
+  an arbitrary-index gather makes GSPMD all-gather the full token tensor;
+* the k-way combine is a reshape+sum, never a scatter-add;
+* the dispatch scatter target shards along D (its update-window dim);
+  sharding it along E (the scattered dim) is unpartitionable and a grouped
+  GShard-style [G, E, C_g, D] variant replicated everything.
+
+Aux losses: Switch load-balancing + router z-loss, accumulated through the
+layer scan.  arctic's dense residual branch lives in the transformer block.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.dist.sharding import constrain
+from repro.models.layers import Initializer
+
+__all__ = ["init_moe", "moe_specs", "moe_block"]
+
+
+def init_moe(init: Initializer, d_model: int, m: MoEConfig):
+    e, f = m.n_experts, m.d_ff_expert
+    return {
+        "router": init.normal((d_model, e), d_model ** -0.5).astype(jnp.float32),
+        "we_gate": init.normal((e, d_model, f), d_model ** -0.5),
+        "we_up": init.normal((e, d_model, f), d_model ** -0.5),
+        "we_down": init.normal((e, f, d_model), f ** -0.5),
+    }
+
+
+def moe_specs(m: MoEConfig):
+    return {
+        "router": (None, None),
+        "we_gate": ("experts", "fsdp", None),
+        "we_up": ("experts", "fsdp", None),
+        "we_down": ("experts", None, "fsdp"),
+    }
+
+
+def moe_block(
+    x: jnp.ndarray,          # [B, S, D]  (B doubles as the dispatch group)
+    p,
+    m: MoEConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output [B, S, D], aux_loss scalar f32)."""
+    b, s, d = x.shape
+    k = m.top_k
+    e = m.n_experts
+    t = b * s
+
+    def process(xc: jnp.ndarray):
+        """Route+dispatch+FFN+combine for one token chunk [tc, d].
+
+        Global-capacity dispatch.  A grouped [G, E, C_g, D] buffer (GShard
+        style) was tried and rejected: GSPMD cannot shard a scatter along
+        the scattered (expert) dim and replicated everything (EXPERIMENTS.md
+        §Perf).  The scatter target shards along D only (its update-window
+        dim — trivially partitionable); updates shard along tokens; one
+        resharding moves the buffer to the EP layout.
+        """
+        tc = xc.shape[0]
+        tk = tc * k
+        gates = xc.astype(jnp.float32) @ p["router"]          # [tc, E]
+        probs = jax.nn.softmax(gates, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, k)                # [tc, k]
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+        me = probs.mean(axis=0)
+        ce = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / tk
+        aux = m.aux_loss * e * jnp.sum(me * ce)
+        aux += m.router_z_loss * jnp.mean(jax.nn.logsumexp(gates, axis=-1) ** 2)
+
+        cap = min(max(int(tc * k / e * m.capacity_factor), 4), tk)
+        e_flat = top_e.reshape(tk)
+        order = jnp.argsort(e_flat)
+        sorted_e = e_flat[order]
+        start = jnp.searchsorted(sorted_e, jnp.arange(e))
+        rank_sorted = (jnp.arange(tk, dtype=jnp.int32)
+                       - start[sorted_e].astype(jnp.int32))
+        rank = jnp.zeros((tk,), jnp.int32).at[order].set(rank_sorted)
+        keep = rank < cap
+        slot = jnp.where(keep, rank, cap)                     # overflow slot
+
+        updates = jnp.broadcast_to(xc[:, None, :], (tc, k, d)).reshape(tk, d)
+        updates = constrain(updates, "batch", "mlp")
+        buf = jnp.zeros((e, cap + 1, d), x.dtype)
+        buf = constrain(buf, None, None, "mlp")
+        buf = buf.at[e_flat, slot].add(updates)
+        buf = buf[:, :cap]
+        buf = constrain(buf, "experts", None, None)           # -> EP layout
+
+        gate = jnp.einsum("ecd,edf->ecf", buf, p["we_gate"])
+        up = jnp.einsum("ecd,edf->ecf", buf, p["we_up"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+        h = constrain(h, "experts", None, None)
+        out_e = jnp.einsum("ecf,efd->ecd", h, p["we_down"])
+        out_e = constrain(out_e, "experts", None, None)
+
+        # gather back and combine over k (reshape+sum, never scatter-add)
+        out_e = jnp.concatenate([out_e, jnp.zeros((e, 1, d), x.dtype)],
+                                axis=1)
+        out_e = constrain(out_e, None, None, "mlp")
+        y_flat = out_e[e_flat, slot]                          # [tk, D]
+        y_flat = constrain(y_flat, "batch", "mlp")
+        w = (top_w.reshape(tk) * keep).astype(x.dtype)
+        y = (y_flat * w[:, None]).reshape(tc, k, d).sum(axis=1)
+        return constrain(y, "batch", "mlp"), aux
+
+    # token-chunked dispatch (1M-token prefill steps): scan over SEQUENCE
+    # chunks.  Chunking the flat [B*S] token axis crossed batch-shard
+    # boundaries and made GSPMD all-gather a full f32 token stack (30 GB on
+    # the multi-pod mesh); sequence chunks keep the batch sharding intact
+    # because S is unsharded (EXPERIMENTS.md §Perf I22).
+    s_chunk = max(m.token_chunk // b, 1)
+    n_chunks = s // s_chunk if (s % s_chunk == 0 and s > s_chunk) else 1
+    if n_chunks == 1:
+        y, aux = process(x.reshape(t, d))
+    else:
+        def body(aux_acc, xc):
+            yc, aux_c = process(xc.reshape(b * s_chunk, d))
+            return (aux_acc + aux_c / n_chunks,
+                    constrain(yc.reshape(b, s_chunk, d), "batch", None, "mlp"))
+
+        xs = constrain(
+            x.reshape(b, n_chunks, s_chunk, d).swapaxes(0, 1),
+            None, "batch", None, "mlp")
+        aux, ys = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+        y = ys.swapaxes(0, 1).reshape(t, d)
+    y = constrain(y.reshape(b, s, d), "batch", "seq", None)
+    return y, aux

@@ -1,0 +1,278 @@
+"""State-space blocks: Mamba1 (selective scan) and Mamba2 (SSD chunked dual).
+
+TPU adaptation (DESIGN.md §3): the CUDA selective-scan kernel is replaced by
+a *chunked* formulation — sequential ``lax.scan`` over chunks carrying the
+recurrent state, parallel associative work within a chunk.  Memory never
+materializes the [B, L, d_inner, N] state history; per-step footprint is one
+chunk.  d_inner is sharded over 'model' (logical ``d_inner``), so the state
+and all channel math split across the TP axis with zero collectives (the
+scan is channel-wise independent).
+
+Decode is the exact recurrence: state [B, d_inner, N] (+ conv ring buffer),
+O(1) per token — this is why long_500k runs only for ssm/hybrid archs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.dist.sharding import constrain
+from repro.models.layers import Initializer, rms_norm
+
+__all__ = [
+    "init_mamba", "mamba_specs", "mamba_block", "mamba_decode_step",
+    "init_ssm_state",
+]
+
+
+def _dt_rank(d_model: int, s: SSMConfig) -> int:
+    return s.dt_rank or max(d_model // 16, 1)
+
+
+def init_mamba(init: Initializer, d_model: int, s: SSMConfig):
+    di = s.expand * d_model
+    p = {
+        "w_in": init.normal((d_model, 2 * di), d_model ** -0.5),
+        "conv_w": init.normal((s.conv_width, di), 0.2),
+        "conv_b": init.zeros((di,)),
+        "w_out": init.normal((di, d_model), di ** -0.5),
+    }
+    if s.version == 1:
+        dtr = _dt_rank(d_model, s)
+        p.update({
+            "w_bc": init.normal((di, 2 * s.state_dim), di ** -0.5),
+            "w_dt_down": init.normal((di, dtr), di ** -0.5),
+            "w_dt_up": init.normal((dtr, di), dtr ** -0.5),
+            "dt_bias": init.normal((di,), 0.1).astype(jnp.float32),
+            "A_log": jnp.log(
+                jnp.tile(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32),
+                         (di, 1))
+            ),
+            "D": init.ones((di,)).astype(jnp.float32),
+        })
+    else:
+        nh = di // s.head_dim
+        p.update({
+            "w_bc": init.normal((d_model, 2 * s.state_dim), d_model ** -0.5),
+            "w_dt": init.normal((d_model, nh), d_model ** -0.5),
+            "dt_bias": init.normal((nh,), 0.1).astype(jnp.float32),
+            "A_log": jnp.zeros((nh,), jnp.float32),
+            "D": init.ones((nh,)).astype(jnp.float32),
+            "gate_norm": init.zeros((di,)),
+        })
+    return p
+
+
+def mamba_specs(d_model: int, s: SSMConfig):
+    di_ax = None if s.batch_tp else "d_inner"
+    base = {
+        "w_in": ("fsdp", di_ax),
+        "conv_w": (None, di_ax),
+        "conv_b": (di_ax,),
+        "w_out": (di_ax, "fsdp"),
+    }
+    if s.version == 1:
+        base.update({
+            "w_bc": (di_ax, None),
+            "w_dt_down": (di_ax, None),
+            "w_dt_up": (None, di_ax),
+            "dt_bias": (di_ax,),
+            "A_log": (di_ax, None),
+            "D": (di_ax,),
+        })
+    else:
+        base.update({
+            "w_bc": ("fsdp", None),
+            "w_dt": ("fsdp", None),
+            "dt_bias": (None,),
+            "A_log": (None,),
+            "D": (None,),
+            "gate_norm": (di_ax,),
+        })
+    return base
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init_state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv over time. x [B, L, C]; w [K, C]."""
+    k = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def _combine(x, y):
+    a1, b1 = x
+    a2, b2 = y
+    return a1 * a2, a2 * b1 + b2
+
+
+def _to_chunks(x: jnp.ndarray, nchunks: int, c: int) -> jnp.ndarray:
+    """[B, L, ...] -> [nchunks, B, c, ...] (scan-major)."""
+    return x.reshape((x.shape[0], nchunks, c) + x.shape[2:]).swapaxes(0, 1)
+
+
+def mamba_block(x: jnp.ndarray, p, d_model: int, s: SSMConfig,
+                remat_chunks: bool = True) -> jnp.ndarray:
+    """Training/prefill forward. x [B, L, D] -> [B, L, D].
+
+    The [B, chunk, d_inner, N] state tensors are created *inside* the chunk
+    scan body (and rematerialized in the backward pass), so live memory is
+    one chunk, never the full sequence.
+    """
+    b, l, d = x.shape
+    di = s.expand * d_model
+    if s.batch_tp:
+        x = constrain(x, "batch_model", None, None)
+    xz = x @ p["w_in"]
+    xz = (constrain(xz, "batch_model", None, None) if s.batch_tp
+          else constrain(xz, "batch", None, "d_inner"))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = _causal_conv(xi, p["conv_w"], p["conv_b"])
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+    xi = (constrain(xi, "batch_model", None, None) if s.batch_tp
+          else constrain(xi, "batch", None, "d_inner"))
+
+    nchunks = max(l // s.chunk, 1)
+    c = l // nchunks
+
+    if s.version == 1:
+        bc = xi @ p["w_bc"]                                    # [B, L, 2N]
+        b_in, c_out = jnp.split(bc.astype(jnp.float32), 2, axis=-1)
+        dt = jax.nn.softplus(
+            (xi @ p["w_dt_down"]) @ p["w_dt_up"]
+            + p["dt_bias"].astype(x.dtype)
+        ).astype(jnp.float32)                                  # [B, L, di]
+        A = -jnp.exp(p["A_log"])                               # [di, N]
+
+        def chunk_body(h_prev, inp):
+            dt_c, xi_c, b_c, cout_c = inp                      # [B, c, ...]
+            a_bar = jnp.exp(dt_c[..., None] * A)               # [B, c, di, N]
+            bx = (dt_c * xi_c)[..., None] * b_c[:, :, None, :]
+            pa, pb = jax.lax.associative_scan(_combine, (a_bar, bx), axis=1)
+            h = pa * h_prev[:, None] + pb
+            y_c = jnp.einsum("bcdn,bcn->bcd", h, cout_c)
+            return h[:, -1], y_c
+
+        if s.use_scan_kernel:
+            # fused Pallas selective scan (kernels/mamba_scan.py): state
+            # stays in VMEM across chunks — §Perf I21.  NOTE: inside a
+            # pjit'd program this path expects d_inner-local shards (wrap
+            # in shard_map on real multi-device runs).
+            from repro.kernels import ops as kops
+
+            y = kops.mamba_scan(dt, xi.astype(jnp.float32), b_in, c_out,
+                                p["A_log"], chunk=min(s.chunk, l),
+                                dblock=min(256, di))
+        else:
+            body = jax.checkpoint(chunk_body) if remat_chunks else chunk_body
+            h0 = jnp.zeros((b, di, s.state_dim), jnp.float32)
+            xs = (_to_chunks(dt, nchunks, c),
+                  _to_chunks(xi.astype(jnp.float32), nchunks, c),
+                  _to_chunks(b_in, nchunks, c),
+                  _to_chunks(c_out, nchunks, c))
+            _, ys = jax.lax.scan(body, h0, xs)
+            y = ys.swapaxes(0, 1).reshape(b, l, di)
+        y = y + p["D"] * xi.astype(jnp.float32)
+        y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    else:
+        nh = di // s.head_dim
+        bc = x @ p["w_bc"]
+        b_in, c_out = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # [B,L,N]
+        dt = jax.nn.softplus(
+            (x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+        )                                                      # [B, L, H]
+        A = -jnp.exp(p["A_log"])                               # [H]
+        xh = xi.reshape(b, l, nh, s.head_dim).astype(jnp.float32)
+
+        def chunk_body2(h_prev, inp):
+            dt_c, xh_c, b_c, cout_c = inp
+            a_bar = jnp.exp(dt_c * A)                          # [B, c, H]
+            bx = (dt_c[..., None] * xh_c)[..., None] * b_c[:, :, None, None, :]
+            pa, pb = jax.lax.associative_scan(
+                _combine, (a_bar[..., None, None], bx), axis=1
+            )
+            h = pa * h_prev[:, None] + pb                      # [B,c,H,dh,N]
+            y_c = jnp.einsum("bchdn,bcn->bchd", h, cout_c)
+            return h[:, -1], y_c
+
+        body = jax.checkpoint(chunk_body2) if remat_chunks else chunk_body2
+        h0 = jnp.zeros((b, nh, s.head_dim, s.state_dim), jnp.float32)
+        xs = (_to_chunks(dt, nchunks, c),
+              _to_chunks(xh, nchunks, c),
+              _to_chunks(b_in, nchunks, c),
+              _to_chunks(c_out, nchunks, c))
+        _, ys = jax.lax.scan(body, h0, xs)
+        y = ys.swapaxes(0, 1).reshape(b, l, nh, s.head_dim)
+        y = y + p["D"][:, None] * xh
+        y = y.reshape(b, l, di).astype(x.dtype)
+        y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                     p["gate_norm"])
+    out = y @ p["w_out"]
+    return constrain(out, "batch", "seq", None)
+
+
+def init_ssm_state(batch: int, d_model: int, s: SSMConfig, dtype):
+    di = s.expand * d_model
+    if s.version == 1:
+        h = jnp.zeros((batch, di, s.state_dim), jnp.float32)
+    else:
+        nh = di // s.head_dim
+        h = jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32)
+    conv = jnp.zeros((batch, s.conv_width - 1, di), dtype)
+    return {"h": h, "conv": conv}
+
+
+def mamba_decode_step(x: jnp.ndarray, state, p, d_model: int, s: SSMConfig):
+    """One-token recurrence. x [B, 1, D]; returns (y [B, 1, D], new_state)."""
+    b = x.shape[0]
+    di = s.expand * d_model
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)                          # [B, 1, di]
+    conv_buf = jnp.concatenate([state["conv"], xi], axis=1)    # [B, K, di]
+    xi = (conv_buf * p["conv_w"][None]).sum(axis=1, keepdims=True) + p["conv_b"]
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+    new_conv = conv_buf[:, 1:]
+
+    if s.version == 1:
+        bc = xi @ p["w_bc"]
+        b_in, c_out = jnp.split(bc.astype(jnp.float32), 2, axis=-1)
+        dt = jax.nn.softplus(
+            (xi @ p["w_dt_down"]) @ p["w_dt_up"] + p["dt_bias"].astype(x.dtype)
+        ).astype(jnp.float32)[:, 0]                            # [B, di]
+        A = -jnp.exp(p["A_log"])
+        a_bar = jnp.exp(dt[..., None] * A)                     # [B, di, N]
+        bx = (dt * xi[:, 0].astype(jnp.float32))[..., None] * b_in[:, 0, None, :]
+        h = a_bar * state["h"] + bx
+        y = jnp.einsum("bdn,bn->bd", h, c_out[:, 0])
+        y = y + p["D"] * xi[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(x.dtype) * jax.nn.silu(
+            z.astype(jnp.float32)
+        ).astype(x.dtype)
+    else:
+        nh = di // s.head_dim
+        bc = x @ p["w_bc"]
+        b_in, c_out = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # [B,1,N]
+        dt = jax.nn.softplus(
+            (x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+        )[:, 0]                                                # [B, H]
+        A = -jnp.exp(p["A_log"])
+        a_bar = jnp.exp(dt * A)                                # [B, H]
+        xh = xi[:, 0].reshape(b, nh, s.head_dim).astype(jnp.float32)
+        bx = (dt[..., None] * xh)[..., None] * b_in[:, 0, None, None, :]
+        h = a_bar[..., None, None] * state["h"] + bx
+        y = jnp.einsum("bhdn,bn->bhd", h, c_out[:, 0])
+        y = y + p["D"][:, None] * xh
+        y = y.reshape(b, 1, di).astype(x.dtype)
+        y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                     p["gate_norm"])
+    out = y @ p["w_out"]
+    return constrain(out, "batch", None, None), {"h": h, "conv": new_conv}

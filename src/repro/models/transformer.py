@@ -1,0 +1,611 @@
+"""Decoder-only transformer assembly for dense / moe / ssm / hybrid / vlm.
+
+Layer stacks are ``lax.scan`` over stacked parameters — compile time is
+O(1) in depth (64-layer archs x 64 dry-run compiles demand it).  Per-layer
+heterogeneity (gemma2 local/global windows, VLM cross-attn interleave,
+zamba2 shared attention blocks) is expressed as scanned per-layer scalars
+or python-level group loops around inner scans, never unrolled layer lists.
+
+Decode KV caches ride through the layer scan as xs->ys pairs (the scan
+consumes the [L, ...] cache and emits the updated one), so serve_step keeps
+one functional state pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    Initializer, chunked_cross_entropy, dtype_of, init_mlp, rms_norm, swiglu,
+)
+
+__all__ = [
+    "init_params", "param_specs", "forward", "train_loss",
+    "init_decode_state", "decode_state_specs", "decode_step", "prefill",
+]
+
+BIG_WINDOW = np.int32(1 << 30)
+
+
+# =========================================================== initialization
+def _init_dense_layer(key, cfg: ModelConfig):
+    init = Initializer(key, dtype_of(cfg.param_dtype))
+    p = {
+        "ln1": init.zeros((cfg.d_model,)),
+        "attn": attn.init_attention(init, cfg.d_model, cfg.attn),
+        "ln2": init.zeros((cfg.d_model,)),
+        "mlp": init_mlp(init, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+    return p
+
+
+def _dense_layer_specs(cfg: ModelConfig):
+    s = {
+        "ln1": (None,),
+        "attn": attn.attention_specs(cfg.attn),
+        "ln2": (None,),
+        "mlp": {"w_up": ("fsdp", "mlp"), "w_down": ("mlp", "fsdp")},
+    }
+    if cfg.act == "swiglu":
+        s["mlp"]["w_gate"] = ("fsdp", "mlp")
+    return s
+
+
+def _init_moe_layer(key, cfg: ModelConfig):
+    init = Initializer(key, dtype_of(cfg.param_dtype))
+    p = {
+        "ln1": init.zeros((cfg.d_model,)),
+        "attn": attn.init_attention(init, cfg.d_model, cfg.attn),
+        "ln2": init.zeros((cfg.d_model,)),
+        "moe": moe_mod.init_moe(init, cfg.d_model, cfg.moe),
+    }
+    if cfg.moe.dense_residual_d_ff:
+        p["dense_mlp"] = init_mlp(init, cfg.d_model,
+                                  cfg.moe.dense_residual_d_ff, cfg.act)
+    return p
+
+
+def _moe_layer_specs(cfg: ModelConfig):
+    s = {
+        "ln1": (None,),
+        "attn": attn.attention_specs(cfg.attn),
+        "ln2": (None,),
+        "moe": moe_mod.moe_specs(cfg.moe),
+    }
+    if cfg.moe.dense_residual_d_ff:
+        s["dense_mlp"] = {"w_up": ("fsdp", "mlp"), "w_down": ("mlp", "fsdp"),
+                          "w_gate": ("fsdp", "mlp")}
+    return s
+
+
+def _init_ssm_layer(key, cfg: ModelConfig):
+    init = Initializer(key, dtype_of(cfg.param_dtype))
+    return {
+        "ln": init.zeros((cfg.d_model,)),
+        "ssm": ssm_mod.init_mamba(init, cfg.d_model, cfg.ssm),
+    }
+
+
+def _ssm_layer_specs(cfg: ModelConfig):
+    return {"ln": (None,), "ssm": ssm_mod.mamba_specs(cfg.d_model, cfg.ssm)}
+
+
+def _stack_init(fn, rng, n, cfg):
+    keys = jax.random.split(rng, n)
+    return jax.vmap(lambda k: fn(k, cfg))(keys)
+
+
+def _stack_specs(specs):
+    """Prepend the layer axis (None) to every leaf spec tuple."""
+    return jax.tree.map(lambda t: (None,) + t, specs,
+                        is_leaf=lambda v: isinstance(v, tuple))
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.param_dtype)
+    k_embed, k_layers, k_extra, k_out = jax.random.split(rng, 4)
+    init = Initializer(k_embed, dtype)
+    params: Dict[str, Any] = {
+        "embed": init.normal((cfg.vocab, cfg.d_model), 1.0),
+        "final_norm": init.zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        out_init = Initializer(k_out, dtype)
+        params["unembed"] = out_init.normal((cfg.vocab, cfg.d_model),
+                                            cfg.d_model ** -0.5)
+    fam = cfg.family
+    if fam == "dense":
+        params["layers"] = _stack_init(_init_dense_layer, k_layers,
+                                       cfg.n_layers, cfg)
+    elif fam == "moe":
+        params["layers"] = _stack_init(_init_moe_layer, k_layers,
+                                       cfg.n_layers, cfg)
+    elif fam == "ssm":
+        params["layers"] = _stack_init(_init_ssm_layer, k_layers,
+                                       cfg.n_layers, cfg)
+    elif fam == "hybrid":
+        params["layers"] = _stack_init(_init_ssm_layer, k_layers,
+                                       cfg.n_layers, cfg)
+        params["shared_attn"] = _init_dense_layer(k_extra, cfg)
+    elif fam == "vlm":
+        params["layers"] = _stack_init(_init_dense_layer, k_layers,
+                                       cfg.n_layers, cfg)
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        params["cross_layers"] = _stack_init(
+            _init_cross_layer, k_extra, n_cross, cfg
+        )
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+def _init_cross_layer(key, cfg: ModelConfig):
+    init = Initializer(key, dtype_of(cfg.param_dtype))
+    return {
+        "ln": init.zeros((cfg.d_model,)),
+        "attn": attn.init_attention(init, cfg.d_model, cfg.attn),
+        "gate": init.zeros(()),   # llama-3.2-vision gated cross-attn
+    }
+
+
+def _cross_layer_specs(cfg: ModelConfig):
+    return {"ln": (None,), "attn": attn.attention_specs(cfg.attn), "gate": ()}
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "embed": ("vocab", "fsdp"),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ("vocab", "fsdp")
+    fam = cfg.family
+    if fam == "dense":
+        specs["layers"] = _stack_specs(_dense_layer_specs(cfg))
+    elif fam == "moe":
+        specs["layers"] = _stack_specs(_moe_layer_specs(cfg))
+    elif fam in ("ssm", "hybrid"):
+        specs["layers"] = _stack_specs(_ssm_layer_specs(cfg))
+        if fam == "hybrid":
+            specs["shared_attn"] = _dense_layer_specs(cfg)
+    elif fam == "vlm":
+        specs["layers"] = _stack_specs(_dense_layer_specs(cfg))
+        specs["cross_layers"] = _stack_specs(_cross_layer_specs(cfg))
+    return specs
+
+
+
+def _scan_or_unroll(body, carry, xs, scan: bool):
+    """lax.scan, or a python unroll when cfg.scan_layers is False.
+
+    The unrolled form exists for the roofline depth probe: XLA cost
+    analysis counts a while-loop body once, so per-layer FLOPs/bytes come
+    from compiling small unrolled depths (utils/roofline.py).
+    """
+    if scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if not ys or ys[0] is None:
+        return carry, None
+    stacked = jax.tree.map(lambda *vs: jnp.stack(vs), *ys)
+    return carry, stacked
+
+
+# ============================================================ layer bodies
+def _windows_for(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer attention window (gemma2 alternates local/global)."""
+    if cfg.attn is None:
+        return jnp.full((cfg.n_layers,), BIG_WINDOW)
+    if cfg.attn.pattern == "local_global" and cfg.attn.window:
+        w = np.full((cfg.n_layers,), BIG_WINDOW, np.int32)
+        w[::2] = cfg.attn.window  # even layers local, odd global
+        return jnp.asarray(w)
+    if cfg.attn.window and cfg.attn.pattern == "global":
+        return jnp.full((cfg.n_layers,), BIG_WINDOW)
+    return jnp.full((cfg.n_layers,), BIG_WINDOW)
+
+
+def _dense_block(x, lp, cfg: ModelConfig, positions, window):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    h = attn.self_attention(h, lp["attn"], cfg.attn, positions, window=window,
+                            chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k)
+    x = x + h
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    h = swiglu(h, lp["mlp"], cfg.act)
+    return x + h
+
+
+def _moe_block(x, lp, cfg: ModelConfig, positions, window):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    h = attn.self_attention(h, lp["attn"], cfg.attn, positions, window=window,
+                            chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k)
+    x = x + h
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    y, aux = moe_mod.moe_block(h, lp["moe"], cfg.moe)
+    if cfg.moe.dense_residual_d_ff:
+        y = y + swiglu(h, lp["dense_mlp"], cfg.act)
+    return x + y, aux
+
+
+def _ssm_block(x, lp, cfg: ModelConfig):
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    return x + ssm_mod.mamba_block(h, lp["ssm"], cfg.d_model, cfg.ssm,
+                                   remat_chunks=cfg.remat != "none")
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ================================================================= forward
+def forward(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            extra: Optional[Dict[str, jnp.ndarray]] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, L] -> (hidden [B, L, D], aux_loss)."""
+    b, l = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", "seq", None)
+    positions = jnp.arange(l, dtype=jnp.int32)
+    windows = _windows_for(cfg)
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+
+    if fam in ("dense", "vlm"):
+        def body(carry, xs):
+            xc = carry
+            lp, w = xs
+            return _dense_block(xc, lp, cfg, positions, w), None
+
+        body = _remat(body, cfg)
+        if fam == "dense":
+            x, _ = _scan_or_unroll(body, x, (params["layers"], windows),
+                                   cfg.scan_layers)
+        else:
+            # VLM: groups of (cross_attn_every - 1? no: every k-th layer is
+            # followed by one gated cross-attn layer)
+            k = cfg.cross_attn_every
+            n_groups = cfg.n_layers // k
+            patches = extra["patches"].astype(x.dtype)
+
+            def cross_apply(xc, cp):
+                h = rms_norm(xc, cp["ln"], cfg.norm_eps)
+                h = attn.cross_attention(h, patches, cp["attn"], cfg.attn,
+                                         chunk_q=cfg.attn_chunk_q,
+                                         chunk_k=cfg.attn_chunk_k)
+                return xc + jnp.tanh(
+                    cp["gate"].astype(jnp.float32)).astype(xc.dtype) * h
+
+            cross_apply = _remat(cross_apply, cfg)
+            for g in range(n_groups):
+                lp_g = jax.tree.map(lambda p: p[g * k:(g + 1) * k],
+                                    params["layers"])
+                x, _ = _scan_or_unroll(
+                    body, x, (lp_g, windows[g * k:(g + 1) * k]),
+                    cfg.scan_layers)
+                cp = jax.tree.map(lambda p: p[g], params["cross_layers"])
+                x = cross_apply(x, cp)
+    elif fam == "moe":
+        def body(carry, xs):
+            xc, aux_c = carry
+            lp, w = xs
+            xn, a = _moe_block(xc, lp, cfg, positions, w)
+            return (xn, aux_c + a), None
+
+        body = _remat(body, cfg)
+        (x, aux), _ = _scan_or_unroll(body, (x, aux),
+                                      (params["layers"], windows),
+                                      cfg.scan_layers)
+    elif fam == "ssm":
+        def body(carry, lp):
+            return _ssm_block(carry, lp, cfg), None
+
+        body = _remat(body, cfg)
+        x, _ = _scan_or_unroll(body, x, params["layers"], cfg.scan_layers)
+    elif fam == "hybrid":
+        def body(carry, lp):
+            return _ssm_block(carry, lp, cfg), None
+
+        body = _remat(body, cfg)
+        k = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // k
+        sa = params["shared_attn"]
+        shared_apply = _remat(
+            lambda xc, sp: _dense_block(xc, sp, cfg, positions, BIG_WINDOW),
+            cfg)
+        for g in range(n_groups):
+            lp_g = jax.tree.map(lambda p: p[g * k:(g + 1) * k], params["layers"])
+            x, _ = _scan_or_unroll(body, x, lp_g, cfg.scan_layers)
+            x = shared_apply(x, sa)
+        rem = cfg.n_layers - n_groups * k
+        if rem:
+            lp_g = jax.tree.map(lambda p: p[-rem:], params["layers"])
+            x, _ = _scan_or_unroll(body, x, lp_g, cfg.scan_layers)
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def train_loss(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    x, aux = forward(params, batch["tokens"], cfg, extra=batch)
+    unembed = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    scale = cfg.d_model ** -0.5 if cfg.tie_embeddings else 1.0
+    nll = chunked_cross_entropy(
+        x, unembed, batch["targets"], cfg.loss_chunk,
+        logit_softcap=cfg.logit_softcap, mask=batch.get("mask"),
+        logit_scale=scale,
+    )
+    metrics = {"nll": nll, "aux": aux}
+    return nll + aux, metrics
+
+
+# ================================================================== decode
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = dtype_of(cfg.compute_dtype)
+    state: Dict[str, Any] = {
+        "cache_len": jnp.zeros((batch,), jnp.int32),
+    }
+    a = cfg.attn
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        kv = lambda: jnp.zeros((cfg.n_layers, batch, max_len, a.kv_heads,
+                                a.head_dim), dtype)
+        state["k_cache"] = kv()
+        state["v_cache"] = kv()
+    if fam == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        state["cross_k"] = jnp.zeros(
+            (n_cross, batch, cfg.n_patches, a.kv_heads, a.head_dim), dtype)
+        state["cross_v"] = jnp.zeros_like(state["cross_k"])
+    if fam in ("ssm", "hybrid"):
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        if s.version == 1:
+            h = jnp.zeros((cfg.n_layers, batch, di, s.state_dim), jnp.float32)
+        else:
+            nh = di // s.head_dim
+            h = jnp.zeros((cfg.n_layers, batch, nh, s.head_dim, s.state_dim),
+                          jnp.float32)
+        state["ssm_h"] = h
+        state["ssm_conv"] = jnp.zeros(
+            (cfg.n_layers, batch, s.conv_width - 1, di), dtype)
+    if fam == "hybrid":
+        n_groups = cfg.n_layers // cfg.hybrid_attn_every
+        state["k_cache"] = jnp.zeros(
+            (n_groups, batch, max_len, a.kv_heads, a.head_dim), dtype)
+        state["v_cache"] = jnp.zeros_like(state["k_cache"])
+    return state
+
+
+def decode_state_specs(cfg: ModelConfig) -> Dict[str, Tuple]:
+    specs: Dict[str, Any] = {"cache_len": ("batch",)}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "hybrid"):
+        specs["k_cache"] = (None, "batch", "kv_seq", "kv_heads", None)
+        specs["v_cache"] = (None, "batch", "kv_seq", "kv_heads", None)
+    if fam == "vlm":
+        specs["cross_k"] = (None, "batch", None, "kv_heads", None)
+        specs["cross_v"] = (None, "batch", None, "kv_heads", None)
+    if fam in ("ssm", "hybrid"):
+        if cfg.ssm.version == 1:
+            specs["ssm_h"] = (None, "batch", "d_inner", None)
+        else:
+            specs["ssm_h"] = (None, "batch", "d_inner", None, None)
+        specs["ssm_conv"] = (None, "batch", None, "d_inner")
+    return specs
+
+
+def _attn_decode_block(x, lp, cfg, kc, vc, new_len, window):
+    """One dense block in decode mode; returns (x, k_new, v_new).
+
+    Memory-critical: returns only the new token's K/V ([B, KH, Dh]), NOT
+    the updated cache slice.  Returning updated slices as scan ys stacked
+    a second full copy of the multi-GB cache into temp memory; the caller
+    scatters the stacked new entries into the (donated) cache once,
+    post-scan (EXPERIMENTS.md §Perf I20).
+    """
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    k_new, v_new = attn.project_new_kv(h, lp["attn"], cfg.attn, new_len - 1)
+    bidx = jnp.arange(x.shape[0])
+    kc = kc.at[bidx, new_len - 1].set(k_new.astype(kc.dtype))
+    vc = vc.at[bidx, new_len - 1].set(v_new.astype(vc.dtype))
+    h = attn.decode_attention(h, lp["attn"], cfg.attn, kc, vc, new_len,
+                              window=window)
+    x = x + h
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe" and "moe" in lp:
+        y, _ = moe_mod.moe_block(h, lp["moe"], cfg.moe)
+        if cfg.moe.dense_residual_d_ff:
+            y = y + swiglu(h, lp["dense_mlp"], cfg.act)
+        h = y
+    else:
+        h = swiglu(h, lp["mlp"], cfg.act)
+    return x + h, k_new, v_new
+
+
+def _scatter_new_kv(k_cache, v_cache, k_new, v_new, new_len):
+    """Scatter [L, B, KH, Dh] new entries into the donated [L, B, S, KH, Dh]
+    caches at per-sequence positions — the single cache write per step."""
+    l, b = k_new.shape[0], k_new.shape[1]
+    lidx = jnp.arange(l)[:, None]
+    bidx = jnp.arange(b)[None, :]
+    pos = (new_len - 1)[None, :]
+    k_cache = k_cache.at[lidx, bidx, pos].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[lidx, bidx, pos].set(v_new.astype(v_cache.dtype))
+    return k_cache, v_cache
+
+
+def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig,
+                extra: Optional[Dict[str, jnp.ndarray]] = None):
+    """tokens [B, 1] -> (logits [B, V], new_state).  serve_step core."""
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+    new_len = state["cache_len"] + 1
+    windows = _windows_for(cfg)
+    fam = cfg.family
+    new_state = dict(state)
+
+    if fam in ("dense", "moe"):
+        # caches are CAPTURED (loop-invariant) and indexed by layer id, not
+        # passed as scan xs: xs-cache threading made the while loop hold a
+        # second full multi-GB cache copy (§Perf I20b)
+        k_cache, v_cache = state["k_cache"], state["v_cache"]
+
+        def body(xc, xs):
+            lp, w, li = xs
+            kc = jax.lax.dynamic_index_in_dim(k_cache, li, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(v_cache, li, keepdims=False)
+            xn, kn, vn = _attn_decode_block(xc, lp, cfg, kc, vc, new_len, w)
+            return xn, (kn, vn)
+
+        x, (nk, nv) = _scan_or_unroll(
+            body, x, (params["layers"], windows,
+                      jnp.arange(cfg.n_layers, dtype=jnp.int32)),
+            cfg.scan_layers)
+        new_state["k_cache"], new_state["v_cache"] = _scatter_new_kv(
+            state["k_cache"], state["v_cache"], nk, nv, new_len)
+    elif fam == "vlm":
+        k = cfg.cross_attn_every
+        n_groups = cfg.n_layers // k
+        nk, nv = [], []
+
+        def body(xc, xs):
+            lp, kc, vc, w = xs
+            xn, kn, vn = _attn_decode_block(xc, lp, cfg, kc, vc, new_len, w)
+            return xn, (kn, vn)
+
+        for g in range(n_groups):
+            sl = lambda p: p[g * k:(g + 1) * k]
+            x, (nkg, nvg) = _scan_or_unroll(
+                body, x, (jax.tree.map(sl, params["layers"]),
+                          state["k_cache"][g * k:(g + 1) * k],
+                          state["v_cache"][g * k:(g + 1) * k],
+                          windows[g * k:(g + 1) * k]), cfg.scan_layers)
+            nk.append(nkg)
+            nv.append(nvg)
+            cp = jax.tree.map(lambda p: p[g], params["cross_layers"])
+            h = rms_norm(x, cp["ln"], cfg.norm_eps)
+            h = attn.decode_attention(
+                h, cp["attn"], cfg.attn, state["cross_k"][g],
+                state["cross_v"][g],
+                jnp.full((b,), cfg.n_patches, jnp.int32), use_rope=False)
+            x = x + jnp.tanh(cp["gate"].astype(jnp.float32)).astype(x.dtype) * h
+        new_state["k_cache"], new_state["v_cache"] = _scatter_new_kv(
+            state["k_cache"], state["v_cache"],
+            jnp.concatenate(nk, axis=0), jnp.concatenate(nv, axis=0), new_len)
+    elif fam == "ssm":
+        def body(xc, xs):
+            lp, h, conv = xs
+            hn = rms_norm(xc, lp["ln"], cfg.norm_eps)
+            y, st = ssm_mod.mamba_decode_step(
+                hn, {"h": h, "conv": conv}, lp["ssm"], cfg.d_model, cfg.ssm)
+            return xc + y, (st["h"], st["conv"])
+
+        x, (nh, nconv) = _scan_or_unroll(
+            body, x, (params["layers"], state["ssm_h"], state["ssm_conv"]),
+            cfg.scan_layers)
+        new_state["ssm_h"], new_state["ssm_conv"] = nh, nconv
+    elif fam == "hybrid":
+        k = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // k
+        sa = params["shared_attn"]
+        nh, nconv, nk, nv = [], [], [], []
+
+        def body(xc, xs):
+            lp, h, conv = xs
+            hn = rms_norm(xc, lp["ln"], cfg.norm_eps)
+            y, st = ssm_mod.mamba_decode_step(
+                hn, {"h": h, "conv": conv}, lp["ssm"], cfg.d_model, cfg.ssm)
+            return xc + y, (st["h"], st["conv"])
+
+        for g in range(n_groups):
+            sl = lambda p: p[g * k:(g + 1) * k]
+            x, (nhg, ncg) = _scan_or_unroll(
+                body, x, (jax.tree.map(sl, params["layers"]),
+                          state["ssm_h"][g * k:(g + 1) * k],
+                          state["ssm_conv"][g * k:(g + 1) * k]),
+                cfg.scan_layers)
+            nh.append(nhg)
+            nconv.append(ncg)
+            x2, kn, vn = _attn_decode_block(
+                x, sa, cfg, state["k_cache"][g], state["v_cache"][g],
+                new_len, BIG_WINDOW)
+            x = x2
+            nk.append(kn[None])
+            nv.append(vn[None])
+        rem = cfg.n_layers - n_groups * k
+        if rem:
+            sl = lambda p: p[-rem:]
+            x, (nhg, ncg) = _scan_or_unroll(
+                body, x, (jax.tree.map(sl, params["layers"]),
+                          state["ssm_h"][-rem:], state["ssm_conv"][-rem:]),
+                cfg.scan_layers)
+            nh.append(nhg)
+            nconv.append(ncg)
+        new_state["ssm_h"] = jnp.concatenate(nh, axis=0)
+        new_state["ssm_conv"] = jnp.concatenate(nconv, axis=0)
+        new_state["k_cache"], new_state["v_cache"] = _scatter_new_kv(
+            state["k_cache"], state["v_cache"],
+            jnp.concatenate(nk, axis=0), jnp.concatenate(nv, axis=0), new_len)
+    else:
+        raise ValueError(fam)
+
+    new_state["cache_len"] = new_len
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    scale = cfg.d_model ** -0.5 if cfg.tie_embeddings else 1.0
+    logits = (x[:, 0] * scale) @ unembed.T
+    logits = constrain(logits, "batch", "vocab")
+    from repro.models.layers import softcap as _softcap
+    logits = _softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits, new_state
+
+
+def prefill(params, tokens: jnp.ndarray, cfg: ModelConfig, max_len: int,
+            extra: Optional[Dict[str, jnp.ndarray]] = None):
+    """Run the full prompt, build decode state.  Returns (state, logits)."""
+    b, l = tokens.shape
+    state = init_decode_state(cfg, b, max_len)
+    x, _ = forward(params, tokens, cfg, extra=extra)
+    # note: prefill KV is recomputed into the cache by replaying projections
+    # per layer; for the dry-run cost model the forward dominates.  VLM cross
+    # KV is computed once here.
+    if cfg.family == "vlm" and extra is not None:
+        a = cfg.attn
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        patches = extra["patches"]
+        for g in range(n_cross):
+            cp = jax.tree.map(lambda p: p[g], params["cross_layers"])
+            kc = (patches @ cp["attn"]["wk"]).reshape(
+                b, -1, a.kv_heads, a.head_dim)
+            vc = (patches @ cp["attn"]["wv"]).reshape(
+                b, -1, a.kv_heads, a.head_dim)
+            state["cross_k"] = state["cross_k"].at[g].set(kc.astype(state["cross_k"].dtype))
+            state["cross_v"] = state["cross_v"].at[g].set(vc.astype(state["cross_v"].dtype))
+    state["cache_len"] = jnp.full((b,), l, jnp.int32)
+    unembed = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    scale = cfg.d_model ** -0.5 if cfg.tie_embeddings else 1.0
+    logits = (x[:, -1] * scale) @ unembed.T
+    return state, logits

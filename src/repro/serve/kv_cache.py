@@ -1,0 +1,117 @@
+"""Paged KV cache: fixed-size pages + NFL page table.
+
+The device-side pool is a stacked array [L, n_pages, page, KH, Dh]; the
+host-side allocator hands out pages from a free list and registers the
+``(seq, block) -> page`` mapping in the NFL-backed page table
+(serve/prefix_cache.py).  ``gather_kv`` materializes a logically-contiguous
+view for attention from the page table — on TPU this is one gather along
+the page axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.prefix_cache import NFLPageTable, composite_key
+
+__all__ = ["PagedKVCache", "PagedKVConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    n_pages: int
+    page_size: int = 64
+    n_layers: int = 2
+    kv_heads: int = 2
+    head_dim: int = 32
+    dtype: object = jnp.bfloat16
+
+
+class PagedKVCache:
+    def __init__(self, cfg: PagedKVConfig):
+        self.cfg = cfg
+        shape = (cfg.n_layers, cfg.n_pages, cfg.page_size, cfg.kv_heads,
+                 cfg.head_dim)
+        self.k_pool = jnp.zeros(shape, cfg.dtype)
+        self.v_pool = jnp.zeros(shape, cfg.dtype)
+        self._free: List[int] = list(range(cfg.n_pages - 1, -1, -1))
+        self.table = NFLPageTable()
+        self._seq_blocks: Dict[int, List[int]] = {}  # seq -> page ids, ordered
+        self._seq_len: Dict[int, int] = {}
+
+    # ----------------------------------------------------------- allocation
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def register_sequence(self, seq_id: int) -> None:
+        self._seq_blocks.setdefault(seq_id, [])
+        self._seq_len.setdefault(seq_id, 0)
+
+    def _grow(self, seq_id: int, new_len: int) -> None:
+        blocks = self._seq_blocks[seq_id]
+        need = (new_len + self.cfg.page_size - 1) // self.cfg.page_size
+        new_keys, new_pages = [], []
+        while len(blocks) < need:
+            if not self._free:
+                raise MemoryError("KV page pool exhausted")
+            page = self._free.pop()
+            new_keys.append(composite_key(
+                np.array([seq_id]), np.array([len(blocks)]))[0])
+            new_pages.append(page)
+            blocks.append(page)
+        if new_pages:
+            self.table.insert(np.asarray(new_keys), np.asarray(new_pages))
+        self._seq_len[seq_id] = new_len
+
+    def append(self, seq_id: int, layer_k: jnp.ndarray,
+               layer_v: jnp.ndarray) -> None:
+        """Append one token's K/V ([L, KH, Dh]) to a sequence."""
+        pos = self._seq_len[seq_id]
+        self._grow(seq_id, pos + 1)
+        page = self._seq_blocks[seq_id][pos // self.cfg.page_size]
+        slot = pos % self.cfg.page_size
+        self.k_pool = self.k_pool.at[:, page, slot].set(
+            layer_k.astype(self.k_pool.dtype))
+        self.v_pool = self.v_pool.at[:, page, slot].set(
+            layer_v.astype(self.v_pool.dtype))
+
+    def release(self, seq_id: int) -> None:
+        for page in self._seq_blocks.pop(seq_id, []):
+            self._free.append(page)
+        self._seq_len.pop(seq_id, None)
+        # page-table entries become stale; the NFL index tolerates stale
+        # payloads (identity keys are never reused: seq ids are monotonic)
+
+    # -------------------------------------------------------------- access
+    def lookup_pages(self, seq_id: int, n_blocks: int) -> np.ndarray:
+        """Batched NFL page-table probe for a sequence's first n blocks."""
+        keys = composite_key(np.full(n_blocks, seq_id), np.arange(n_blocks))
+        return self.table.lookup(keys)
+
+    def gather_kv(self, seq_id: int) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+        """Contiguous [L, len, KH, Dh] view of a sequence's cache."""
+        n = self._seq_len[seq_id]
+        if n == 0:
+            z = jnp.zeros((self.cfg.n_layers, 0, self.cfg.kv_heads,
+                           self.cfg.head_dim), self.k_pool.dtype)
+            return z, z, 0
+        n_blocks = (n + self.cfg.page_size - 1) // self.cfg.page_size
+        pages = self.lookup_pages(seq_id, n_blocks)
+        assert (pages >= 0).all(), "page table lost a mapping"
+        k = self.k_pool[:, pages].reshape(
+            self.cfg.n_layers, -1, self.cfg.kv_heads, self.cfg.head_dim)[:, :n]
+        v = self.v_pool[:, pages].reshape(
+            self.cfg.n_layers, -1, self.cfg.kv_heads, self.cfg.head_dim)[:, :n]
+        return k, v, n
+
+    def stats(self) -> dict:
+        return {
+            "free_pages": len(self._free),
+            "used_pages": self.cfg.n_pages - len(self._free),
+            "sequences": len(self._seq_blocks),
+            "table": self.table.stats(),
+        }

@@ -1,0 +1,116 @@
+"""Continuous-batching serve loop.
+
+Requests enter a FIFO; the scheduler admits them into free batch slots,
+prefills their prompts, then advances all active slots one token per
+``serve_step``.  Finished sequences free their slot immediately (iteration-
+level scheduling a la Orca/vLLM).  Works with any ModelAPI; batch-level
+state is the model's functional decode state, slot-sliced.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import ModelAPI
+
+__all__ = ["Request", "ServeConfig", "ContinuousBatcher"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [len] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the scheduler
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_slots: int = 4
+    max_len: int = 256
+
+
+class ContinuousBatcher:
+    def __init__(self, model: ModelAPI, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * cfg.batch_slots
+        self.state = model.init_decode_state(cfg.batch_slots, cfg.max_len)
+        self._decode = jax.jit(
+            lambda p, s, t: model.decode_step(p, s, t))
+        self.steps = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            self.slots[i] = req
+            # per-slot prefill: run the prompt through a batch-1 prefill and
+            # splice its state into slot i
+            state1, logits = self.model.prefill(
+                self.params, jnp.asarray(req.prompt[None], jnp.int32),
+                self.cfg.max_len)
+            tok = int(jnp.argmax(logits[0]))
+            req.output.append(tok)
+            self.state = jax.tree.map(
+                lambda full, one: full.at[_slot_index(full, i)].set(one[_first(one)])
+                if hasattr(full, "at") else full,
+                self.state, state1)
+
+    def step(self) -> None:
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return
+        tokens = np.zeros((self.cfg.batch_slots, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].output[-1]
+        logits, self.state = self._decode(
+            self.params, self.state, jnp.asarray(tokens))
+        self.steps += 1
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in active:
+            req = self.slots[i]
+            tok = int(next_tok[i])
+            req.output.append(tok)
+            if (req.eos_id is not None and tok == req.eos_id) or (
+                    len(req.output) >= req.max_new_tokens):
+                req.done = True
+                self.slots[i] = None  # slot freed for the next admit
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        while (self.queue or any(s is not None for s in self.slots)) and \
+                self.steps < max_steps:
+            self.step()
+
+
+def _slot_index(arr, i: int):
+    """Index tuple addressing batch slot i in a stacked state leaf.
+
+    Decode-state leaves are either [B, ...] (cache_len) or [L, B, ...]
+    (caches); the batch axis is 0 when ndim matches cache_len, else 1.
+    """
+    if arr.ndim >= 2:
+        return (slice(None), i)
+    return (i,)
+
+
+def _first(arr):
+    if hasattr(arr, "ndim") and arr.ndim >= 2:
+        return (slice(None), 0)
+    return (0,)

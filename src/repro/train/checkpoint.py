@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing (no orbax dependency).
+
+Layout per step::
+
+  <dir>/step_<n>/
+      manifest.msgpack     tree structure, shapes, dtypes, metadata
+      shard_<host>.npz     flat leaf arrays owned by this host
+      COMMIT               written last; a step without it is ignored
+
+Properties needed at cluster scale and implemented here:
+
+* **atomicity** — writes go to ``step_<n>.tmp`` then ``os.replace`` to the
+  final name after the COMMIT marker; a crash mid-save never corrupts the
+  restore path;
+* **async** — ``save_async`` snapshots leaves to host RAM and writes on a
+  background thread, returning control to the train loop immediately;
+* **multi-host** — each process writes only its addressable shards
+  (``shard_<process_index>.npz``); restore concatenates whatever shard
+  files exist (single-host here, but the layout is process-count change
+  tolerant for full replicas);
+* **data-pipeline state** — included in the manifest, so restart resumes
+  the exact batch stream (elastic re-shard safe: the pipeline is counter-
+  based, see repro.data.tokens);
+* **retention** — keep the newest K checkpoints, delete older ones.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import uuid
+from typing import Any, Dict, Optional, Tuple
+
+import msgpack
+import numpy as np
+import jax
+
+__all__ = ["save", "save_async", "restore_latest", "latest_step", "wait_pending"]
+
+_pending: Dict[str, threading.Thread] = {}
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    return flat, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any,
+         extra: Optional[Dict[str, Any]] = None, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(os.path.join(final, "COMMIT")):
+        return final  # an identical step is already committed
+    # unique staging dir: concurrent saves of the same step (async + final
+    # sync) must never share a tmp path
+    tmp = final + f".tmp.{uuid.uuid4().hex[:8]}"
+    os.makedirs(tmp)
+    flat, treedef = _flatten(tree)
+    host = jax.process_index() if jax.process_count() > 1 else 0
+    np.savez(os.path.join(tmp, f"shard_{host}.npz"), **flat)
+    manifest = {
+        "step": step,
+        "n_leaves": len(flat),
+        "treedef": str(treedef),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.write("ok")
+    try:
+        os.replace(tmp, final)
+    except OSError:
+        # a concurrent save won the rename race for this step; theirs is
+        # equally valid — drop ours
+        shutil.rmtree(tmp, ignore_errors=True)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def save_async(ckpt_dir: str, step: int, tree: Any,
+               extra: Optional[Dict[str, Any]] = None, keep: int = 3) -> None:
+    """Snapshot to host memory now, write in the background."""
+    snapshot = jax.tree.map(lambda x: np.asarray(x), tree)
+    t = threading.Thread(
+        target=save, args=(ckpt_dir, step, snapshot, extra, keep), daemon=True)
+    _pending[ckpt_dir] = t
+    t.start()
+
+
+def wait_pending(ckpt_dir: Optional[str] = None) -> None:
+    if ckpt_dir is not None:
+        t = _pending.pop(ckpt_dir, None)
+        if t:
+            t.join()
+        return
+    for d in list(_pending):
+        wait_pending(d)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and ".tmp" not in name:
+            if os.path.exists(os.path.join(ckpt_dir, name, "COMMIT")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_latest(ckpt_dir: str, tree_like: Any) -> Optional[Tuple[int, Any, Dict]]:
+    """Restore newest valid checkpoint into the structure of `tree_like`.
+
+    Returns (step, tree, extra) or None.  Leaves are restored as numpy and
+    re-placed/re-sharded by the caller's jax.device_put — this is what makes
+    restore elastic: the on-disk format is topology-free.
+    """
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    flat: Dict[str, np.ndarray] = {}
+    for name in sorted(os.listdir(path)):
+        if name.startswith("shard_") and name.endswith(".npz"):
+            with np.load(os.path.join(path, name)) as z:
+                flat.update({k: z[k] for k in z.files})
+    leaves_like, treedef = jax.tree.flatten(tree_like)
+    assert len(leaves_like) == manifest["n_leaves"], (
+        f"checkpoint has {manifest['n_leaves']} leaves, "
+        f"model expects {len(leaves_like)}")
+    leaves = [flat[f"leaf_{i}"] for i in range(len(leaves_like))]
+    # dtype-faithful restore (npz keeps dtype; cast defensively to match)
+    leaves = [np.asarray(l).astype(like.dtype) if hasattr(like, "dtype") else l
+              for l, like in zip(leaves, leaves_like)]
+    return step, jax.tree.unflatten(treedef, leaves), manifest.get("extra", {})
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+        if n.startswith("step_") and ".tmp" not in n
+        and os.path.exists(os.path.join(ckpt_dir, n, "COMMIT"))
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,229 @@
+"""Optimizers (pytree-based, no external deps).
+
+* **AdamW** — decoupled weight decay + global-norm clipping.  m/v mirror
+  the params, so they shard identically under pjit (FSDP-friendly).
+* **Adafactor** — factored second moment (Shazeer & Stern), the canonical
+  TPU big-model optimizer: state is O(d_r + d_c) per matrix instead of
+  O(d_r * d_c).  arctic-480b *requires* it on a 256-chip pod: bf16 params
+  + f32 Adam m/v is 18.6 GB/chip (> 16 GB HBM); Adafactor is ~3.9 GB.
+  beta1=0 (no momentum) per the memory-efficient defaults.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "AdafactorConfig", "adafactor_init", "adafactor_update",
+           "make_optimizer"]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+    # master-weight dtype; params may be bf16 while m/v/master stay f32
+    state_dtype: Any = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: PyTree
+    v: PyTree
+
+
+def adamw_init(params: PyTree, cfg: AdamWConfig) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype=cfg.state_dtype)
+    return AdamWState(
+        step=jnp.zeros((), dtype=jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads: PyTree,
+    state: AdamWState,
+    params: PyTree,
+    cfg: AdamWConfig,
+    lr: Optional[jnp.ndarray] = None,
+) -> Tuple[PyTree, AdamWState, jnp.ndarray]:
+    """One AdamW step. Returns (new_params, new_state, pre-clip grad norm)."""
+    if cfg.grad_clip is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr_t = cfg.lr if lr is None else lr
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(cfg.state_dtype)
+        m_new = b1 * m + (1.0 - b1) * g32
+        v_new = b2 * v + (1.0 - b2) * jnp.square(g32)
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(cfg.state_dtype)
+        p_new = p.astype(cfg.state_dtype) - lr_t * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        pn, mn, vn = upd(g, m, v, p)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        AdamWState(step=step, m=jax.tree.unflatten(treedef, new_m), v=jax.tree.unflatten(treedef, new_v)),
+        gnorm,
+    )
+
+
+# ============================================================== Adafactor
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    decay_exponent: float = 0.8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+    min_dim_factored: int = 128  # matrices smaller than this keep full v
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: PyTree   # row statistics  (or full v for unfactored leaves)
+    vc: PyTree   # col statistics  (or () placeholder)
+
+
+def _factored(p, cfg: AdafactorConfig) -> bool:
+    return p.ndim >= 2 and min(p.shape[-2:]) >= cfg.min_dim_factored
+
+
+def adafactor_init(params: PyTree, cfg: AdafactorConfig) -> AdafactorState:
+    def init_vr(p):
+        if _factored(p, cfg):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def init_vc(p):
+        if _factored(p, cfg):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(init_vr, params),
+        vc=jax.tree.map(init_vc, params),
+    )
+
+
+def adafactor_update(
+    grads: PyTree,
+    state: AdafactorState,
+    params: PyTree,
+    cfg: AdafactorConfig,
+    lr: Optional[jnp.ndarray] = None,
+) -> Tuple[PyTree, AdafactorState, jnp.ndarray]:
+    if cfg.grad_clip is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-cfg.decay_exponent)
+    lr_t = cfg.lr if lr is None else lr
+
+    def upd_one(g, vr, vc, p):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + cfg.eps1
+        if _factored(p, cfg):
+            vr_new = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+            vc_new = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+            # rank-1 reconstruction of the second moment
+            denom = vr_new.mean(axis=-1, keepdims=True)
+            vhat = (vr_new[..., None] * vc_new[..., None, :]
+                    / jnp.maximum(denom[..., None], cfg.eps1))
+        else:
+            vr_new = beta2 * vr + (1 - beta2) * g2
+            vc_new = vc
+            vhat = vr_new
+        u = g32 * jax.lax.rsqrt(vhat + cfg.eps1)
+        # RMS update clipping (Adafactor section 6)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+        scale = jnp.maximum(
+            cfg.eps2, jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))))
+        delta = lr_t * scale * u
+        if cfg.weight_decay:
+            delta = delta + lr_t * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), vr_new, vc_new
+
+    def upd(g, vr, vc, p):
+        # layer-stacked leaves update one slice at a time (lax.map): keeps
+        # the f32 update intermediates at one layer's footprint AND applies
+        # the per-matrix RMS/scale statistics per layer (more faithful to
+        # the paper than whole-stack statistics).
+        if p.ndim >= 3 and _factored(p, cfg) and p.size * 4 > (1 << 28):
+            pn, vrn, vcn = jax.lax.map(
+                lambda args: upd_one(*args), (g, vr, vc, p))
+            return pn, vrn, vcn
+        return upd_one(g, vr, vc, p)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_vr = treedef.flatten_up_to(state.vr)
+    flat_vc = treedef.flatten_up_to(state.vc)
+    new_p, new_vr, new_vc = [], [], []
+    for g, vr, vc, p in zip(flat_g, flat_vr, flat_vc, flat_p):
+        pn, vrn, vcn = upd(g, vr, vc, p)
+        new_p.append(pn)
+        new_vr.append(vrn)
+        new_vc.append(vcn)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        AdafactorState(step=step,
+                       vr=jax.tree.unflatten(treedef, new_vr),
+                       vc=jax.tree.unflatten(treedef, new_vc)),
+        gnorm,
+    )
+
+
+def make_optimizer(cfg):
+    """(init, update) pair for either optimizer config."""
+    if isinstance(cfg, AdafactorConfig):
+        return (lambda p: adafactor_init(p, cfg),
+                lambda g, s, p, lr=None: adafactor_update(g, s, p, cfg, lr))
+    return (lambda p: adamw_init(p, cfg),
+            lambda g, s, p, lr=None: adamw_update(g, s, p, cfg, lr))

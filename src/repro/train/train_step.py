@@ -1,0 +1,108 @@
+"""The pjit-able train step: loss + grad + optimizer, with microbatching.
+
+Gradient accumulation runs as a ``lax.scan`` over microbatches (sequential,
+activation memory is one microbatch); the optimizer applies once per global
+step.  All sharding comes from in/out shardings + the models' logical
+constraints — the step function itself is topology-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelAPI
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                   adamw_update, make_optimizer)
+from repro.train.schedule import ScheduleConfig, make_schedule
+
+__all__ = ["TrainConfig", "TrainState", "make_train_step", "init_train_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: Any = dataclasses.field(default_factory=AdamWConfig)
+    schedule: ScheduleConfig = dataclasses.field(default_factory=ScheduleConfig)
+    microbatches: int = 1
+    # gradient-accumulation dtype; bf16 halves the accumulator footprint
+    # for very large models (arctic) at negligible loss impact at <= 8
+    # microbatches
+    accum_dtype: str = "float32"
+
+
+class TrainState:
+    """Simple pytree-of-arrays train state (registered below)."""
+
+    def __init__(self, params, opt: AdamWState, step):
+        self.params = params
+        self.opt = opt
+        self.step = step
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: s.tree_flatten(),
+    TrainState.tree_unflatten,
+)
+
+
+def init_train_state(model: ModelAPI, rng: jax.Array, tcfg: TrainConfig):
+    params = model.init(rng)
+    opt_init, _ = make_optimizer(tcfg.optimizer)
+    return TrainState(params, opt_init(params), jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model: ModelAPI, tcfg: TrainConfig) -> Callable:
+    schedule = make_schedule(tcfg.schedule)
+    _, opt_update = make_optimizer(tcfg.optimizer)
+    m = tcfg.microbatches
+    acc_dtype = jnp.bfloat16 if tcfg.accum_dtype == "bfloat16" else jnp.float32
+
+    def loss_fn(params, batch):
+        loss, metrics = model.train_loss(params, batch)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        params = state.params
+
+        if m == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dtype) / m, g_acc, g)
+                return (g_acc, l_acc + l / m), None
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros(())), micro_batches)
+            metrics = {"nll": loss, "aux": jnp.zeros(())}
+
+        lr = schedule(state.step)
+        new_params, new_opt, gnorm = opt_update(grads, state.opt, params, lr=lr)
+        out_metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "lr": lr,
+            **{k: v for k, v in metrics.items()},
+        }
+        return TrainState(new_params, new_opt, state.step + 1), out_metrics
+
+    return train_step

@@ -1,0 +1,174 @@
+"""Training loop with the fault-tolerance surface a real fleet needs.
+
+* checkpoint/restart: periodic async checkpoints (params/opt/step + data
+  pipeline state); on startup the trainer restores the newest valid step
+  automatically, so a killed job resumes where it left off.
+* straggler mitigation: per-step wall-time EMA + z-score watchdog; steps
+  slower than ``straggler_z`` sigmas are logged and counted (at fleet scale
+  this signal feeds the hot-spare re-mesh hook; here it drives metrics and
+  tests).
+* graceful preemption: SIGTERM/SIGINT triggers one final sync checkpoint
+  before exit.
+* elastic re-mesh: ``Trainer.remesh(new_mesh)`` re-device_puts the state
+  under new shardings — combined with the topology-free checkpoint format
+  this is the restart-on-fewer-hosts path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.dist.sharding import mesh_scope, named_sharding, param_sharding
+from repro.models.model import ModelAPI
+from repro.train import checkpoint as ckpt
+from repro.train.train_step import TrainConfig, TrainState, init_train_state, make_train_step
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    train: TrainConfig = dataclasses.field(default_factory=TrainConfig)
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    straggler_z: float = 3.0
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model: ModelAPI, cfg: TrainerConfig, data,
+                 mesh=None):
+        self.model = model
+        self.cfg = cfg
+        self.data = data
+        self.mesh = mesh
+        self.metrics_log: List[Dict[str, float]] = []
+        self.straggler_events: List[Dict[str, float]] = []
+        self._step_time_ema = None
+        self._step_time_var = 0.0
+        self._stop = False
+        self._train_step = make_train_step(model, cfg.train)
+        self.state: Optional[TrainState] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def initialize(self) -> int:
+        """Init or restore. Returns the starting step."""
+        rng = jax.random.PRNGKey(self.cfg.seed)
+        with mesh_scope(self.mesh):
+            state = init_train_state(self.model, rng, self.cfg.train)
+        start = 0
+        if self.cfg.ckpt_dir:
+            restored = ckpt.restore_latest(self.cfg.ckpt_dir, state)
+            if restored is not None:
+                start, tree, extra = restored
+                state = self._place(tree)
+                if "data" in extra and hasattr(self.data, "load_state_dict"):
+                    self.data.load_state_dict(extra["data"])
+            else:
+                state = self._place(state)
+        else:
+            state = self._place(state)
+        self.state = state
+        return start
+
+    def _place(self, state: TrainState) -> TrainState:
+        """device_put under the current mesh shardings (elastic-safe)."""
+        if self.mesh is None:
+            return jax.tree.map(jax.numpy.asarray, state)
+        specs = self.model.param_specs()
+        p_shard = param_sharding(specs, self.mesh)
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), state.params, p_shard,
+            is_leaf=lambda v: not isinstance(v, dict))
+        opt_m = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                             state.opt.m, p_shard,
+                             is_leaf=lambda v: not isinstance(v, dict))
+        opt_v = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                             state.opt.v, p_shard,
+                             is_leaf=lambda v: not isinstance(v, dict))
+        opt = state.opt._replace(
+            m=opt_m, v=opt_v, step=jax.device_put(state.opt.step))
+        return TrainState(params, opt, jax.device_put(state.step))
+
+    def remesh(self, new_mesh) -> None:
+        """Elastic scale: move state onto a different mesh."""
+        host_state = jax.tree.map(np.asarray, self.state)
+        self.mesh = new_mesh
+        self.state = self._place(host_state)
+        self._compiled = None
+
+    # ----------------------------------------------------------------- run
+    def run(self, n_steps: int) -> Dict[str, Any]:
+        start = self.initialize() if self.state is None else int(self.state.step)
+        prev_handlers = {}
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                prev_handlers[sig] = signal.signal(sig, self._on_signal)
+            except ValueError:
+                pass  # not main thread
+
+        step_fn = jax.jit(self._train_step, donate_argnums=(0,))
+        try:
+            with mesh_scope(self.mesh):
+                for step in range(start, n_steps):
+                    if self._stop:
+                        break
+                    batch_np = self.data.next_batch()
+                    batch = {
+                        "tokens": jax.numpy.asarray(batch_np.tokens),
+                        "targets": jax.numpy.asarray(batch_np.targets),
+                    }
+                    t0 = time.perf_counter()
+                    self.state, metrics = step_fn(self.state, batch)
+                    metrics = {k: float(v) for k, v in metrics.items()}
+                    dt = time.perf_counter() - t0
+                    self._watchdog(step, dt)
+                    metrics.update(step=step, step_time_s=dt)
+                    self.metrics_log.append(metrics)
+                    if self.cfg.ckpt_dir and (step + 1) % self.cfg.ckpt_every == 0:
+                        self._checkpoint(step + 1, sync=False)
+        finally:
+            if self.cfg.ckpt_dir:
+                self._checkpoint(int(self.state.step), sync=True)
+            ckpt.wait_pending()
+            for sig, h in prev_handlers.items():
+                signal.signal(sig, h)
+        return {
+            "final_step": int(self.state.step),
+            "final_loss": self.metrics_log[-1]["loss"] if self.metrics_log else None,
+            "stragglers": len(self.straggler_events),
+        }
+
+    # ------------------------------------------------------------- helpers
+    def _checkpoint(self, step: int, sync: bool) -> None:
+        extra = {}
+        if hasattr(self.data, "state_dict"):
+            extra["data"] = self.data.state_dict()
+        fn = ckpt.save if sync else ckpt.save_async
+        fn(self.cfg.ckpt_dir, step, self.state, extra=extra, keep=self.cfg.keep)
+
+    def _watchdog(self, step: int, dt: float) -> None:
+        """EMA z-score straggler detection (skips the compile step)."""
+        if self._step_time_ema is None:
+            self._step_time_ema = dt
+            return
+        mu = self._step_time_ema
+        var = self._step_time_var
+        sd = max(np.sqrt(var), 1e-4)
+        z = (dt - mu) / sd
+        if z > self.cfg.straggler_z and step > 2:
+            self.straggler_events.append({"step": step, "dt": dt, "z": z})
+        a = 0.1
+        self._step_time_ema = (1 - a) * mu + a * dt
+        self._step_time_var = (1 - a) * var + a * (dt - mu) ** 2
+
+    def _on_signal(self, signum, frame) -> None:
+        self._stop = True

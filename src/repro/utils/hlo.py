@@ -1,0 +1,109 @@
+"""Post-SPMD HLO analysis: collective wire bytes + op census (roofline).
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but no collective
+traffic, and result shapes in partitioned HLO are already *per-device*
+shards.  For each communication op we compute standard ring-algorithm wire
+bytes per device from the result shape and the replica-group size S:
+
+  all-reduce        2 (S-1)/S x result
+  all-gather          (S-1)/S x result        (result = gathered full)
+  reduce-scatter      (S-1)   x result        (operand = S x result)
+  all-to-all          (S-1)/S x result
+  collective-permute            result
+
+Scan bodies appear once in HLO but execute n_layers times — the roofline
+layer (utils/roofline.py) corrects with a two-point depth probe.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+__all__ = ["collective_bytes", "op_census", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# "%name = f32[4,8]{1,0} all-gather(...)" or tuple results
+_LINE_RE = re.compile(
+    r"=\s*(?P<res>\([^=]*?\)|[\w\[\],{}]+?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]")
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        g, s, n = int(m.group(1)), int(m.group(2)), int(m.group(3))
+        return max(s, 1)
+    m = _GROUPS_SET_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2  # unknown layout: conservative non-trivial group
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device algorithmic wire bytes per collective kind (single pass
+    of the program; scan-body multiplicity corrected by the caller)."""
+    out: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        kind = m.group("op")
+        res_bytes = _shape_bytes(m.group("res"))
+        s = _group_size(line)
+        if kind == "all-reduce":
+            wire = 2.0 * (s - 1) / s * res_bytes
+        elif kind == "all-gather":
+            wire = (s - 1) / s * res_bytes
+        elif kind == "reduce-scatter":
+            wire = float(s - 1) * res_bytes
+        elif kind == "all-to-all":
+            wire = (s - 1) / s * res_bytes
+        else:  # collective-permute
+            wire = float(res_bytes)
+        out[kind] += wire
+        counts[kind] += 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    for k, c in counts.items():
+        out[f"n_{k}"] = c
+    return dict(out)
+
+
+def op_census(hlo_text: str) -> Dict[str, int]:
+    """Count op kinds (diagnostics: spot redundant collectives/remat)."""
+    census: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*[\w\[\],{}<>\s]*?([a-z][\w-]*)\(", line)
+        if m:
+            census[m.group(1)] += 1
+    return dict(census)

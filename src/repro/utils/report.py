@@ -1,0 +1,74 @@
+"""Markdown table generation for EXPERIMENTS.md from dry-run artifacts.
+
+  PYTHONPATH=src python -m repro.utils.report [dryrun|roofline]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.utils.roofline import (ARTIFACT_DIR, HBM_BYTES, analyze_artifact,
+                                  load_probe)
+
+
+def _artifacts():
+    arts = []
+    for fn in sorted(os.listdir(ARTIFACT_DIR)):
+        if fn.endswith(".json"):
+            with open(os.path.join(ARTIFACT_DIR, fn)) as f:
+                arts.append(json.load(f))
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    arts.sort(key=lambda a: (a["arch"], order[a["shape"]], a["mesh"]))
+    return arts
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | compile s | HLO GFLOP/dev | HBM GB/dev "
+            "| wire GB/dev | args GB | temp GB | fits 16G |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for a in _artifacts():
+        mem = a["memory"]
+        args_gb = mem["argument_bytes"] / 1e9
+        temp_gb = mem["temp_bytes"] / 1e9
+        fits = "yes" if (mem["argument_bytes"] + mem["temp_bytes"]) <= HBM_BYTES else "**NO**"
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['compile_s']:.1f} "
+            f"| {a['flops_total']/1e9:.1f} "
+            f"| {a['bytes_accessed_total']/1e9:.1f} "
+            f"| {a['collective_bytes'].get('total', 0)/1e9:.2f} "
+            f"| {args_gb:.2f} | {temp_gb:.2f} | {fits} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | compute ms | memory ms | collective ms | bound "
+            "| MODEL_TF | useful frac | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for a in _artifacts():
+        if a["mesh"] != mesh:
+            continue
+        r = analyze_artifact(a)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['collective_s']*1e3:.2f} | **{r['bound']}** "
+            f"| {r['model_flops']/1e12:.1f} "
+            f"| {r['useful_frac']:.1%} | {r['roofline_frac']:.1%} |")
+    return "\n".join(rows)
+
+
+def main():
+    what = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if what in ("dryrun", "all"):
+        print("### Dry-run table (both meshes)\n")
+        print(dryrun_table())
+    if what in ("roofline", "all"):
+        print("\n### Roofline (single-pod 16x16, probe-corrected)\n")
+        print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

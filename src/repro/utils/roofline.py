@@ -1,0 +1,243 @@
+"""Roofline derivation from dry-run artifacts + depth probes.
+
+Problem: XLA's cost analysis counts every loop body ONCE (layer scan,
+microbatch scan, flash-attention chunk scans, Mamba chunk scans, loss
+chunks), so the raw dry-run artifact under-reports FLOPs/bytes/collectives
+by the trip counts.
+
+Solution: per (arch x shape), compile two *probe* variants at small depths
+with every loop structurally removed —
+
+  * layer stacks unrolled  (cfg.scan_layers = False)
+  * flash attention, Mamba scan, loss, MoE dispatch at one chunk
+  * microbatches = 1 (the mathematically equivalent unaccumulated step)
+
+then reported cost is exact for the probe, an affine fit in depth
+``cost(L) = fixed + per_layer * L`` extrapolates to the real depth, and the
+correction ratio maps onto the production (scanned) artifacts.  Probes run
+on the single-pod mesh; the same correction ratio applies to the multi-pod
+artifact (per-device cost halves, structure is identical).
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI, 16 GB HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_BYTES = 16e9
+
+_HERE = os.path.dirname(__file__)
+ARTIFACT_DIR = os.path.normpath(os.path.join(_HERE, "..", "..", "..",
+                                             "artifacts", "dryrun"))
+PROBE_DIR = os.path.normpath(os.path.join(_HERE, "..", "..", "..",
+                                          "artifacts", "probe"))
+
+
+def probe_depths(cfg) -> Tuple[int, int]:
+    """Two probe depths honouring group structure (hybrid/vlm)."""
+    if cfg.family == "hybrid":
+        u = cfg.hybrid_attn_every
+    elif cfg.family == "vlm":
+        u = cfg.cross_attn_every
+    else:
+        u = 1
+    return u, 2 * u
+
+
+def probe_config(cfg, n_layers: int):
+    """Loop-free variant of cfg at the given depth (see module docstring)."""
+    changes = dict(
+        n_layers=n_layers,
+        scan_layers=False,
+        loss_chunk=1 << 20,
+        attn_chunk_q=1 << 20,
+        attn_chunk_k=1 << 20,
+    )
+    if cfg.family == "encdec":
+        changes["n_enc_layers"] = n_layers
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(cfg.ssm, chunk=1 << 20)
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(cfg.moe, token_chunk=1 << 30)
+    return dataclasses.replace(cfg, **changes)
+
+
+def run_probe(arch: str, shape_name: str, force: bool = False) -> Dict:
+    """Compile the two probe depths; cache to artifacts/probe/."""
+    os.makedirs(PROBE_DIR, exist_ok=True)
+    path = os.path.join(PROBE_DIR, f"{arch}__{shape_name}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    from repro.configs import get_config
+    from repro.launch.dryrun import dryrun_cell
+
+    cfg = get_config(arch)
+    l1, l2 = probe_depths(cfg)
+    rows = {}
+    for L in (l1, l2):
+        pcfg = probe_config(cfg, L)
+        res = dryrun_cell(arch, shape_name, multi_pod=False, save=False,
+                          cfg=pcfg, probe=True)
+        rows[L] = {
+            "flops": res["flops_total"],
+            "bytes": res["bytes_accessed_total"],
+            "coll": res["collective_bytes"].get("total", 0.0),
+        }
+    per_layer = {k: (rows[l2][k] - rows[l1][k]) / (l2 - l1)
+                 for k in ("flops", "bytes", "coll")}
+    fixed = {k: rows[l1][k] - per_layer[k] * l1
+             for k in ("flops", "bytes", "coll")}
+    probe = {"arch": arch, "shape": shape_name, "depths": [l1, l2],
+             "per_layer": per_layer, "fixed": fixed, "rows": rows}
+    with open(path, "w") as f:
+        json.dump(probe, f, indent=1)
+    return probe
+
+
+def load_probe(arch: str, shape_name: str) -> Optional[Dict]:
+    path = os.path.join(PROBE_DIR, f"{arch}__{shape_name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def corrected_totals(art: Dict, probe: Optional[Dict]) -> Dict[str, float]:
+    """Extrapolate probe affine fit to the real depth; fall back to raw."""
+    from repro.configs import get_config
+
+    raw = {
+        "flops": art["flops_total"],
+        "bytes": art["bytes_accessed_total"],
+        "coll": art["collective_bytes"].get("total", 0.0),
+    }
+    if probe is None:
+        return {**raw, "corrected": False}
+    cfg = get_config(art["arch"])
+    L = cfg.n_layers
+    single = {k: max(probe["fixed"][k] + probe["per_layer"][k] * L, 0.0)
+              for k in ("flops", "bytes", "coll")}
+    # the probe's unfused attention round-trips S^2 scores through HBM;
+    # production flash keeps them on-chip — subtract the analytic traffic
+    onchip = flash_onchip_bytes(art["arch"], art["shape"], art["n_devices"])
+    single["bytes"] = max(single["bytes"] - onchip, raw["bytes"])
+    if art["n_devices"] == 256:
+        out = single
+    else:
+        # multi-pod: probe ran single-pod; apply per-device scaling from the
+        # raw artifacts (structure identical, work per device halves)
+        out = {}
+        for k in ("flops", "bytes", "coll"):
+            ref = load_artifact(art["arch"], art["shape"], "16x16")
+            ref_raw = (ref["flops_total"] if k == "flops"
+                       else ref["bytes_accessed_total"] if k == "bytes"
+                       else ref["collective_bytes"].get("total", 0.0))
+            scale = (raw[k] / ref_raw) if ref_raw else 0.5
+            out[k] = single[k] * scale
+    return {**out, "corrected": True}
+
+
+def load_artifact(arch: str, shape: str, mesh: str) -> Dict:
+    path = os.path.join(ARTIFACT_DIR, f"{arch}__{shape}__{mesh}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def flash_onchip_bytes(arch: str, shape_name: str, n_devices: int) -> float:
+    """HBM bytes the probe materializes but production flash keeps on-chip.
+
+    The loop-free probe lowers attention UNFUSED: the [B, H, Lq, Lk] f32
+    score/probability tensors round-trip HBM, while the production chunked
+    flash keeps them in registers/VMEM.  We subtract the analytic score
+    traffic (write+read forward, ~2x that in backward for train) per
+    attention layer.  Approximation documented in EXPERIMENTS.md §Roofline.
+    """
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if cfg.attn is None or shape.kind == "decode":
+        return 0.0
+    data_ways = 16  # single-pod data axis; probes run single-pod
+    b_local = max(shape.global_batch / data_ways, 1)
+    h = cfg.attn.n_heads
+    lq = lk = shape.seq_len
+    causal = 0.5
+    passes = 6.0 if shape.kind == "train" else 2.0  # fwd w+r; bwd ~2x
+    per_layer = passes * causal * b_local * h * lq * lk * 4.0
+    if cfg.family == "hybrid":
+        n_att = cfg.n_layers // cfg.hybrid_attn_every
+    elif cfg.family == "encdec":
+        # encoder (non-causal, enc_seq) + decoder self + cross
+        enc = passes * b_local * h * cfg.enc_seq ** 2 * 4.0
+        cross = passes * b_local * h * lq * cfg.enc_seq * 4.0
+        return cfg.n_enc_layers * enc + cfg.n_layers * (per_layer + cross)
+    else:
+        n_att = cfg.n_layers
+    extra = 0.0
+    if cfg.family == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        extra = n_cross * passes * b_local * h * lq * cfg.n_patches * 4.0
+    return n_att * per_layer + extra
+
+
+def model_flops(art: Dict) -> float:
+    """Useful-work floor: 6*N*D train / 2*N*D inference (per step, global)."""
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(art["arch"])
+    shape = SHAPES[art["shape"]]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def analyze_artifact(art: Dict) -> Dict:
+    probe = load_probe(art["arch"], art["shape"])
+    tot = corrected_totals(art, probe)
+    compute_s = tot["flops"] / PEAK_FLOPS
+    memory_s = tot["bytes"] / HBM_BW
+    collective_s = tot["coll"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bound = max(terms, key=terms.get)
+    mf = model_flops(art)
+    total_flops_global = tot["flops"] * art["n_devices"]
+    mem = art.get("memory", {})
+    device_bytes = mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+    return {
+        "arch": art["arch"],
+        "shape": art["shape"],
+        "mesh": art["mesh"],
+        "kind": art["kind"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bound": bound,
+        "step_s": max(terms.values()),
+        "model_flops": mf,
+        "useful_frac": mf / total_flops_global if total_flops_global else 0.0,
+        # roofline fraction: useful FLOP/s at the bottleneck-implied step
+        # time vs the fleet peak
+        "roofline_frac": (mf / max(terms.values()) /
+                          (PEAK_FLOPS * art["n_devices"])
+                          if max(terms.values()) else 0.0),
+        "fits_hbm": device_bytes <= HBM_BYTES,
+        "device_bytes": device_bytes,
+        "corrected": tot.get("corrected", False),
+    }

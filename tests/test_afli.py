@@ -1,0 +1,112 @@
+"""AFLI (paper-faithful reference) behaviour + hypothesis invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.afli import AFLI, AFLIConfig
+
+
+def _mkidx(keys, payloads=None):
+    keys = np.asarray(keys, dtype=np.float64)
+    payloads = np.arange(len(keys), dtype=np.int64) if payloads is None else payloads
+    idx = AFLI()
+    idx.bulkload(keys, payloads)
+    return idx, keys, payloads
+
+
+def test_bulkload_lookup_uniform():
+    rng = np.random.default_rng(0)
+    keys = np.unique(rng.uniform(0, 1e9, 20_000))
+    idx, keys, pv = _mkidx(keys)
+    for i in range(0, len(keys), 37):
+        assert idx.lookup(float(keys[i])) == int(pv[i])
+
+
+def test_bulkload_lookup_skewed():
+    rng = np.random.default_rng(1)
+    keys = np.unique(np.floor(rng.lognormal(0, 2, 30_000) * 1e9))
+    idx, keys, pv = _mkidx(keys)
+    miss = sum(idx.lookup(float(k)) != int(p)
+               for k, p in zip(keys[::11], pv[::11]))
+    assert miss == 0
+
+
+def test_negative_lookup():
+    keys = np.arange(0, 10_000, 2, dtype=np.float64)
+    idx, keys, _ = _mkidx(keys)
+    for k in range(1, 200, 2):
+        assert idx.lookup(float(k)) is None
+
+
+def test_insert_then_lookup():
+    rng = np.random.default_rng(2)
+    all_keys = np.unique(rng.uniform(0, 1e9, 10_000))
+    idx, loaded, pv = _mkidx(all_keys[::2])
+    new = all_keys[1::2]
+    for i, k in enumerate(new):
+        idx.insert(float(k), 1000000 + i)
+    for i, k in enumerate(new):
+        assert idx.lookup(float(k)) == 1000000 + i
+    # originals still intact
+    for i in range(0, len(loaded), 53):
+        assert idx.lookup(float(loaded[i])) == int(pv[i])
+
+
+def test_delete_and_update():
+    keys = np.unique(np.random.default_rng(3).uniform(0, 1e6, 5_000))
+    idx, keys, pv = _mkidx(keys)
+    assert idx.delete(float(keys[10]))
+    assert idx.lookup(float(keys[10])) is None
+    assert not idx.delete(float(keys[10]))
+    assert idx.update(float(keys[11]), 777)
+    assert idx.lookup(float(keys[11])) == 777
+
+
+def test_height_low_on_near_uniform():
+    rng = np.random.default_rng(4)
+    keys = np.unique(rng.uniform(0, 1e9, 50_000))
+    idx, _, _ = _mkidx(keys)
+    st_ = idx.stats()
+    assert st_.height <= 3  # paper: AFLI stays shallow on near-uniform keys
+
+
+def test_duplicate_pkeys_with_distinct_identity():
+    # NFL positions by transformed key: collisions must disambiguate by ikey
+    pk = np.array([1.0, 1.0, 1.0, 2.0, 3.0])
+    ik = np.array([10.0, 20.0, 30.0, 40.0, 50.0])
+    pv = np.array([1, 2, 3, 4, 5], dtype=np.int64)
+    idx = AFLI()
+    idx.bulkload(pk, pv, ikeys=ik)
+    assert idx.lookup(1.0, 20.0) == 2
+    assert idx.lookup(1.0, 30.0) == 3
+    assert idx.lookup(1.0, 99.0) is None
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_property_insert_lookup_delete(data):
+    """Invariant: after any load/insert/delete mix, lookups reflect exactly
+    the live key set."""
+    keys = data.draw(
+        st.lists(st.floats(min_value=-1e12, max_value=1e12,
+                           allow_nan=False, allow_infinity=False),
+                 min_size=4, max_size=300, unique=True))
+    keys = np.asarray(sorted(keys), dtype=np.float64)
+    n_load = data.draw(st.integers(min_value=2, max_value=len(keys)))
+    idx = AFLI(AFLIConfig())
+    idx.bulkload(keys[:n_load], np.arange(n_load, dtype=np.int64))
+    live = {float(k): i for i, k in enumerate(keys[:n_load])}
+    for j, k in enumerate(keys[n_load:]):
+        idx.insert(float(k), 10_000 + j)
+        live[float(k)] = 10_000 + j
+    dels = data.draw(st.lists(
+        st.integers(min_value=0, max_value=len(keys) - 1), max_size=30))
+    for di in dels:
+        k = float(keys[di])
+        expected = k in live
+        assert idx.delete(k) == expected
+        live.pop(k, None)
+    for k in map(float, keys):
+        got = idx.lookup(k)
+        assert got == live.get(k), (k, got, live.get(k))

@@ -1,0 +1,102 @@
+"""Baseline index correctness (BTree / PGM / ALEX-like / LIPP-like / RMI)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.index import REGISTRY, make_index
+
+UPDATABLE = [n for n in REGISTRY if n != "rmi"]
+
+
+def _data(n=20_000, seed=0, skewed=False):
+    rng = np.random.default_rng(seed)
+    if skewed:
+        keys = np.unique(np.floor(rng.lognormal(0, 2, int(n * 1.4)) * 1e9))[:n]
+    else:
+        keys = np.unique(rng.uniform(0, 1e12, int(n * 1.2)))[:n]
+    return keys.astype(np.float64), np.arange(len(keys), dtype=np.int64)
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+@pytest.mark.parametrize("skewed", [False, True])
+def test_bulkload_lookup(name, skewed):
+    keys, pv = _data(seed=1, skewed=skewed)
+    idx = make_index(name)
+    idx.bulkload(keys, pv)
+    res = idx.lookup_batch(keys[::7])
+    assert np.array_equal(res, pv[::7])
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+def test_negative_lookup(name):
+    keys, pv = _data(seed=2)
+    idx = make_index(name)
+    idx.bulkload(keys[::2], pv[::2])
+    res = idx.lookup_batch(keys[1::2][:2000])
+    assert (res == -1).all()
+
+
+@pytest.mark.parametrize("name", UPDATABLE)
+def test_insert_lookup(name):
+    keys, pv = _data(n=10_000, seed=3, skewed=True)
+    idx = make_index(name)
+    idx.bulkload(keys[::2], pv[::2])
+    idx.insert_batch(keys[1::2], pv[1::2])
+    assert np.array_equal(idx.lookup_batch(keys[1::2]), pv[1::2])
+    assert np.array_equal(idx.lookup_batch(keys[::2]), pv[::2])
+
+
+@pytest.mark.parametrize("name", UPDATABLE)
+def test_delete(name):
+    keys, pv = _data(n=5_000, seed=4)
+    idx = make_index(name)
+    idx.bulkload(keys, pv)
+    victims = keys[100:140]
+    deleted = [idx.delete(float(k)) for k in victims]
+    if name == "pgm":
+        # LSM static runs are immutable (documented simplification)
+        return
+    assert all(deleted)
+    assert (idx.lookup_batch(victims) == -1).all()
+
+
+def test_rmi_telemetry():
+    keys, pv = _data(n=30_000, seed=5, skewed=True)
+    idx = make_index("rmi")
+    idx.bulkload(keys, pv)
+    idx.lookup_batch(keys[:1000])
+    assert idx.n_predictions > 0
+    assert idx.stats()["max_leaf_err"] >= 0
+
+
+def test_pgm_segments_bounded_error():
+    from repro.index.pgm import build_segments
+
+    keys = np.unique(np.random.default_rng(6).uniform(0, 1e9, 20_000))
+    seg_keys, slopes, intercepts = build_segments(keys, eps=32)
+    # verify the epsilon bound for every key against its segment
+    seg_of = np.clip(np.searchsorted(seg_keys, keys, side="right") - 1, 0, None)
+    pred = slopes[seg_of] * (keys - seg_keys[seg_of]) + intercepts[seg_of]
+    err = np.abs(pred - np.arange(len(keys)))
+    assert err.max() <= 33  # eps + rounding slack
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.floats(min_value=0, max_value=1e15, allow_nan=False,
+                          allow_infinity=False),
+                min_size=8, max_size=400, unique=True))
+def test_property_all_indexes_agree(keys):
+    keys = np.asarray(sorted(keys), dtype=np.float64)
+    pv = np.arange(len(keys), dtype=np.int64)
+    half = len(keys) // 2
+    results = {}
+    for name in UPDATABLE:
+        idx = make_index(name)
+        idx.bulkload(keys[:half], pv[:half])
+        idx.insert_batch(keys[half:], pv[half:])
+        results[name] = idx.lookup_batch(keys)
+    ref = results[UPDATABLE[0]]
+    for name, res in results.items():
+        assert np.array_equal(res, ref), name
+    assert np.array_equal(ref, pv)

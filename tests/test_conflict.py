@@ -1,0 +1,64 @@
+"""Conflict degree metrics (paper Defs 3.1 / 3.2)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.conflict import (
+    LinearModel, conflict_degrees, dataset_tail_conflict, fit_linear_model,
+    should_use_flow, tail_conflict_degree,
+)
+
+
+def test_fit_linear_model_exact_line():
+    keys = np.arange(100, dtype=np.float64) * 3.0 + 7.0
+    m = fit_linear_model(keys)
+    assert np.isclose(m.slope, 1 / 3.0)
+    pred = np.rint(m(keys))
+    assert np.array_equal(pred, np.arange(100))
+
+
+def test_conflict_degrees_counts():
+    # model maps everything to slot floor(key)
+    m = LinearModel(slope=1.0, intercept=0.0)
+    keys = np.array([0.0, 0.1, 0.2, 1.0, 2.0, 2.1], dtype=np.float64)
+    d = conflict_degrees(keys, m)
+    # slots: 0 x3? rint(0.1)=0, rint(0.2)=0, rint(1)=1, rint(2)=2, rint(2.1)=2
+    assert sorted(d.tolist()) == [1, 2, 3]
+
+
+def test_tail_conflict_paper_example():
+    # paper: 1000 positions, gamma=0.99 -> t=990 -> 990th in ascending order
+    degrees = np.arange(1, 1001)
+    assert tail_conflict_degree(degrees, gamma=0.99) == 990
+
+
+def test_tail_conflict_uniform_is_small():
+    rng = np.random.default_rng(0)
+    keys = np.unique(rng.uniform(0, 1, 100_000))
+    assert dataset_tail_conflict(keys) <= 6
+
+
+def test_tail_conflict_lognormal_is_large():
+    rng = np.random.default_rng(0)
+    keys = np.unique(np.floor(rng.lognormal(0, 2, 100_000) * 1e9))
+    assert dataset_tail_conflict(keys) > 20
+
+
+def test_switching_mechanism():
+    rng = np.random.default_rng(1)
+    skewed = np.unique(np.floor(rng.lognormal(0, 2, 50_000) * 1e9))
+    uniform = np.unique(rng.uniform(0, 1e9, skewed.shape[0]))
+    use, t_orig, t_new = should_use_flow(skewed, uniform[: skewed.shape[0]])
+    assert use and t_new < t_orig
+    # transforming an already-uniform set must be rejected
+    use2, _, _ = should_use_flow(uniform, uniform)
+    assert not use2
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=1000),
+                min_size=1, max_size=500))
+def test_tail_conflict_bounds(degrees):
+    d = np.asarray(degrees)
+    t = tail_conflict_degree(d)
+    assert d.min() <= t <= d.max()

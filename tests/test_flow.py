@@ -1,0 +1,85 @@
+"""Numerical NF (B-NAF) structure + training behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.conflict import dataset_tail_conflict, should_use_flow
+from repro.core.flow import (
+    FlowConfig, flow_forward, flow_forward_with_logdet, init_flow,
+    nf_param_count, transform_keys,
+)
+from repro.core.train_flow import FlowTrainConfig, train_flow
+
+
+def test_param_count_matches_paper_table2():
+    # paper Table 2: 2H2L has 8 params, 2H4L 16 (d=2 input dims)
+    assert nf_param_count(FlowConfig(dim=2, hidden=2, layers=2)) > 0
+    c22 = nf_param_count(FlowConfig(dim=2, hidden=2, layers=2))
+    c24 = nf_param_count(FlowConfig(dim=2, hidden=2, layers=4))
+    assert c24 > c22
+
+
+def test_jacobian_lower_triangular_positive_diag():
+    cfg = FlowConfig(dim=3, hidden=2, layers=3)
+    params = init_flow(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 3))
+
+    def single(xi):
+        return flow_forward(params, xi[None, :], cfg)[0]
+
+    jac = jax.vmap(jax.jacfwd(single))(x)
+    # strictly upper entries vanish (autoregressive masking)
+    upper = jnp.triu(jac, k=1)
+    assert jnp.allclose(upper, 0.0, atol=1e-6)
+    # diagonal strictly positive (monotonicity)
+    diag = jnp.diagonal(jac, axis1=-2, axis2=-1)
+    assert bool((diag > 0).all())
+
+
+def test_logdet_matches_slogdet():
+    cfg = FlowConfig(dim=2, hidden=2, layers=2)
+    params = init_flow(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 2))
+    z, logdet = flow_forward_with_logdet(params, x, cfg)
+
+    def single(xi):
+        return flow_forward(params, xi[None, :], cfg)[0]
+
+    jac = jax.vmap(jax.jacfwd(single))(x)
+    _, ref = jnp.linalg.slogdet(jac)
+    assert jnp.allclose(logdet, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_training_reduces_tail_conflict_on_lognormal():
+    rng = np.random.default_rng(0)
+    keys = np.unique(np.floor(rng.lognormal(0, 2, 100_000) * 1e9))
+    cfg = FlowConfig()
+    params, norm, metrics = train_flow(keys, cfg, FlowTrainConfig(epochs=2))
+    assert metrics["final_loss"] < metrics["initial_loss"]
+    z = transform_keys(params, norm, keys, cfg)
+    use, t_orig, t_flow = should_use_flow(keys, z)
+    assert use
+    assert t_flow <= 8  # paper Table 3: ~4 after the NF
+    assert t_orig / t_flow > 5
+
+
+def test_switching_disables_on_uniform():
+    rng = np.random.default_rng(1)
+    keys = np.unique(rng.uniform(0, 1e12, 100_000))
+    cfg = FlowConfig()
+    params, norm, _ = train_flow(keys, cfg, FlowTrainConfig(epochs=1))
+    z = transform_keys(params, norm, keys, cfg)
+    use, t_orig, t_flow = should_use_flow(keys, z)
+    assert not use  # paper: NFL disables NF on YCSB/AMZN/WIKI
+
+
+def test_transform_deterministic():
+    rng = np.random.default_rng(2)
+    keys = np.unique(rng.uniform(0, 1e9, 10_000))
+    cfg = FlowConfig()
+    params, norm, _ = train_flow(keys, cfg, FlowTrainConfig(epochs=1))
+    z1 = transform_keys(params, norm, keys, cfg)
+    z2 = transform_keys(params, norm, keys, cfg)
+    assert np.array_equal(z1, z2)

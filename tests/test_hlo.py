@@ -1,0 +1,70 @@
+"""HLO collective parser + checkpoint module unit tests."""
+
+import numpy as np
+
+from repro.utils.hlo import collective_bytes, op_census
+
+
+SAMPLE = """
+%all-reduce.1 = f32[32,512]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups=[8,8]<=[64], use_global_device_ids=true, to_apply=%add
+%ag = bf16[64,128]{1,0} all-gather(%p0), channel_id=2, replica_groups=[4,16]<=[64], dimensions={0}
+%rs = f32[16,4]{1,0} reduce-scatter(%p1), channel_id=3, replica_groups=[2,32]<=[64], to_apply=%add
+%cp = bf16[8,8]{1,0} collective-permute(%p2), channel_id=4, source_target_pairs={{0,1}}
+%ard = f32[4]{0} all-reduce-done(%start)
+%ars = (f32[4]{0}, f32[4]{0}) all-reduce-start(%p3), channel_id=5, replica_groups=[1,64]<=[64], to_apply=%add
+%normal = f32[2,2]{1,0} add(%a, %b)
+"""
+
+
+def test_collective_bytes_formulas():
+    out = collective_bytes(SAMPLE)
+    # all-reduce: 2*(8-1)/8 * 32*512*4
+    assert np.isclose(out["all-reduce"],
+                      2 * 7 / 8 * 32 * 512 * 4 + 2 * 63 / 64 * 4 * 4 * 2)
+    # all-gather: (16-1)/16 * 64*128*2
+    assert np.isclose(out["all-gather"], 15 / 16 * 64 * 128 * 2)
+    # reduce-scatter: (32-1) * 16*4*4
+    assert np.isclose(out["reduce-scatter"], 31 * 16 * 4 * 4)
+    # collective-permute: result bytes
+    assert np.isclose(out["collective-permute"], 8 * 8 * 2)
+    assert out["n_all-reduce"] == 2  # -done not double counted
+    assert out["total"] > 0
+
+
+def test_op_census():
+    c = op_census(SAMPLE)
+    assert c.get("add", 0) >= 1
+
+
+def test_checkpoint_atomic_and_gc(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.train import checkpoint as ck
+
+    tree = {"a": jnp.arange(5), "b": {"c": jnp.ones((2, 2))}}
+    for step in (1, 2, 3, 4):
+        ck.save(str(tmp_path), step, tree, extra={"x": step}, keep=2)
+    assert ck.latest_step(str(tmp_path)) == 4
+    # keep=2 retention
+    import os
+
+    kept = sorted(os.listdir(tmp_path))
+    assert len([k for k in kept if k.startswith("step_")]) == 2
+    step, restored, extra = ck.restore_latest(str(tmp_path), tree)
+    assert step == 4 and extra["x"] == 4
+    assert np.array_equal(np.asarray(restored["a"]), np.arange(5))
+    # a step dir without COMMIT must be ignored
+    bad = tmp_path / "step_00000099"
+    bad.mkdir()
+    assert ck.latest_step(str(tmp_path)) == 4
+
+
+def test_checkpoint_async(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.train import checkpoint as ck
+
+    tree = {"w": jnp.full((128, 128), 3.0)}
+    ck.save_async(str(tmp_path), 7, tree)
+    ck.wait_pending(str(tmp_path))
+    assert ck.latest_step(str(tmp_path)) == 7

@@ -1,0 +1,70 @@
+"""NFL end-to-end: the two-stage framework on paper-style workloads."""
+
+import numpy as np
+import pytest
+
+from repro.core.nfl import NFL, NFLConfig
+from repro.core.train_flow import FlowTrainConfig
+from repro.data.datasets import make_dataset
+
+
+def _nfl(epochs=1):
+    return NFL(NFLConfig(flow_train=FlowTrainConfig(epochs=epochs)))
+
+
+def test_nfl_on_skewed_uses_flow_and_is_correct():
+    keys = make_dataset("lognormal", 40_000)
+    pv = np.arange(len(keys), dtype=np.int64)
+    nfl = _nfl()
+    nfl.bulkload(keys[::2], pv[::2])
+    assert nfl.use_flow  # paper: NF enabled on high-conflict sets
+    assert nfl.metrics["tail_conflict_transformed"] < nfl.metrics["tail_conflict_original"]
+    res = nfl.lookup_batch(keys[::2][:5000])
+    assert np.array_equal(res, pv[::2][:5000])
+    # misses
+    assert (nfl.lookup_batch(keys[1::2][:1000]) == -1).all()
+
+
+def test_nfl_on_uniform_disables_flow():
+    keys = make_dataset("ycsb", 40_000)
+    pv = np.arange(len(keys), dtype=np.int64)
+    nfl = _nfl()
+    nfl.bulkload(keys, pv)
+    assert not nfl.use_flow  # paper §4.2: switching disables NF on YCSB
+    assert np.array_equal(nfl.lookup_batch(keys[:5000]), pv[:5000])
+
+
+def test_nfl_insert_update_delete():
+    keys = make_dataset("longlat", 20_000)
+    pv = np.arange(len(keys), dtype=np.int64)
+    nfl = _nfl()
+    nfl.bulkload(keys[::2], pv[::2])
+    nfl.insert_batch(keys[1::2][:2000], pv[1::2][:2000])
+    assert np.array_equal(nfl.lookup_batch(keys[1::2][:2000]), pv[1::2][:2000])
+    ok = nfl.update_batch(keys[::2][:100], np.arange(100) + 5_000_000)
+    assert ok.all()
+    assert np.array_equal(nfl.lookup_batch(keys[::2][:100]),
+                          np.arange(100) + 5_000_000)
+    ok = nfl.delete_batch(keys[::2][100:150])
+    assert ok.all()
+    assert (nfl.lookup_batch(keys[::2][100:150]) == -1).all()
+
+
+def test_nfl_tail_conflict_stays_low_after_inserts():
+    # paper Table 3 direction: tail conflict ~4 after the NF, index stays
+    # correct through the running phase.  Our synthetic facebook is multi-
+    # scale beyond what the paper's 2-dim expansion resolves (tail 2482 ->
+    # 650); the beyond-paper d=3 expansion resolves it (-> ~8, see
+    # EXPERIMENTS.md §Perf), so that's what this workload uses.
+    from repro.core.flow import FlowConfig
+
+    keys = make_dataset("facebook", 30_000)
+    pv = np.arange(len(keys), dtype=np.int64)
+    nfl = NFL(NFLConfig(flow=FlowConfig(dim=3),
+                        flow_train=FlowTrainConfig(epochs=2)))
+    nfl.bulkload(keys[::2], pv[::2])
+    nfl.insert_batch(keys[1::2], pv[1::2])
+    res = nfl.lookup_batch(keys)
+    assert np.array_equal(res, pv)
+    assert nfl.use_flow
+    assert nfl.metrics["tail_conflict_transformed"] <= 16

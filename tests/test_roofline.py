@@ -1,0 +1,92 @@
+"""Roofline machinery: probe math, hardware model, report generation."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.utils.roofline import (ARTIFACT_DIR, PROBE_DIR, HBM_BW, LINK_BW,
+                                  PEAK_FLOPS, analyze_artifact,
+                                  corrected_totals, flash_onchip_bytes,
+                                  model_flops, probe_config, probe_depths)
+
+HAVE_ARTIFACTS = os.path.isdir(ARTIFACT_DIR) and os.listdir(ARTIFACT_DIR)
+
+
+def test_probe_depths_honour_group_structure():
+    from repro.configs import get_config
+
+    assert probe_depths(get_config("internlm2-1.8b")) == (1, 2)
+    assert probe_depths(get_config("zamba2-2.7b")) == (6, 12)      # hybrid
+    assert probe_depths(get_config("llama-3.2-vision-11b")) == (5, 10)
+
+
+def test_probe_config_removes_loops():
+    from repro.configs import get_config
+
+    cfg = probe_config(get_config("arctic-480b"), 2)
+    assert cfg.n_layers == 2
+    assert not cfg.scan_layers
+    assert cfg.loss_chunk >= 1 << 20
+    assert cfg.attn_chunk_q >= 1 << 20
+    assert cfg.moe.token_chunk >= 1 << 30
+
+
+def test_model_flops_formulas():
+    art = {"arch": "internlm2-1.8b", "shape": "train_4k"}
+    from repro.configs import get_config
+
+    n = get_config("internlm2-1.8b").active_param_count()
+    assert model_flops(art) == pytest.approx(6.0 * n * 256 * 4096)
+    art2 = {"arch": "internlm2-1.8b", "shape": "decode_32k"}
+    assert model_flops(art2) == pytest.approx(2.0 * n * 128)
+
+
+def test_flash_onchip_bytes_zero_for_ssm_and_decode():
+    assert flash_onchip_bytes("falcon-mamba-7b", "train_4k", 256) == 0.0
+    assert flash_onchip_bytes("qwen3-14b", "decode_32k", 256) == 0.0
+    assert flash_onchip_bytes("qwen3-14b", "train_4k", 256) > 0.0
+
+
+def test_corrected_totals_without_probe_falls_back():
+    art = {"arch": "internlm2-1.8b", "shape": "train_4k", "n_devices": 256,
+           "flops_total": 1e12, "bytes_accessed_total": 1e11,
+           "collective_bytes": {"total": 1e9}}
+    out = corrected_totals(art, None)
+    assert out["flops"] == 1e12 and not out["corrected"]
+
+
+@pytest.mark.skipif(not HAVE_ARTIFACTS, reason="no dry-run artifacts")
+def test_analyze_every_artifact():
+    """Every saved artifact must analyze without error and report finite,
+    consistent terms."""
+    for fn in sorted(os.listdir(ARTIFACT_DIR)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(ARTIFACT_DIR, fn)) as f:
+            art = json.load(f)
+        r = analyze_artifact(art)
+        assert r["bound"] in ("compute", "memory", "collective"), fn
+        for k in ("compute_s", "memory_s", "collective_s"):
+            assert np.isfinite(r[k]) and r[k] >= 0, (fn, k)
+        assert r["step_s"] == max(r["compute_s"], r["memory_s"],
+                                  r["collective_s"])
+        assert 0 <= r["roofline_frac"] <= 1.5, fn  # ~1 allows fp slack
+
+
+@pytest.mark.skipif(not HAVE_ARTIFACTS, reason="no dry-run artifacts")
+def test_report_tables_render():
+    from repro.utils.report import dryrun_table, roofline_table
+
+    dry = dryrun_table()
+    roof = roofline_table()
+    assert dry.count("|") > 100
+    assert "**" in dry       # bound/fit emphasis markers
+    assert "roofline frac" in roof.splitlines()[0]
+
+
+def test_hardware_constants_sane():
+    assert PEAK_FLOPS == 197e12
+    assert HBM_BW == 819e9
+    assert LINK_BW == 50e9

@@ -1,0 +1,87 @@
+"""Sharding rules + small-mesh dry-run machinery (subprocess: 8 devices)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.dist.sharding import LOGICAL_RULES, logical_to_spec, guarded_spec
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+
+
+def test_logical_to_spec_filters_missing_axes():
+    mesh = _FakeMesh({"data": 4, "model": 2})
+    spec = logical_to_spec(("batch", None, "mlp"), mesh)
+    assert spec == __import__("jax").sharding.PartitionSpec("data", None, "model")
+
+
+def test_logical_to_spec_multi_axis_batch():
+    mesh = _FakeMesh({"pod": 2, "data": 4, "model": 2})
+    spec = logical_to_spec(("batch",), mesh)
+    assert spec[0] == ("pod", "data")
+
+
+def test_guarded_spec_drops_indivisible():
+    mesh = _FakeMesh({"data": 4, "model": 2})
+    # batch of 1 cannot shard 4 ways -> dropped
+    spec = guarded_spec((1, 8), ("batch", "mlp"), mesh)
+    assert spec[0] is None and spec[1] == "model"
+    spec2 = guarded_spec((8, 7), ("batch", "mlp"), mesh)
+    assert spec2[0] == "data" and spec2[1] is None
+
+
+def test_no_duplicate_mesh_axes_in_one_spec():
+    mesh = _FakeMesh({"data": 4, "model": 2})
+    spec = logical_to_spec(("batch", "fsdp"), mesh)  # both map to data
+    used = [s for s in spec if s is not None]
+    flat = []
+    for s in used:
+        flat.extend(s if isinstance(s, tuple) else [s])
+    assert len(flat) == len(set(flat))
+
+
+DRYRUN_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, json
+from repro.launch.dryrun import dryrun_cell
+from repro.launch.mesh import make_mesh_shape
+import repro.launch.dryrun as dd
+import repro.configs as C
+
+# shrink to smoke-scale for a fast 8-device compile
+orig = dd.get_config
+dd.get_config = lambda a, smoke=False: C.get_config(a, smoke=True)
+mesh = make_mesh_shape((2, 2, 2), ("pod", "data", "model"))
+res = dryrun_cell("internlm2-1.8b", "train_4k", multi_pod=True, save=False,
+                  mesh=mesh)
+print("RESULT", json.dumps({"flops": res["flops_total"],
+                            "coll": res["collective_bytes"].get("total", 0)}))
+"""
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_subprocess():
+    """End-to-end dry-run machinery on a (2,2,2) mesh in a subprocess (the
+    512-device env var must not leak into this test process)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", DRYRUN_SNIPPET], capture_output=True,
+        text=True, cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")][0]
+    payload = json.loads(line[len("RESULT "):])
+    assert payload["flops"] > 0
+    assert payload["coll"] > 0  # gradient reductions must exist on a mesh

@@ -1,0 +1,146 @@
+"""Training loop: loss goes down, checkpoint/restart, straggler watchdog."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokens import SyntheticTokens
+from repro.models.model import build_model
+from repro.train.optimizer import (AdafactorConfig, AdamWConfig,
+                                   adafactor_init, adafactor_update,
+                                   adamw_init, adamw_update)
+from repro.train.schedule import ScheduleConfig
+from repro.train.train_step import TrainConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _quadratic_losses(opt_cfg, init_fn, update_fn, steps=60):
+    params = {"w": jnp.array([3.0, -2.0, 1.0]), "b": jnp.full((4, 256), 2.0)}
+    state = init_fn(params)
+    losses = []
+    for _ in range(steps):
+        loss, grads = jax.value_and_grad(
+            lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2))(params)
+        params, state, _ = update_fn(grads, state, params)
+        losses.append(float(loss))
+    return losses
+
+
+def test_adamw_converges():
+    cfg = AdamWConfig(lr=0.1)
+    losses = _quadratic_losses(
+        cfg, lambda p: adamw_init(p, cfg),
+        lambda g, s, p: adamw_update(g, s, p, cfg))
+    assert losses[-1] < losses[0] * 0.05
+
+
+def test_adafactor_converges():
+    cfg = AdafactorConfig(lr=0.3, min_dim_factored=4)
+    losses = _quadratic_losses(
+        cfg, lambda p: adafactor_init(p, cfg),
+        lambda g, s, p: adafactor_update(g, s, p, cfg))
+    assert losses[-1] < losses[0] * 0.2
+
+
+def test_adafactor_state_is_factored():
+    cfg = AdafactorConfig(min_dim_factored=8)
+    params = {"w": jnp.zeros((16, 32)), "tiny": jnp.zeros((3,))}
+    st = adafactor_init(params, cfg)
+    assert st.vr["w"].shape == (16,)
+    assert st.vc["w"].shape == (32,)
+    assert st.vr["tiny"].shape == (3,)
+
+
+def _make_trainer(tmp_path, steps_cfg=None, ckpt=True):
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = build_model(cfg)
+    data = SyntheticTokens(vocab=cfg.vocab, seq=32, local_batch=4)
+    tcfg = TrainerConfig(
+        train=TrainConfig(
+            optimizer=AdamWConfig(lr=5e-3),
+            schedule=ScheduleConfig(peak_lr=5e-3, warmup_steps=5,
+                                    total_steps=100),
+        ),
+        ckpt_dir=str(tmp_path / "ckpt") if ckpt else None,
+        ckpt_every=5,
+        log_every=100,
+    )
+    return Trainer(model, tcfg, data), data
+
+
+def test_loss_decreases(tmp_path):
+    trainer, _ = _make_trainer(tmp_path, ckpt=False)
+    out = trainer.run(60)
+    first = np.mean([m["loss"] for m in trainer.metrics_log[:4]])
+    last = np.mean([m["loss"] for m in trainer.metrics_log[-8:]])
+    assert last < first - 0.15, (first, last)
+
+
+def test_checkpoint_restart_resumes_exactly(tmp_path):
+    trainer, _ = _make_trainer(tmp_path)
+    trainer.run(10)
+    params_a = jax.tree.map(np.asarray, trainer.state.params)
+
+    # simulate failure: fresh trainer restores from the checkpoint
+    trainer2, data2 = _make_trainer(tmp_path)
+    start = trainer2.initialize()
+    assert start == 10
+    assert data2.step == 10  # data pipeline state restored
+    params_b = jax.tree.map(np.asarray, trainer2.state.params)
+    for a, b in zip(jax.tree.leaves(params_a), jax.tree.leaves(params_b)):
+        assert np.array_equal(np.asarray(a, np.float32),
+                              np.asarray(b, np.float32))
+
+
+def test_restart_training_continues(tmp_path):
+    trainer, _ = _make_trainer(tmp_path)
+    trainer.run(8)
+    trainer2, _ = _make_trainer(tmp_path)
+    out = trainer2.run(16)
+    assert out["final_step"] == 16
+    steps = [m["step"] for m in trainer2.metrics_log]
+    assert steps[0] == 8  # resumed, not restarted
+
+
+def test_straggler_watchdog():
+    import time
+
+    from repro.train.trainer import Trainer
+
+    t = Trainer.__new__(Trainer)
+    t.cfg = TrainerConfig(straggler_z=3.0)
+    t.straggler_events = []
+    t._step_time_ema = None
+    t._step_time_var = 0.0
+    for i in range(20):
+        t._watchdog(i, 0.1 + 0.001 * (i % 3))
+    t._watchdog(20, 5.0)  # a 50x step: must be flagged
+    assert len(t.straggler_events) == 1
+    assert t.straggler_events[0]["step"] == 20
+
+
+def test_microbatched_step_matches_full_batch():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = build_model(cfg)
+    from repro.train.train_step import init_train_state, make_train_step
+
+    rng = jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab),
+        "targets": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0, cfg.vocab),
+    }
+    losses = {}
+    for m in (1, 4):
+        tcfg = TrainConfig(microbatches=m)
+        state = init_train_state(model, rng, tcfg)
+        step = jax.jit(make_train_step(model, tcfg))
+        state, metrics = step(state, batch)
+        losses[m] = jax.tree.map(np.asarray, state.params)
+    for a, b in zip(jax.tree.leaves(losses[1]), jax.tree.leaves(losses[4])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-2, atol=5e-4)
