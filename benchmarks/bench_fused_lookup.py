@@ -1,0 +1,148 @@
+"""Fused single-dispatch lookup vs the two-dispatch serving path.
+
+The workload is the ISSUE-1 acceptance shape: >= 64k flow-positioned keys,
+4k-query read-only batches.  Three timed variants over identical inputs:
+
+* ``two_dispatch``   — the pre-fusion production path: ``nf_transform_keys``
+  (NF Pallas kernel + host round trip) followed by the pure-jnp
+  ``flat_lookup`` traversal (a second device dispatch);
+* ``fused``          — ONE ``pallas_call``: in-kernel NF forward +
+  multi-level traversal (``kernels/fused_lookup``);
+* ``traversal_only`` — both traversal variants on pre-transformed keys
+  (isolates the dispatch/fusion win from the NF cost).
+
+Results (wall clock + dispatch counts + correctness cross-check) go to
+``BENCH_fused_lookup.json`` so the perf trajectory is machine-readable.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import List, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.feature import expand_features
+from repro.core.flat_afli import FlatAFLI, flat_lookup, split_key_bits
+from repro.core.flow import FlowConfig
+from repro.core.nfl import NFL
+from repro.core.train_flow import FlowTrainConfig, train_flow
+from repro.data.datasets import make_dataset
+from repro.kernels import ops
+from repro.kernels.nf_forward import nf_forward_pallas
+
+DEFAULT_OUT = "BENCH_fused_lookup.json"
+
+
+def _best_s(fn, repeats: int) -> float:
+    fn()  # warm the jit/pallas caches outside the timed region
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n_keys: int = 65_536, n_queries: int = 4_096, repeats: int = 9,
+        out_json: str = DEFAULT_OUT):
+    keys = make_dataset("lognormal", n_keys)
+    pv = np.arange(len(keys), dtype=np.int64)
+
+    cfg = FlowConfig(dim=3)
+    params, norm, _ = train_flow(keys, cfg, FlowTrainConfig(epochs=1))
+    z_build = ops.nf_transform_keys(params, norm, keys, cfg)
+    idx = FlatAFLI()
+    idx.build(z_build, pv, ikeys=keys)
+    packed_w, shapes = NFL._pack_weights_for(params, cfg)
+
+    rng = np.random.default_rng(0)
+    q = rng.choice(keys, size=n_queries, replace=False)
+    feats = expand_features(q, norm, cfg.dim, cfg.theta, dtype=np.float32)
+    hi, lo = split_key_bits(q)
+    hi_j, lo_j = jnp.asarray(hi), jnp.asarray(lo)
+    kw = dict(max_depth=idx.max_depth,
+              dense_iters=idx.cfg.dense_search_iters,
+              bucket_cap=idx.cfg.max_bucket,
+              dense_window=idx._dense_window_static())
+
+    # both serving variants start from raw query keys: host feature
+    # expansion is a shared cost, what differs is everything after it
+    def two_dispatch():
+        z = ops.nf_transform_keys(params, norm, q, cfg)  # dispatch 1 + host
+        res = flat_lookup(idx.arrays, jnp.asarray(z.astype(np.float32)),
+                          hi_j, lo_j, **kw)              # dispatch 2
+        return np.asarray(res)
+
+    def fused():
+        f = expand_features(q, norm, cfg.dim, cfg.theta, dtype=np.float32)
+        res, _z, _info = ops.fused_lookup(
+            idx.arrays, idx._kernel_pools(), jnp.asarray(f), hi_j, lo_j,
+            flow=(packed_w, shapes), **kw)
+        return res
+
+    # traversal-only pair: identical pre-transformed inputs
+    z32 = jnp.asarray(np.asarray(
+        nf_forward_pallas(jnp.asarray(feats), packed_w, shapes, cfg.dim)))
+
+    def traversal_oracle():
+        return np.asarray(flat_lookup(idx.arrays, z32, hi_j, lo_j, **kw))
+
+    def traversal_fused():
+        res, _z, _info = ops.fused_lookup(
+            idx.arrays, idx._kernel_pools(),
+            z32.reshape(-1, 1), hi_j, lo_j, flow=None, **kw)
+        return res
+
+    # correctness cross-check before timing
+    r_two, r_fused = two_dispatch(), fused()
+    if not np.array_equal(r_two, r_fused):
+        raise AssertionError("fused path diverged from two-dispatch path")
+    hit_frac = float((r_fused >= 0).mean())
+
+    t_two = _best_s(two_dispatch, repeats)
+    t_fused = _best_s(fused, repeats)
+    t_trav_o = _best_s(traversal_oracle, repeats)
+    t_trav_f = _best_s(traversal_fused, repeats)
+
+    results = {
+        "workload": {"n_keys": int(len(keys)), "n_queries": int(n_queries),
+                     "mix": "read_only", "dataset": "lognormal",
+                     "flow_dim": cfg.dim, "repeats": repeats,
+                     "backend": "interpret" if ops.should_interpret()
+                     else "tpu",
+                     "hit_fraction": hit_frac,
+                     "pool_bytes": ops.pool_nbytes(idx._kernel_pools()),
+                     "max_depth": idx.max_depth},
+        "two_dispatch": {"wall_s": t_two, "n_dispatch": 2,
+                         "us_per_query": t_two / n_queries * 1e6},
+        "fused": {"wall_s": t_fused, "n_dispatch": 1,
+                  "us_per_query": t_fused / n_queries * 1e6},
+        "traversal_only": {
+            "oracle_wall_s": t_trav_o, "fused_wall_s": t_trav_f,
+            "speedup": t_trav_o / t_trav_f if t_trav_f else float("nan")},
+        "speedup_fused_vs_two_dispatch": t_two / t_fused,
+        "identical_results": True,
+    }
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(results, f, indent=2)
+    print(f"[fused_lookup] keys={len(keys)} queries={n_queries} "
+          f"two_dispatch={t_two*1e3:.2f}ms fused={t_fused*1e3:.2f}ms "
+          f"speedup={t_two/t_fused:.2f}x "
+          f"(traversal-only {t_trav_o/t_trav_f:.2f}x)")
+    return results
+
+
+def rows(results) -> List[Tuple]:
+    n = results["workload"]["n_queries"]
+    return [
+        ("perf_fused_lookup/two_dispatch",
+         results["two_dispatch"]["wall_s"] / n * 1e6, "n_dispatch=2"),
+        ("perf_fused_lookup/fused",
+         results["fused"]["wall_s"] / n * 1e6,
+         f"n_dispatch=1;speedup="
+         f"{results['speedup_fused_vs_two_dispatch']:.2f}"),
+    ]

@@ -21,60 +21,39 @@ DEFAULT_MIXES = ["read_only", "read_heavy", "write_heavy", "write_only"]
 
 
 class FlatNFLAdapter:
-    """Beyond-paper serving path: NF transform + FlatAFLI vectorized probes
-    (one XLA call per request batch instead of a python tree walk) with
-    log-structured inserts.  §Perf hillclimb 3."""
+    """Beyond-paper serving path: the fused single-dispatch Pallas kernel —
+    NF forward + multi-level FlatAFLI traversal in one ``pallas_call`` per
+    request batch (DESIGN.md §9) — with log-structured inserts.
+    §Perf hillclimb 3."""
 
     def __init__(self, dim: int = 3):
-        from repro.core.flat_afli import FlatAFLI
         from repro.core.flow import FlowConfig
 
-        self.flow_cfg = FlowConfig(dim=dim)
-        self.idx = FlatAFLI()
-        self._flow = None
+        self.nfl = NFL(NFLConfig(flow=FlowConfig(dim=dim),
+                                 flow_train=FlowTrainConfig(epochs=1),
+                                 backend="flat"))
+
+    @property
+    def idx(self):
+        return self.nfl.index
 
     def bulkload(self, keys, payloads):
-        from repro.core.conflict import should_use_flow
-        from repro.core.flow import transform_keys
-        from repro.core.train_flow import train_flow
-
-        params, norm, _ = train_flow(keys, self.flow_cfg,
-                                     FlowTrainConfig(epochs=1))
-        z = transform_keys(params, norm, keys, self.flow_cfg)
-        use, _, _ = should_use_flow(keys, z)
-        self._flow = (params, norm) if use else None
-        if use:
-            self.idx.build(z, payloads, ikeys=keys)
-        else:
-            self.idx.build(keys, payloads)
-
-    def _pk(self, keys):
-        if self._flow is None:
-            return np.asarray(keys, np.float64)
-        from repro.core.flow import transform_keys
-
-        return transform_keys(self._flow[0], self._flow[1], keys,
-                              self.flow_cfg)
+        self.nfl.bulkload(keys, payloads)
 
     def lookup_batch(self, keys):
-        if self._flow is None:
-            return self.idx.lookup_batch(keys)
-        return self.idx.lookup_batch(self._pk(keys), ikeys=keys)
+        return self.nfl.lookup_batch(keys)
 
     def insert_batch(self, keys, payloads):
-        if self._flow is None:
-            self.idx.insert_batch(keys, payloads)
-        else:
-            self.idx.insert_batch(self._pk(keys), payloads, ikeys=keys)
+        self.nfl.insert_batch(keys, payloads)
 
     def size_bytes(self):
-        a = self.idx.arrays
+        a = self.nfl.index.arrays
         if a is None:
             return 0
         return int(sum(x.size * x.dtype.itemsize for x in a))
 
     def stats(self):
-        return self.idx.stats()
+        return self.nfl.index.stats()
 
 
 class AFLIAdapter:

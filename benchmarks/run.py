@@ -19,13 +19,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,fig10,fig11,table1,table2,"
-                         "table3,roofline")
+                         "table3,roofline,fused")
     ap.add_argument("--n-keys", type=int, default=None)
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (bench_alex_nf, bench_bulkload, bench_conflict,
-                            bench_index_size, bench_latency, bench_nf_latency,
+                            bench_fused_lookup, bench_index_size,
+                            bench_latency, bench_nf_latency,
                             bench_probe_batch, bench_roofline,
                             bench_throughput)
     from benchmarks.common import ALL_DATASETS, DEFAULT_DATASETS
@@ -57,6 +58,10 @@ def main() -> None:
     if want("table3"):
         rows += bench_conflict.rows(bench_conflict.run(
             n_keys=n_keys, datasets=datasets if not args.full else None))
+    if want("fused"):
+        # also emits machine-readable BENCH_fused_lookup.json
+        rows += bench_fused_lookup.rows(bench_fused_lookup.run(
+            n_keys=max(n_keys, 65_536) if args.full else 65_536))
     if want("roofline"):
         rows += bench_roofline.rows(bench_roofline.run())
 

@@ -65,6 +65,8 @@ class FlatAFLIConfig:
     max_depth: int = 16
     dense_search_iters: int = 24      # binary-search rounds (2^24 max dense)
     rebuild_frac: float = 0.25        # delta/total ratio triggering rebuild
+    use_fused_kernel: bool = True     # serve via kernels/fused_lookup
+    vmem_budget: Optional[int] = None  # pool-bytes cap; None -> backend default
 
 
 class FlatArrays(NamedTuple):
@@ -86,6 +88,41 @@ class FlatArrays(NamedTuple):
     blo: jnp.ndarray              # u32[B, cap]
     bpayload: jnp.ndarray         # i32[B, cap]
     blen: jnp.ndarray             # i32[B]
+
+    def to_kernel_args(self, lane: int = 128):
+        """Pack the pools for ``kernels/fused_lookup``: u8 type codes cast
+        to i32 and every pool's leading dim padded to a lane multiple
+        (padding is never addressed — all traversal indices stay in the
+        built range).  Bucket arrays stay [B, cap] so the in-kernel scan
+        is one row gather per level, as in the oracle."""
+        from repro.kernels.fused_lookup import KernelPools
+
+        def pad1(x):
+            x = np.asarray(x)
+            n = x.shape[0]
+            m = ((n + lane - 1) // lane) * lane
+            if m != n:
+                pad = [(0, m - n)] + [(0, 0)] * (x.ndim - 1)
+                x = np.pad(x, pad)
+            return jnp.asarray(x)
+
+        return KernelPools(
+            node_kind=pad1(np.asarray(self.node_kind).astype(np.int32)),
+            node_slope=pad1(self.node_slope),
+            node_intercept=pad1(self.node_intercept),
+            node_offset=pad1(self.node_offset),
+            node_size=pad1(self.node_size),
+            etype=pad1(np.asarray(self.etype).astype(np.int32)),
+            ekey=pad1(self.ekey),
+            ehi=pad1(self.ehi),
+            elo=pad1(self.elo),
+            epayload=pad1(self.epayload),
+            echild=pad1(self.echild),
+            bhi=pad1(self.bhi),
+            blo=pad1(self.blo),
+            bpayload=pad1(self.bpayload),
+            blen=pad1(self.blen),
+        )
 
 
 class _Builder:
@@ -341,6 +378,8 @@ class FlatAFLI:
     def __init__(self, cfg: FlatAFLIConfig | None = None):
         self.cfg = cfg or FlatAFLIConfig()
         self.arrays: Optional[FlatArrays] = None
+        self._kpools = None            # cached to_kernel_args() packing
+        self.last_dispatch = {}        # ops.fused_lookup info of last probe
         self.max_depth = 1
         self.d_tail = self.cfg.min_bucket
         self.n_keys = 0
@@ -378,26 +417,59 @@ class FlatAFLI:
         builder = _Builder(self.cfg, self.d_tail)
         builder.build(pk32, hi, lo, pv.astype(np.int64))
         self.arrays = builder.finalize()
+        self._kpools = None
         self.max_depth = builder.max_depth + 1
         self.n_keys = int(pk32.shape[0])
         self.dense_window = _max_equal_run(pk32) + 2
         self._self_verify(pk32, hi, lo, pv.astype(np.int32))
 
+    # ---------------------------------------------------- device dispatch
+    def _kernel_pools(self):
+        """Lazily packed, cached kernel pools (invalidated on rebuild)."""
+        if self._kpools is None:
+            self._kpools = self.arrays.to_kernel_args()
+        return self._kpools
+
+    def _dense_window_static(self) -> int:
+        """Duplicate-run scan window, rounded up to a power of two so the
+        kernel compile count stays bounded across rebuilds.  Scanning
+        further than the exact run length is semantically free: the scan
+        matches by exact 64-bit identity, so extra positions can only find
+        the one true entry."""
+        w = int(getattr(self, "dense_window", 8))
+        return max(4, 1 << max(w - 1, 0).bit_length())
+
+    def _depth_static(self) -> int:
+        """Traversal depth bound rounded up to a multiple of 4: the level
+        loop exits as soon as every query is done, so a larger static
+        bound costs nothing at runtime but keeps rebuild-churned trees
+        (whose exact height moves by one) on a handful of compiled
+        kernels."""
+        return ((int(self.max_depth) + 3) // 4) * 4
+
     def _device_lookup(self, pk32: np.ndarray, hi: np.ndarray,
                        lo: np.ndarray) -> np.ndarray:
+        from repro.kernels import ops
+
         # pad to power-of-two buckets: ragged request batches would
-        # recompile the traversal while-loop per distinct size
+        # recompile the kernel / traversal loop per distinct size
         n = pk32.shape[0]
         n_pad = max(1 << max(n - 1, 0).bit_length(), 64)
         if n_pad != n:
             pk32 = np.pad(pk32, (0, n_pad - n))
             hi = np.pad(hi, (0, n_pad - n))
             lo = np.pad(lo, (0, n_pad - n))
-        res = flat_lookup(self.arrays, jnp.asarray(pk32), jnp.asarray(hi),
-                          jnp.asarray(lo), max_depth=self.max_depth,
-                          dense_iters=self.cfg.dense_search_iters,
-                          bucket_cap=self.cfg.max_bucket,
-                          dense_window=getattr(self, "dense_window", 8))
+        res, _z, self.last_dispatch = ops.fused_lookup(
+            self.arrays, self._kernel_pools,
+            jnp.asarray(np.ascontiguousarray(pk32).reshape(-1, 1)),
+            jnp.asarray(hi), jnp.asarray(lo), flow=None,
+            max_depth=self._depth_static(),
+            dense_iters=self.cfg.dense_search_iters,
+            bucket_cap=self.cfg.max_bucket,
+            dense_window=self._dense_window_static(),
+            vmem_budget=self.cfg.vmem_budget
+            if self.cfg.use_fused_kernel else 0,
+        )
         return np.array(res)[:n]
 
     def _self_verify(self, pk32, hi, lo, pv) -> None:
@@ -425,6 +497,33 @@ class FlatAFLI:
         self._delta_lo, self._delta_pv = mlo[order], mpv[order]
 
     # ------------------------------------------------------------- lookup
+    def _probe_delta(self, res: np.ndarray, q32: np.ndarray,
+                     qhi: np.ndarray, qlo: np.ndarray) -> np.ndarray:
+        """Resolve still-missing queries against the sorted delta run
+        (host searchsorted; exact identity compares only)."""
+        if not self._delta_pk.shape[0]:
+            return res
+        miss = res < 0
+        if not miss.any():
+            return res
+        q = q32[miss]
+        mhi, mlo = qhi[miss], qlo[miss]
+        j = np.searchsorted(self._delta_pk, q, side="left")
+        j_hi = np.searchsorted(self._delta_pk, q, side="right")
+        found = np.full(q.shape[0], -1, np.int64)
+        window = int(max((j_hi - j).max(initial=0), 1))
+        for w in range(window):  # duplicate-pkey window
+            jj = np.clip(j + w, 0, self._delta_pk.shape[0] - 1)
+            ok = (
+                (self._delta_pk[jj] == q)
+                & (self._delta_hi[jj] == mhi)
+                & (self._delta_lo[jj] == mlo)
+                & (found < 0)
+            )
+            found = np.where(ok, self._delta_pv[jj], found)
+        res[miss] = np.where(found >= 0, found, res[miss])
+        return res
+
     def lookup_batch(self, keys: np.ndarray,
                      ikeys: np.ndarray | None = None) -> np.ndarray:
         """keys: positioning keys (must match build-time pkeys); ikeys:
@@ -432,28 +531,67 @@ class FlatAFLI:
         k64 = np.asarray(keys, dtype=np.float64)
         ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
         hi, lo = split_key_bits(ik64)
-        res = self._device_lookup(k64.astype(np.float32), hi, lo)
-        if self._delta_pk.shape[0]:
-            # probe the delta run for still-missing keys (host searchsorted)
-            miss = res < 0
-            if miss.any():
-                q = k64[miss].astype(np.float32)
-                j = np.searchsorted(self._delta_pk, q, side="left")
-                qhi, qlo = split_key_bits(ik64[miss])
-                found = np.full(q.shape[0], -1, np.int64)
-                j_hi = np.searchsorted(self._delta_pk, q, side="right")
-                window = int(max((j_hi - j).max(initial=0), 1))
-                for w in range(window):  # duplicate-pkey window
-                    jj = np.clip(j + w, 0, self._delta_pk.shape[0] - 1)
-                    ok = (
-                        (self._delta_pk[jj] == q)
-                        & (self._delta_hi[jj] == qhi)
-                        & (self._delta_lo[jj] == qlo)
-                        & (found < 0)
-                    )
-                    found = np.where(ok, self._delta_pv[jj], found)
-                res[miss] = np.where(found >= 0, found, res[miss])
-        return res
+        q32 = k64.astype(np.float32)
+        res = self._device_lookup(q32, hi, lo)
+        return self._probe_delta(res, q32, hi, lo)
+
+    def _flow_device_lookup(self, feats: np.ndarray, hi: np.ndarray,
+                            lo: np.ndarray, packed_w, shapes):
+        """Fused NF + traversal dispatch; returns (payloads, serve pkeys)."""
+        from repro.kernels import ops
+
+        n = feats.shape[0]
+        n_pad = max(1 << max(n - 1, 0).bit_length(), 64)
+        if n_pad != n:
+            feats = np.pad(feats, ((0, n_pad - n), (0, 0)))
+            hi = np.pad(hi, (0, n_pad - n))
+            lo = np.pad(lo, (0, n_pad - n))
+        res, z, self.last_dispatch = ops.fused_lookup(
+            self.arrays, self._kernel_pools,
+            jnp.asarray(feats, jnp.float32), jnp.asarray(hi),
+            jnp.asarray(lo), flow=(packed_w, shapes),
+            max_depth=self._depth_static(),
+            dense_iters=self.cfg.dense_search_iters,
+            bucket_cap=self.cfg.max_bucket,
+            dense_window=self._dense_window_static(),
+            vmem_budget=self.cfg.vmem_budget
+            if self.cfg.use_fused_kernel else 0,
+        )
+        return np.array(res)[:n], np.asarray(z)[:n]
+
+    def lookup_batch_flow(self, feats: np.ndarray, ikeys: np.ndarray,
+                          packed_w, shapes) -> np.ndarray:
+        """Single-dispatch serving for flow-positioned indexes: one Pallas
+        call runs the NF forward AND the traversal (DESIGN.md §9).
+
+        feats: [n, d] f32 expanded query features (``expand_features`` of
+        the raw keys); ikeys: f64 identity keys; packed_w/shapes: the
+        ``pack_flow_weights`` block of the flow that positioned the build.
+        The kernel also emits the transformed positioning keys, which feed
+        the host-side delta-run probe.
+        """
+        ik64 = np.asarray(ikeys, dtype=np.float64)
+        hi, lo = split_key_bits(ik64)
+        res, z = self._flow_device_lookup(feats, hi, lo, packed_w, shapes)
+        return self._probe_delta(res, z, hi, lo)
+
+    def verify_serve_flow(self, feats: np.ndarray, ikeys: np.ndarray,
+                          packed_w, shapes, payloads: np.ndarray) -> int:
+        """Device-verified placement (DESIGN.md §8) extended to the fused
+        serve path: any built key the serve-path kernel cannot resolve is
+        shadowed into the delta run, keyed by the *serve-path* positioning
+        key so every future probe finds it by exact comparison.  Returns
+        the number of shadowed keys (0 in the common case — the serve NF
+        tile is pinned to the build transform's tile)."""
+        ik64 = np.asarray(ikeys, dtype=np.float64)
+        hi, lo = split_key_bits(ik64)
+        res, z = self._flow_device_lookup(feats, hi, lo, packed_w, shapes)
+        res = self._probe_delta(res, z, hi, lo)
+        wrong = res != np.asarray(payloads, res.dtype)
+        if wrong.any():
+            self._append_delta(z[wrong], hi[wrong], lo[wrong],
+                               np.asarray(payloads)[wrong].astype(np.int32))
+        return int(wrong.sum())
 
     # ------------------------------------------------------------- insert
     def insert_batch(self, keys: np.ndarray, payloads: np.ndarray,
@@ -499,6 +637,7 @@ class FlatAFLI:
         builder = _Builder(self.cfg, self.d_tail)
         builder.build(pk, hi, lo, pv.astype(np.int64))
         self.arrays = builder.finalize()
+        self._kpools = None
         self.max_depth = builder.max_depth + 1
         self.dense_window = _max_equal_run(pk) + 2
         self._delta_pk = np.empty(0, np.float32)

@@ -9,6 +9,17 @@ Stage 2: AFLI indexes the (possibly transformed) keys.
 
 All request processing is batched, as in the paper (§3.1: "our NFL also
 processes requests in batches").
+
+Two serving backends (DESIGN.md §9):
+
+* ``backend="afli"`` — the paper-faithful pointer tree, probed key by key
+  on the host.  Full read/write API (insert/update/delete).
+* ``backend="flat"`` — FlatAFLI served through the fused single-dispatch
+  Pallas kernel: one ``pallas_call`` per request batch runs the NF forward
+  and the whole multi-level traversal.  Bulk-load positioning keys come
+  from the *kernel* NF path so build-time and serve-time placement is
+  bit-identical.  Reads + log-structured inserts; update/delete are not
+  supported (deltas resolve misses only).
 """
 
 from __future__ import annotations
@@ -21,6 +32,8 @@ import numpy as np
 
 from repro.core.afli import AFLI, AFLIConfig
 from repro.core.conflict import should_use_flow
+from repro.core.feature import expand_features
+from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig
 from repro.core.flow import FlowConfig, transform_keys
 from repro.core.train_flow import FlowTrainConfig, train_flow
 
@@ -32,8 +45,10 @@ class NFLConfig:
     flow: FlowConfig = dataclasses.field(default_factory=FlowConfig)
     flow_train: FlowTrainConfig = dataclasses.field(default_factory=FlowTrainConfig)
     index: AFLIConfig = dataclasses.field(default_factory=AFLIConfig)
+    flat_index: FlatAFLIConfig = dataclasses.field(default_factory=FlatAFLIConfig)
     gamma: float = 0.99
     force_flow: Optional[bool] = None  # None -> paper's switching mechanism
+    backend: str = "afli"              # "afli" (paper tree) | "flat" (fused)
 
 
 class NFL:
@@ -41,11 +56,18 @@ class NFL:
 
     def __init__(self, config: NFLConfig | None = None):
         self.cfg = config or NFLConfig()
-        self.index = AFLI(self.cfg.index)
+        if self.cfg.backend == "flat":
+            self.index = FlatAFLI(self.cfg.flat_index)
+        elif self.cfg.backend == "afli":
+            self.index = AFLI(self.cfg.index)
+        else:
+            raise ValueError(f"unknown NFL backend: {self.cfg.backend!r}")
         self.flow_params = None
         self.normalizer = None
         self.use_flow = False
         self.metrics: Dict[str, float] = {}
+        self._packed_w = None   # pack_flow_weights block (flat backend)
+        self._shapes = ()
 
     # ------------------------------------------------------------ bulkload
     def bulkload(self, keys: np.ndarray, payloads: np.ndarray) -> None:
@@ -58,7 +80,7 @@ class NFL:
         t_train = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        transformed = transform_keys(params, normalizer, keys, self.cfg.flow)
+        transformed = self._transform(params, normalizer, keys)
         t_transform = time.perf_counter() - t0
 
         if self.cfg.force_flow is None:
@@ -69,9 +91,23 @@ class NFL:
         self.use_flow = bool(use)
         self.flow_params = params
         self.normalizer = normalizer
+        if self.cfg.backend == "flat":
+            self._packed_w, self._shapes = self._pack_weights(params)
 
         t0 = time.perf_counter()
-        if self.use_flow:
+        n_shadow = 0
+        if self.cfg.backend == "flat":
+            if self.use_flow:
+                self.index.build(transformed, payloads, ikeys=keys)
+                # verify the *serve* path (in-kernel NF) end to end; any
+                # divergent key is delta-shadowed (DESIGN.md §8/§9)
+                feats = expand_features(keys, normalizer, self.cfg.flow.dim,
+                                        self.cfg.flow.theta, dtype=np.float32)
+                n_shadow = self.index.verify_serve_flow(
+                    feats, keys, self._packed_w, self._shapes, payloads)
+            else:
+                self.index.build(keys, payloads)
+        elif self.use_flow:
             self.index.bulkload(transformed, payloads, ikeys=keys)
         else:
             self.index.bulkload(keys, payloads)
@@ -85,20 +121,57 @@ class NFL:
             "tail_conflict_original": float(tail_orig),
             "tail_conflict_transformed": float(tail_flow),
             "use_flow": float(self.use_flow),
+            "serve_verify_shadowed": float(n_shadow),
         }
 
     # ------------------------------------------------------------- helpers
+    def _transform(self, params, normalizer, keys: np.ndarray) -> np.ndarray:
+        """Bulk key transformation on the backend's canonical path.
+
+        The flat backend positions by the *kernel* NF output so serve-time
+        in-kernel placement arithmetic is bit-identical to the build."""
+        if self.cfg.backend == "flat":
+            from repro.kernels.ops import nf_transform_keys
+
+            return nf_transform_keys(params, normalizer, keys, self.cfg.flow)
+        return transform_keys(params, normalizer, keys, self.cfg.flow)
+
+    @staticmethod
+    def _pack_weights_for(params, flow_cfg: FlowConfig):
+        """The flow's pack_flow_weights block (fused-kernel serve input)."""
+        import jax.numpy as jnp
+
+        from repro.core.flow import materialize_weights
+        from repro.kernels.nf_forward import pack_flow_weights
+
+        weights = materialize_weights(params, flow_cfg)
+        out_scale = jnp.exp(params["out_log_scale"])
+        feat_mu = params.get("feat_mu", jnp.zeros((flow_cfg.dim,), jnp.float32))
+        feat_sd = params.get("feat_sd", jnp.ones((flow_cfg.dim,), jnp.float32))
+        return pack_flow_weights(weights, out_scale, feat_mu, feat_sd)
+
+    def _pack_weights(self, params):
+        return self._pack_weights_for(params, self.cfg.flow)
+
     def _pkeys(self, keys: np.ndarray) -> np.ndarray:
         """Positioning keys for a batch of query keys (online NF inference)."""
         keys = np.asarray(keys, dtype=np.float64)
         if not self.use_flow:
             return keys
-        return transform_keys(self.flow_params, self.normalizer, keys, self.cfg.flow)
+        return self._transform(self.flow_params, self.normalizer, keys)
 
     # ------------------------------------------------------------ batch ops
     def lookup_batch(self, keys: np.ndarray) -> np.ndarray:
         """Batched point lookups; -1 marks not-found."""
         keys = np.asarray(keys, dtype=np.float64)
+        if self.cfg.backend == "flat":
+            if not self.use_flow:
+                return self.index.lookup_batch(keys)
+            # fused single dispatch: NF forward + traversal in one kernel
+            feats = expand_features(keys, self.normalizer, self.cfg.flow.dim,
+                                    self.cfg.flow.theta, dtype=np.float32)
+            return self.index.lookup_batch_flow(feats, keys, self._packed_w,
+                                                self._shapes)
         pkeys = self._pkeys(keys)
         out = np.empty(keys.shape[0], dtype=np.int64)
         lookup = self.index.lookup
@@ -111,11 +184,19 @@ class NFL:
         keys = np.asarray(keys, dtype=np.float64)
         payloads = np.asarray(payloads, dtype=np.int64)
         pkeys = self._pkeys(keys)
+        if self.cfg.backend == "flat":
+            self.index.insert_batch(
+                pkeys, payloads, ikeys=keys if self.use_flow else None)
+            return
         insert = self.index.insert
         for i in range(keys.shape[0]):
             insert(float(pkeys[i]), int(payloads[i]), float(keys[i]))
 
     def update_batch(self, keys: np.ndarray, payloads: np.ndarray) -> np.ndarray:
+        if self.cfg.backend == "flat":
+            raise NotImplementedError(
+                "flat backend is read+insert only (delta resolves misses, "
+                "not overwrites); use backend='afli' for updates")
         keys = np.asarray(keys, dtype=np.float64)
         pkeys = self._pkeys(keys)
         ok = np.zeros(keys.shape[0], dtype=bool)
@@ -124,6 +205,10 @@ class NFL:
         return ok
 
     def delete_batch(self, keys: np.ndarray) -> np.ndarray:
+        if self.cfg.backend == "flat":
+            raise NotImplementedError(
+                "flat backend is read+insert only; use backend='afli' "
+                "for deletes")
         keys = np.asarray(keys, dtype=np.float64)
         pkeys = self._pkeys(keys)
         ok = np.zeros(keys.shape[0], dtype=bool)

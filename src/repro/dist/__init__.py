@@ -1,0 +1,2 @@
+"""Distribution layer: logical sharding rules, compressed collectives,
+and pipeline parallelism for the production serving/training stack."""

@@ -1,0 +1,53 @@
+"""GPipe pipeline parallelism over a named mesh axis (shard_map-native).
+
+``pipeline_apply`` runs a stage function over a microbatched input with
+the classic GPipe schedule: with S stages and M microbatches, tick t has
+stage s processing microbatch t - s, results hopping one stage per tick
+via ``ppermute``.  M + S - 1 ticks drain the pipe; the LAST stage's rank
+holds the final outputs (callers broadcast over the pipe axis if they
+need them replicated — see tests/test_pipeline.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.collectives import static_axis_size
+
+__all__ = ["pipeline_apply"]
+
+
+def pipeline_apply(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+                   params: Any, xs: jnp.ndarray,
+                   axis_name: str) -> jnp.ndarray:
+    """Run ``stage_fn`` as a GPipe pipeline over mesh axis ``axis_name``.
+
+    params: THIS rank's stage parameters (stage s holds stage-s weights);
+    xs: [M, ...] microbatches, replicated over the pipe axis;
+    returns [M, ...] stage-(S-1) outputs, valid on the last pipe rank.
+    """
+    n_stages = static_axis_size(axis_name)
+    stage = jax.lax.axis_index(axis_name)
+    m = xs.shape[0]
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    recv = jnp.zeros_like(xs[0])
+    out = jnp.zeros_like(xs)
+    for t in range(m + n_stages - 1):
+        mb = t - stage                      # microbatch index at this rank
+        active = (mb >= 0) & (mb < m)
+        # stage 0 pulls from the microbatch stream; later stages from the
+        # previous stage's wire
+        x_in = jnp.where(stage == 0, xs[min(t, m - 1)], recv)
+        y = stage_fn(params, x_in)
+        y = jnp.where(active, y, jnp.zeros_like(y))
+        # the last stage banks its finished microbatch
+        bank = jax.lax.dynamic_update_index_in_dim(
+            out, y, jnp.clip(mb, 0, m - 1), axis=0)
+        out = jnp.where((stage == n_stages - 1) & active, bank, out)
+        # one hop down the pipe
+        recv = jax.lax.ppermute(y, axis_name, perm)
+    return out

@@ -1,0 +1,151 @@
+"""Logical-axis sharding: one rule table, mesh-shape-aware lowering.
+
+Model code names *logical* axes ("batch", "mlp", "fsdp", ...); the mesh
+names *physical* axes ("pod", "data", "model", ...).  ``LOGICAL_RULES``
+maps the former to candidate lists of the latter, and the lowering here
+filters those candidates against the mesh that is actually present —
+the same model code runs on a laptop CPU (no mesh: everything is a
+no-op), a single pod, or a multi-pod mesh.
+
+Invariants enforced when lowering one spec:
+
+* a mesh axis is used at most once per spec (XLA requirement);
+* ``guarded_spec`` additionally drops axes a dimension cannot divide, so
+  odd shapes (ragged batches, smoke configs) never fail to compile.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "LOGICAL_RULES", "logical_to_spec", "guarded_spec", "constrain",
+    "mesh_scope", "current_mesh", "named_sharding", "param_sharding",
+]
+
+# logical axis -> ordered candidate mesh axes (filtered by mesh presence)
+LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
+    # activation batch: sharded over every data-parallel axis present
+    "batch": ("pod", "data"),
+    # decode-time batch that may additionally fold over the model axis
+    "batch_model": ("pod", "data", "model"),
+    # fully-sharded parameter dim (zero-style) over the data axis
+    "fsdp": ("data",),
+    # tensor-parallel dims
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "d_inner": ("model",),
+    # pipeline stages
+    "stage": ("pipe",),
+    # replicated-by-default dims (named for documentation value)
+    "embed": (),
+    "seq": (),
+    "kv_seq": (),
+    "conv": (),
+    "h": (),
+    "wo": (),
+}
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    """Mesh axis sizes as a plain dict (works for jax Mesh and test fakes)."""
+    return dict(mesh.shape)
+
+
+def _lower(axes: Sequence[Optional[str]], mesh,
+           shape: Optional[Sequence[int]] = None) -> P:
+    sizes = _axis_sizes(mesh)
+    used: set = set()
+    parts = []
+    for i, name in enumerate(axes):
+        if name is None:
+            parts.append(None)
+            continue
+        cands = [a for a in LOGICAL_RULES.get(name, ())
+                 if a in sizes and a not in used]
+        if shape is not None:
+            # drop trailing candidates until the dim divides their product
+            dim = shape[i]
+            while cands:
+                prod = 1
+                for a in cands:
+                    prod *= int(sizes[a])
+                if dim % prod == 0:
+                    break
+                cands = cands[:-1]
+        if not cands:
+            parts.append(None)
+            continue
+        used.update(cands)
+        parts.append(cands[0] if len(cands) == 1 else tuple(cands))
+    return P(*parts)
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], mesh) -> P:
+    """Lower logical axis names to a PartitionSpec for ``mesh``."""
+    return _lower(axes, mesh)
+
+
+def guarded_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                 mesh) -> P:
+    """``logical_to_spec`` that also drops axes ``shape`` cannot divide."""
+    return _lower(axes, mesh, shape=shape)
+
+
+# --------------------------------------------------------------- mesh scope
+_MESH_STACK: list = []
+
+
+@contextlib.contextmanager
+def mesh_scope(mesh):
+    """Ambient mesh for ``constrain``; ``None`` is a no-op scope (CPU)."""
+    if mesh is None:
+        yield None
+        return
+    _MESH_STACK.append(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _MESH_STACK.pop()
+
+
+def current_mesh():
+    return _MESH_STACK[-1] if _MESH_STACK else None
+
+
+def constrain(x, *axes: Optional[str]):
+    """Sharding constraint by logical axis names; identity without a mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = guarded_spec(x.shape, axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ----------------------------------------------------------------- shardings
+def named_sharding(mesh, axes: Optional[Sequence[Optional[str]]] = None
+                   ) -> NamedSharding:
+    """NamedSharding from logical axes (replicated when ``axes`` is None)."""
+    spec = P() if axes is None else logical_to_spec(axes, mesh)
+    return NamedSharding(mesh, spec)
+
+
+def _is_axes_leaf(v: Any) -> bool:
+    return isinstance(v, tuple) and all(
+        a is None or isinstance(a, str) for a in v)
+
+
+def param_sharding(specs, mesh):
+    """Logical-axes spec tree (``model.param_specs()``) -> sharding tree."""
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, logical_to_spec(axes, mesh)),
+        specs, is_leaf=_is_axes_leaf)

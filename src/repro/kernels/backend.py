@@ -1,0 +1,28 @@
+"""Backend auto-detection shared by every Pallas kernel wrapper.
+
+Pallas kernels run compiled (Mosaic) only on real TPU backends; everywhere
+else — the CPU validation/CI platform — they execute in interpret mode.
+Kernel wrappers take ``interpret=None`` by default and resolve it here, so
+the *same call site* runs compiled on hardware and interpreted in CI
+(DESIGN.md §2 "hardware adaptation").
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+__all__ = ["should_interpret", "resolve_interpret"]
+
+
+def should_interpret() -> bool:
+    """True iff there is no TPU backend to compile for."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> auto-detect; explicit booleans pass through."""
+    if interpret is None:
+        return should_interpret()
+    return bool(interpret)

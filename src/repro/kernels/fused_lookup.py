@@ -1,0 +1,330 @@
+"""Pallas TPU kernel: fused single-dispatch lookup (DESIGN.md §9).
+
+The serving hot path used to be two device dispatches with a host round
+trip between them: ``nf_forward_pallas`` (NF transform) then the pure-jnp
+``flat_lookup`` while-loop (multi-level FlatAFLI traversal, one full-batch
+HBM gather round per tree level).  Learned-index throughput lives and dies
+on exactly these per-lookup constant factors (Kraska et al.; Marcus et
+al.), so this kernel folds the whole read path into ONE ``pallas_call``:
+
+1. **NF forward** — the unrolled Numerical-NF inference over the [TILE]
+   lane batch, via the same ``apply_flow_tile`` helper ``nf_forward_pallas``
+   compiles, so build-time and serve-time positioning keys are
+   bit-identical;
+2. **multi-level traversal** — an in-kernel *unrolled* loop over
+   ``max_depth`` (tree heights after the NF transform are 2-3, paper
+   Table 1) with per-query active masks.  Each level runs all three node
+   resolutions — model-node FMA slot prediction, dense-node
+   fixed-iteration binary search, conflict-bucket scan — and selects per
+   query, exactly mirroring the ``flat_lookup`` oracle so results are
+   bit-identical;
+3. **exact identity resolution** — 64-bit (hi, lo) key identity compares,
+   emitting payloads in one VMEM round trip.
+
+The flattened node/entry/bucket pools (``FlatArrays.to_kernel_args``) ride
+along as grid-invariant VMEM blocks: after the NF transform the pools are
+small enough for VMEM residency on real workloads; the
+``kernels/ops.fused_lookup`` shim falls back to the two-dispatch oracle
+path when they are not.
+
+Grid: (ceil(B / TILE),).  TILE is lane-aligned on TPU; on the CPU
+validation platform a single grid step avoids re-materializing the pools.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.nf_forward import DEFAULT_TILE as NF_TILE
+from repro.kernels.nf_forward import apply_flow_tile
+
+__all__ = ["fused_lookup_pallas", "KernelPools", "DEFAULT_TILE",
+           "INTERPRET_TILE", "NF_TILE"]
+
+DEFAULT_TILE = 512       # lane-aligned query tile for compiled TPU runs
+INTERPRET_TILE = 8192    # CPU validation: one grid step per request batch
+
+# entry / node codes — schema owned by repro.core.flat_afli
+EMPTY, DATA, BUCKET, CHILD = 0, 1, 2, 3
+KIND_MODEL, KIND_DENSE = 0, 1
+
+
+class KernelPools(NamedTuple):
+    """Kernel-ready FlatAFLI pools: i32-coded types, lane-padded 1-D
+    arrays, conflict buckets flattened row-major to [B * cap].
+
+    Built by ``FlatArrays.to_kernel_args()``; consumed as grid-invariant
+    VMEM blocks by ``fused_lookup_pallas``.  (Bucket *keys* are not needed:
+    bucket hits resolve purely by 64-bit identity, as in the oracle.)
+    """
+
+    node_kind: jnp.ndarray       # i32[N]  model / dense
+    node_slope: jnp.ndarray      # f32[N]
+    node_intercept: jnp.ndarray  # f32[N]
+    node_offset: jnp.ndarray     # i32[N]
+    node_size: jnp.ndarray       # i32[N]
+    etype: jnp.ndarray           # i32[P]
+    ekey: jnp.ndarray            # f32[P]
+    ehi: jnp.ndarray             # u32[P]
+    elo: jnp.ndarray             # u32[P]
+    epayload: jnp.ndarray        # i32[P]
+    echild: jnp.ndarray          # i32[P]
+    bhi: jnp.ndarray             # u32[B, cap]
+    blo: jnp.ndarray             # u32[B, cap]
+    bpayload: jnp.ndarray        # i32[B, cap]
+    blen: jnp.ndarray            # i32[B]
+
+    def nbytes(self) -> int:
+        return int(sum(a.size * a.dtype.itemsize for a in self))
+
+
+def _kernel(feat_ref, qhi_ref, qlo_ref, w_ref,
+            nkind_ref, nslope_ref, nicept_ref, noff_ref, nsize_ref,
+            etype_ref, ekey_ref, ehi_ref, elo_ref, epay_ref, echild_ref,
+            bhi_ref, blo_ref, bpay_ref, blen_ref,
+            pay_ref, z_ref, *,
+            dim: int, shapes: Tuple[Tuple[int, int], ...], max_depth: int,
+            dense_iters: int, bucket_cap: int, dense_window: int,
+            use_flow: bool):
+    """One [TILE] query tile: NF forward + full traversal -> payloads.
+
+    Mirrors ``repro.core.flat_afli.flat_lookup`` op-for-op (the oracle);
+    any change here must keep the parity tests bit-exact.
+    """
+    # ---- (1) NF forward: feature columns -> positioning keys.
+    # Computed in fixed NF_TILE-wide sub-tiles no matter the query tile:
+    # XLA elementwise codegen (tanh) is 1-ulp shape-dependent, and precise
+    # placement needs serve-time keys bit-equal to the build transform's
+    # (which runs the same [NF_TILE] blocks in nf_forward_pallas).  The
+    # optimization barrier fences each sub-tile from the traversal
+    # consumers — without it XLA horizontally re-fuses the sub-chains into
+    # one wide (shape-divergent) loop.
+    if use_flow:
+        tile_b = feat_ref.shape[0]
+        parts = []
+        for s in range(0, tile_b, NF_TILE):
+            cols = [feat_ref[s:s + NF_TILE, k] for k in range(dim)]
+            parts.append(jax.lax.optimization_barrier(
+                apply_flow_tile(cols, w_ref, dim, shapes)))
+        qkey = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    else:
+        qkey = feat_ref[:, 0]
+    qhi = qhi_ref[...]
+    qlo = qlo_ref[...]
+
+    # pools, VMEM-resident for the whole tile
+    nkind = nkind_ref[...]
+    nslope = nslope_ref[...]
+    nicept = nicept_ref[...]
+    noff = noff_ref[...]
+    nsize = nsize_ref[...]
+    etype = etype_ref[...]
+    ekey = ekey_ref[...]
+    ehi = ehi_ref[...]
+    elo = elo_ref[...]
+    epay = epay_ref[...]
+    echild = echild_ref[...]
+    bhi = bhi_ref[...]
+    blo = blo_ref[...]
+    bpay = bpay_ref[...]
+    blen = blen_ref[...]
+
+    node = jnp.zeros(qkey.shape, jnp.int32)
+    result = jnp.full(qkey.shape, -1, jnp.int32)
+    done = jnp.zeros(qkey.shape, jnp.bool_)
+
+    # ---- (2) bounded traversal: early-exit while_loop over levels with
+    # per-query active masks, exactly as the flat_lookup oracle runs it (a
+    # loop, not a python unroll — compile time stays flat in tree height).
+    def level_body(carry):
+        node, result, done, depth = carry
+        kind = jnp.take(nkind, node)
+        slope = jnp.take(nslope, node)
+        intercept = jnp.take(nicept, node)
+        offset = jnp.take(noff, node)
+        size = jnp.take(nsize, node)
+
+        # model-node path: precise predicted slot (f32 FMA, as built)
+        slot = jnp.clip(
+            jnp.rint(slope * qkey + intercept).astype(jnp.int32), 0, size - 1
+        )
+        e_model = offset + slot
+
+        # dense-node path: fixed-iteration binary search by ekey
+        def bs_body(_, lh):
+            l, h = lh
+            mid = (l + h) // 2
+            v = jnp.take(ekey, mid)
+            go_right = v < qkey
+            return (jnp.where(go_right, mid + 1, l),
+                    jnp.where(go_right, h, mid))
+
+        l_fin, _ = jax.lax.fori_loop(0, dense_iters, bs_body,
+                                     (offset, offset + size))
+        e_dense = jnp.clip(l_fin, offset, offset + size - 1)
+
+        e = jnp.where(kind == KIND_MODEL, e_model, e_dense)
+        et = jnp.take(etype, e)
+        is_dense = kind == KIND_DENSE
+
+        # (3) exact 64-bit identity resolution
+        hit_data = (et == DATA) & (jnp.take(ehi, e) == qhi) & \
+            (jnp.take(elo, e) == qlo)
+
+        # dense duplicates of an f32 pkey: bounded forward scan, done as
+        # one [tile, window] vectorized gather round; the first matching
+        # position wins (argmax picks the first True), exactly the
+        # oracle's acc<0 first-match fold
+        widx = jnp.clip(
+            e_dense[:, None]
+            + jax.lax.broadcasted_iota(jnp.int32, (e_dense.shape[0],
+                                                   dense_window), 1),
+            offset[:, None], (offset + size - 1)[:, None])
+        wok = ((jnp.take(ekey, widx) == qkey[:, None])
+               & (jnp.take(ehi, widx) == qhi[:, None])
+               & (jnp.take(elo, widx) == qlo[:, None]))
+        first = jnp.argmax(wok, axis=1)
+        found = jnp.take_along_axis(wok, first[:, None], 1)[:, 0]
+        wpay = jnp.take_along_axis(jnp.take(epay, widx),
+                                   first[:, None], 1)[:, 0]
+        dense_payload = jnp.where(found, wpay, -1)
+
+        # conflict-bucket scan: one row gather over the fixed capacity
+        # (max over where(match, payload, -1), as in the oracle)
+        bid = jnp.maximum(jnp.take(echild, e), 0)
+        brow_hi = jnp.take(bhi, bid, axis=0)         # [tile, cap]
+        brow_lo = jnp.take(blo, bid, axis=0)
+        brow_pv = jnp.take(bpay, bid, axis=0)
+        col = jax.lax.broadcasted_iota(jnp.int32, brow_hi.shape, 1)
+        bmatch = ((brow_hi == qhi[:, None]) & (brow_lo == qlo[:, None])
+                  & (col < jnp.take(blen, bid)[:, None]))
+        bucket_payload = jnp.max(jnp.where(bmatch, brow_pv, -1), axis=-1)
+
+        model_payload = jnp.where(
+            hit_data, jnp.take(epay, e),
+            jnp.where(et == BUCKET, bucket_payload, -1),
+        )
+        result = jnp.where(
+            done, result, jnp.where(is_dense, dense_payload, model_payload)
+        )
+        goes_deeper = (~is_dense) & (et == CHILD) & (~done)
+        node = jnp.where(goes_deeper, jnp.take(echild, e), node)
+        done = done | ~goes_deeper
+        return node, result, done, depth + 1
+
+    def level_cond(carry):
+        _, _, done, depth = carry
+        return (~jnp.all(done)) & (depth < max_depth)
+
+    _, result, _, _ = jax.lax.while_loop(level_cond, level_body,
+                                         (node, result, done, 0))
+
+    pay_ref[...] = result
+    z_ref[...] = qkey
+
+
+def _pow2ceil(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dim", "shapes", "max_depth", "dense_iters",
+                     "bucket_cap", "dense_window", "use_flow", "tile",
+                     "interpret"),
+)
+def fused_lookup_pallas(
+    feats: jnp.ndarray,
+    qhi: jnp.ndarray,
+    qlo: jnp.ndarray,
+    packed_w: jnp.ndarray,
+    pools: KernelPools,
+    *,
+    dim: int,
+    shapes: Tuple[Tuple[int, int], ...] = (),
+    max_depth: int,
+    dense_iters: int,
+    bucket_cap: int,
+    dense_window: int = 8,
+    use_flow: bool = True,
+    tile: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused NF-transform + FlatAFLI traversal in one ``pallas_call``.
+
+    feats: [B, d] f32 expanded query features (``use_flow=True``) or
+    [B, 1] positioning keys (``use_flow=False``); qhi/qlo: [B] u32 exact
+    identity bits; packed_w: [1, n] ``pack_flow_weights`` block (any
+    [1, >=1] f32 array when ``use_flow=False``).
+
+    Returns (payload i32[B] or -1, positioning key f32[B]).  The key output
+    feeds the host-side delta-run probe (log-structured inserts).
+    Bit-identical to ``nf_forward_pallas`` + ``flat_lookup`` by
+    construction.  ``interpret=None`` auto-detects the backend.
+
+    Tile discipline (DESIGN.md §9): the in-kernel NF always evaluates in
+    fixed [NF_TILE] sub-tiles.  XLA's tanh codegen is 1-ulp
+    shape-dependent, so serve-time NF output is bit-equal to the build-time
+    transform (``nf_transform_keys``, same block shape) only when the
+    evaluated shape matches — and precise placement rides on that equality.
+    The traversal itself uses only IEEE-exact ops
+    (mul/add/rint/compare/gather) and is shape-robust, so the query tile is
+    a pure throughput choice (rounded to an NF_TILE multiple under flow).
+    """
+    interpret = resolve_interpret(interpret)
+    b = feats.shape[0]
+    if use_flow:
+        # pinned: the NF must evaluate on the build transform's block
+        # shape for bit-equal serve-time keys (see docstring).  Sub-tiling
+        # plus an optimization barrier narrows but does not close the gap —
+        # XLA still re-fuses across the traversal consumers at larger
+        # tiles — so only NF_TILE is exactness-safe.
+        if tile is None:
+            tile = NF_TILE
+        # whole sub-tiles only: a ragged final sub-tile would evaluate the
+        # NF on a different shape and break build/serve key bit-equality
+        tile = ((max(tile, NF_TILE) + NF_TILE - 1) // NF_TILE) * NF_TILE
+    else:
+        if tile is None:
+            tile = INTERPRET_TILE if interpret else DEFAULT_TILE
+        # never pad a small batch up to a huge tile; stay lane-aligned on TPU
+        tile = min(tile, _pow2ceil(b))
+        if not interpret:
+            tile = max(tile, 128)
+    b_pad = ((b + tile - 1) // tile) * tile
+    if b_pad != b:
+        feats = jnp.pad(feats, ((0, b_pad - b), (0, 0)))
+        qhi = jnp.pad(qhi, (0, b_pad - b))
+        qlo = jnp.pad(qlo, (0, b_pad - b))
+
+    qspec = pl.BlockSpec((tile,), lambda i: (i,))
+    fspec = pl.BlockSpec((tile, feats.shape[1]), lambda i: (i, 0))
+    wspec = pl.BlockSpec((1, packed_w.shape[1]), lambda i: (0, 0))
+
+    def pool_spec(a):
+        return pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+
+    pay, z = pl.pallas_call(
+        functools.partial(
+            _kernel, dim=dim, shapes=shapes, max_depth=max_depth,
+            dense_iters=dense_iters, bucket_cap=bucket_cap,
+            dense_window=dense_window, use_flow=use_flow,
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((b_pad,), jnp.float32),
+        ),
+        grid=(b_pad // tile,),
+        in_specs=[fspec, qspec, qspec, wspec]
+        + [pool_spec(a) for a in pools],
+        out_specs=(qspec, qspec),
+        interpret=interpret,
+    )(feats.astype(jnp.float32), qhi, qlo, packed_w.astype(jnp.float32),
+      *pools)
+    return pay[:b], z[:b]

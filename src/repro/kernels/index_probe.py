@@ -22,18 +22,20 @@ Outputs per query: payload (or -1), entry type, child id.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.backend import resolve_interpret
 
 __all__ = ["index_probe_pallas"]
 
 DEFAULT_TILE = 512
 
 
-def _kernel(q_ref, qhi_ref, qlo_ref, node_ref, etype_ref, ekey_ref, ehi_ref,
+def _kernel(q_ref, qhi_ref, qlo_ref, node_ref, etype_ref, ehi_ref,
             elo_ref, epay_ref, echild_ref, pay_ref, code_ref, child_ref):
     slope = node_ref[0, 0]
     intercept = node_ref[0, 1]
@@ -64,19 +66,20 @@ def index_probe_pallas(
     slope: jnp.ndarray,
     intercept: jnp.ndarray,
     etype: jnp.ndarray,
-    ekey: jnp.ndarray,
     ehi: jnp.ndarray,
     elo: jnp.ndarray,
     epayload: jnp.ndarray,
     echild: jnp.ndarray,
     tile: int = DEFAULT_TILE,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Probe one model node with a query batch.
 
     qkey [B] f32; qhi/qlo [B] u32; entry arrays [S].
     Returns (payload [B] i32, entry_code [B] i32, child [B] i32).
+    ``interpret=None`` auto-detects the backend.
     """
+    interpret = resolve_interpret(interpret)
     b = qkey.shape[0]
     s = etype.shape[0]
     b_pad = ((b + tile - 1) // tile) * tile
@@ -103,13 +106,13 @@ def index_probe_pallas(
         in_specs=[
             qspec, qspec, qspec,
             pl.BlockSpec((1, 3), lambda i: (0, 0)),
-            espec, espec, espec, espec, espec, espec,
+            espec, espec, espec, espec, espec,
         ],
         out_specs=(qspec, qspec, qspec),
         interpret=interpret,
     )(
         qkey.astype(jnp.float32), qhi, qlo, node,
-        etype.astype(jnp.int32), ekey.astype(jnp.float32), ehi, elo,
+        etype.astype(jnp.int32), ehi, elo,
         epayload.astype(jnp.int32), echild.astype(jnp.int32),
     )
     return pay[:b], code[:b], child[:b]

@@ -20,14 +20,17 @@ Grid: (ceil(B / TILE),).  TILE is lane-aligned (multiple of 128).
 from __future__ import annotations
 
 import functools
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["nf_forward_pallas", "pack_flow_weights", "DEFAULT_TILE"]
+from repro.kernels.backend import resolve_interpret
+
+__all__ = ["nf_forward_pallas", "pack_flow_weights", "apply_flow_tile",
+           "DEFAULT_TILE"]
 
 DEFAULT_TILE = 512
 
@@ -55,8 +58,17 @@ def pack_flow_weights(
     return packed.reshape(1, -1), tuple(shapes)
 
 
-def _kernel(x_ref, w_ref, o_ref, *, dim: int, shapes: Tuple[Tuple[int, int], ...]):
-    """One [TILE, d] feature tile -> [TILE] transformed keys."""
+def apply_flow_tile(cols, w_ref, dim: int,
+                    shapes: Tuple[Tuple[int, int], ...]) -> jnp.ndarray:
+    """Unrolled NF forward + sum-decode over one lane-batch tile.
+
+    ``cols`` is the list of ``dim`` [TILE] feature-column vectors; ``w_ref``
+    the packed [1, n] weight block (``pack_flow_weights`` layout).  Returns
+    the [TILE] transformed keys.  This is THE flow arithmetic: both
+    ``nf_forward_pallas`` and the fused lookup kernel
+    (``kernels/fused_lookup``) call it, so build-time and serve-time
+    positioning keys are bit-identical (DESIGN.md §9).
+    """
     idx = 0
 
     def rd(n):
@@ -68,7 +80,7 @@ def _kernel(x_ref, w_ref, o_ref, *, dim: int, shapes: Tuple[Tuple[int, int], ...
     mu = rd(dim)
     sd_inv = rd(dim)
     # h: list of [TILE] lane vectors, one per current layer width
-    h = [(x_ref[:, k] - mu[k]) * sd_inv[k] for k in range(dim)]
+    h = [(cols[k] - mu[k]) * sd_inv[k] for k in range(dim)]
     n_layers = len(shapes)
     for li, (n_out, n_in) in enumerate(shapes):
         w = rd(n_out * n_in)
@@ -87,7 +99,13 @@ def _kernel(x_ref, w_ref, o_ref, *, dim: int, shapes: Tuple[Tuple[int, int], ...
     z = h[0] * out_scale[0]
     for k in range(1, dim):
         z = z + h[k] * out_scale[k]
-    o_ref[...] = z
+    return z
+
+
+def _kernel(x_ref, w_ref, o_ref, *, dim: int, shapes: Tuple[Tuple[int, int], ...]):
+    """One [TILE, d] feature tile -> [TILE] transformed keys."""
+    o_ref[...] = apply_flow_tile([x_ref[:, k] for k in range(dim)],
+                                 w_ref, dim, shapes)
 
 
 @functools.partial(
@@ -99,12 +117,14 @@ def nf_forward_pallas(
     shapes: Tuple[Tuple[int, int], ...],
     dim: int,
     tile: int = DEFAULT_TILE,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """feats [B, d] f32 -> transformed 1-D keys [B] f32.
 
-    B is padded to a tile multiple internally.
+    B is padded to a tile multiple internally.  ``interpret=None``
+    auto-detects the backend (compiled on TPU, interpreted elsewhere).
     """
+    interpret = resolve_interpret(interpret)
     b = feats.shape[0]
     b_pad = ((b + tile - 1) // tile) * tile
     if b_pad != b:

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core.feature import KeyNormalizer, expand_features
 from repro.core.flow import FlowConfig, materialize_weights
+from repro.kernels.backend import resolve_interpret, should_interpret
 from repro.kernels.nf_forward import nf_forward_pallas, pack_flow_weights
 from repro.kernels.index_probe import index_probe_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
@@ -23,12 +24,10 @@ __all__ = [
     "should_interpret",
     "nf_transform_keys",
     "index_probe",
+    "fused_lookup",
+    "pool_nbytes",
     "flash_decode",
 ]
-
-
-def should_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def nf_transform_keys(
@@ -53,11 +52,92 @@ def nf_transform_keys(
     return np.asarray(z, dtype=np.float64)
 
 
-def index_probe(qkey, qhi, qlo, slope, intercept, etype, ekey, ehi, elo,
+# ---------------------------------------------------------------- fused
+# Conservative per-core VMEM share for the grid-invariant pool blocks on
+# real TPUs (16 MiB/core minus query tiles and double-buffering headroom).
+DEFAULT_VMEM_BUDGET = 12 * 2 ** 20
+# The CPU validation platform has no VMEM; cap where the single-block
+# interpret kernel stops being profitable against the jitted oracle.
+DEFAULT_INTERPRET_BUDGET = 256 * 2 ** 20
+
+
+def pool_nbytes(pools) -> int:
+    """Total bytes of the kernel pool blocks (the VMEM-residency bill)."""
+    return pools.nbytes()
+
+
+def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
+                 max_depth: int, dense_iters: int, bucket_cap: int,
+                 dense_window: int = 8, vmem_budget=None, tile=None,
+                 interpret=None):
+    """Dispatch shim for the fused single-dispatch lookup (DESIGN.md §9).
+
+    When the packed pools fit the VMEM budget, the whole read path — NF
+    forward + multi-level traversal + identity resolution — runs as ONE
+    ``pallas_call`` (``kernels/fused_lookup``).  Oversized pools fall back
+    to the bit-identical oracle path: ``nf_forward_pallas`` (when ``flow``
+    is given) followed by the pure-jnp ``flat_lookup`` while-loop.
+
+    arrays: the ``FlatArrays`` pools (oracle path); pools: their packed
+    ``KernelPools`` twin, or a zero-arg callable producing it — the thunk
+    form lets callers skip the packing/upload entirely when the kernel
+    path is disabled (``vmem_budget <= 0``); feats: [n, d] f32 query
+    features, or [n, 1] positioning keys when ``flow is None``; flow:
+    optional ``(packed_w, shapes)`` from ``pack_flow_weights``.
+
+    Returns ``(payload i32[n], positioning_key f32[n], info)`` as numpy,
+    where ``info`` records the chosen path and device dispatch count.
+    """
+    from repro.core.flat_afli import flat_lookup
+    from repro.kernels.fused_lookup import fused_lookup_pallas
+
+    interpret = resolve_interpret(interpret)
+    if vmem_budget is None:
+        vmem_budget = (DEFAULT_INTERPRET_BUDGET if interpret
+                       else DEFAULT_VMEM_BUDGET)
+    nbytes = None
+    if vmem_budget > 0:
+        if callable(pools):
+            pools = pools()
+        nbytes = pool_nbytes(pools)
+    use_flow = flow is not None
+    dim = int(feats.shape[1])
+    if use_flow:
+        packed_w, shapes = flow
+    else:
+        packed_w, shapes = jnp.zeros((1, 1), jnp.float32), ()
+
+    if nbytes is not None and nbytes <= vmem_budget:
+        pay, z = fused_lookup_pallas(
+            feats, qhi, qlo, packed_w, pools, dim=dim, shapes=shapes,
+            max_depth=max_depth, dense_iters=dense_iters,
+            bucket_cap=bucket_cap, dense_window=dense_window,
+            use_flow=use_flow, tile=tile, interpret=interpret,
+        )
+        info = {"path": "fused", "n_dispatch": 1, "pool_bytes": nbytes}
+        return np.asarray(pay), np.asarray(z), info
+
+    # oracle fallback: pools exceed the budget -> keep them in HBM and use
+    # the gather-per-level jnp traversal (two dispatches when flow is on)
+    if use_flow:
+        z = nf_forward_pallas(jnp.asarray(feats, jnp.float32), packed_w,
+                              shapes, dim, interpret=interpret)
+        n_dispatch = 2
+    else:
+        z = jnp.asarray(feats, jnp.float32)[:, 0]
+        n_dispatch = 1
+    res = flat_lookup(arrays, z, qhi, qlo, max_depth=max_depth,
+                      dense_iters=dense_iters, bucket_cap=bucket_cap,
+                      dense_window=dense_window)
+    info = {"path": "oracle", "n_dispatch": n_dispatch, "pool_bytes": nbytes}
+    return np.asarray(res), np.asarray(z), info
+
+
+def index_probe(qkey, qhi, qlo, slope, intercept, etype, ehi, elo,
                 epayload, echild, tile: int = 512):
     return index_probe_pallas(
-        qkey, qhi, qlo, slope, intercept, etype, ekey, ehi, elo, epayload,
-        echild, tile=tile, interpret=should_interpret(),
+        qkey, qhi, qlo, slope, intercept, etype, ehi, elo, epayload,
+        echild, tile=tile,
     )
 
 

@@ -35,7 +35,6 @@ def index_probe_ref(
     slope: jnp.ndarray,
     intercept: jnp.ndarray,
     etype: jnp.ndarray,
-    ekey: jnp.ndarray,
     ehi: jnp.ndarray,
     elo: jnp.ndarray,
     epayload: jnp.ndarray,

@@ -1,0 +1,123 @@
+"""Tiny seeded-random stand-in for ``hypothesis`` (optional dependency).
+
+The test-suite's property tests use a small, fixed subset of the hypothesis
+API: ``@settings(max_examples=..., deadline=...)``, ``@given(...)``,
+``st.floats`` / ``st.integers`` / ``st.lists`` / ``st.data``.  When the real
+package is available the tests import it; when it is not (minimal CI
+images), this module supplies deterministic seeded-random drawing with the
+same call signatures so the invariants still execute instead of being
+skipped wholesale.
+
+Not a shrinking property-testing engine — just an exhaustively-seeded
+example generator.  Failures print the failing seed for reproduction.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED_BASE = 0x5EED01  # fixed base seed: examples are reproducible
+
+
+class _Strategy:
+    """A draw rule: callable on a ``random.Random`` instance."""
+
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+class _DataObject:
+    """Mirror of hypothesis' ``data()`` interactive draw object."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: _Strategy):
+        return strategy.draw(self._rnd)
+
+
+class _Strategies:
+    @staticmethod
+    def floats(min_value=-1e9, max_value=1e9, allow_nan=False,
+               allow_infinity=False, width=64):
+        del allow_nan, allow_infinity, width  # never generated here
+
+        def draw(rnd):
+            return rnd.uniform(min_value, max_value)
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        def draw(rnd):
+            return rnd.randint(min_value, max_value)
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size=0, max_size=20, unique=False):
+        def draw(rnd):
+            n = rnd.randint(min_size, max_size)
+            if not unique:
+                return [elements.draw(rnd) for _ in range(n)]
+            seen = dict.fromkeys(())  # insertion-ordered set
+            attempts = 0
+            while len(seen) < n and attempts < 20 * n + 200:
+                seen[elements.draw(rnd)] = None
+                attempts += 1
+            return list(seen)
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def data():
+        return _Strategy(_DataObject)
+
+
+st = _Strategies()
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Record ``max_examples`` on the (possibly already ``given``-wrapped)
+    test function; works above or below ``@given``."""
+    del deadline
+
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            del args  # drawn values replace the declared parameters
+            n = getattr(wrapper, "_hyp_max_examples",
+                        getattr(fn, "_hyp_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            for example in range(n):
+                rnd = random.Random(_SEED_BASE + example)
+                drawn = [s.draw(rnd) for s in strategies]
+                try:
+                    fn(*drawn, **kwargs)
+                except Exception:
+                    print(f"[_hyp_fallback] failing example seed="
+                          f"{_SEED_BASE + example} values={drawn!r}")
+                    raise
+
+        # pytest introspects the signature for fixtures: the drawn
+        # parameters are supplied here, so hide them (and the __wrapped__
+        # chain functools.wraps left behind).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

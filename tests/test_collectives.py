@@ -29,6 +29,7 @@ sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.dist.collectives import compressed_psum, flash_decode_combine
+from jax.experimental.shard_map import shard_map
 
 mesh = jax.make_mesh((8,), ("data",))
 x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 64)), jnp.float32)
@@ -36,7 +37,7 @@ x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 64)), jnp.float32)
 def body(xs):
     return compressed_psum(xs, "data")
 
-out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("data"),
+out = jax.jit(shard_map(body, mesh=mesh, in_specs=P("data"),
                             out_specs=P("data")))(x)
 exact = x.sum(axis=0, keepdims=True)
 err = float(jnp.abs(out[:1] - exact).max() / jnp.abs(exact).max())
@@ -59,7 +60,7 @@ def decode_shard(k_s, v_s):
     o = jnp.einsum("bhs,bshd->bhd", p, v_s)
     return flash_decode_combine(o, m, l, "data")
 
-out2 = jax.jit(jax.shard_map(
+out2 = jax.jit(shard_map(
     decode_shard, mesh=mesh,
     in_specs=(P(None, "data"), P(None, "data")),
     out_specs=P()))(k, v)

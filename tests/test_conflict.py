@@ -1,7 +1,10 @@
 """Conflict degree metrics (paper Defs 3.1 / 3.2)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep: seeded-random fallback
+    from _hyp_fallback import given, settings, st
 
 from repro.core.conflict import (
     LinearModel, conflict_degrees, dataset_tail_conflict, fit_linear_model,

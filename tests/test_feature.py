@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep: seeded-random fallback
+    from _hyp_fallback import given, settings, st
 
 from repro.core.feature import (
     KeyNormalizer, decode_features, expand_features, expand_features_jnp,

@@ -66,7 +66,7 @@ def test_index_probe_sweep(n_entries, batch):
     qhi, qlo = split_key_bits(q64)
     args = (jnp.asarray(q64.astype(np.float32)), jnp.asarray(qhi),
             jnp.asarray(qlo), slope, intercept, jnp.asarray(etype),
-            jnp.asarray(ekey), jnp.asarray(ehi), jnp.asarray(elo),
+            jnp.asarray(ehi), jnp.asarray(elo),
             jnp.asarray(epay), jnp.asarray(echild))
     p_k = index_probe_pallas(*args, interpret=True)
     p_r = index_probe_ref(*args)
@@ -87,7 +87,7 @@ def test_index_probe_on_real_node():
     qhi, qlo = split_key_bits(q64)
     args = (jnp.asarray(q64.astype(np.float32)), jnp.asarray(qhi),
             jnp.asarray(qlo), a.node_slope[0], a.node_intercept[0],
-            a.etype[:size], a.ekey[:size], a.ehi[:size], a.elo[:size],
+            a.etype[:size], a.ehi[:size], a.elo[:size],
             a.epayload[:size], a.echild[:size])
     p_k = ops.index_probe(*args)
     p_r = index_probe_ref(*args)
@@ -95,6 +95,185 @@ def test_index_probe_on_real_node():
         assert np.array_equal(np.asarray(x), np.asarray(y))
     # most root probes on near-uniform data should resolve immediately
     assert int((p_k[0] >= 0).sum()) > 0
+
+
+# ------------------------------------------------------------ fused_lookup
+def _fused_parity(idx, q64, ik64=None, flow=None, feats=None):
+    """Assert the fused kernel is bit-identical to the flat_lookup oracle
+    on one query batch; returns the (shared) payloads."""
+    from repro.core.flat_afli import flat_lookup, split_key_bits
+    from repro.kernels import ops
+
+    ik64 = q64 if ik64 is None else ik64
+    hi, lo = split_key_bits(np.asarray(ik64, np.float64))
+    kw = dict(max_depth=idx.max_depth,
+              dense_iters=idx.cfg.dense_search_iters,
+              bucket_cap=idx.cfg.max_bucket,
+              dense_window=idx._dense_window_static())
+    if flow is None:
+        feats_in = np.asarray(q64, np.float64).astype(np.float32).reshape(-1, 1)
+    else:
+        feats_in = np.asarray(feats, np.float32)
+    r_f, z_f, info = ops.fused_lookup(
+        idx.arrays, idx._kernel_pools(), jnp.asarray(feats_in),
+        jnp.asarray(hi), jnp.asarray(lo), flow=flow, **kw)
+    assert info["path"] == "fused" and info["n_dispatch"] == 1
+    # oracle: (optional) NF dispatch, then the pure-jnp traversal
+    if flow is None:
+        z_o = jnp.asarray(feats_in[:, 0])
+    else:
+        z_o = nf_forward_pallas(jnp.asarray(feats_in), flow[0], flow[1],
+                                feats_in.shape[1], interpret=True)
+    r_o = np.asarray(flat_lookup(idx.arrays, z_o, jnp.asarray(hi),
+                                 jnp.asarray(lo), **kw))
+    assert np.array_equal(np.asarray(z_f), np.asarray(z_o))  # bit-exact keys
+    assert np.array_equal(r_f, r_o)                          # bit-exact hits
+    return r_f
+
+
+def test_fused_lookup_model_node_parity():
+    """Near-uniform keys: root is a model node; hits resolve at level 1."""
+    from repro.core.flat_afli import FlatAFLI
+
+    rng = np.random.default_rng(11)
+    keys = np.unique(rng.uniform(0, 1e9, 20_000))
+    idx = FlatAFLI()
+    idx.build(keys, np.arange(len(keys)))
+    q = np.concatenate([keys[::5], keys[::7] + 0.25])  # hits + misses
+    res = _fused_parity(idx, q)
+    assert (res[: len(keys[::5])] >= 0).sum() > 0.9 * len(keys[::5])
+
+
+def test_fused_lookup_dense_node_parity():
+    """max_depth=1 forces a dense root: the binary-search path."""
+    from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig
+
+    rng = np.random.default_rng(12)
+    keys = np.unique(rng.uniform(0, 1e6, 3_000))
+    idx = FlatAFLI(FlatAFLIConfig(max_depth=1))
+    idx.build(keys, np.arange(len(keys)))
+    assert int(idx.arrays.node_kind[0]) == 1  # KIND_DENSE
+    _fused_parity(idx, np.concatenate([keys, keys + 0.5]))
+
+
+def test_fused_lookup_bucket_parity():
+    """Duplicate positioning keys with distinct identities -> conflict
+    buckets; lookups disambiguate by the 64-bit identity."""
+    from repro.core.flat_afli import FlatAFLI
+
+    pk = np.repeat(np.arange(100, dtype=np.float64), 3)  # triple conflicts
+    ik = np.arange(len(pk), dtype=np.float64) * 7.5
+    pv = np.arange(len(pk), dtype=np.int64)
+    idx = FlatAFLI()
+    idx.build(pk, pv, ikeys=ik)
+    res = _fused_parity(idx, pk, ik64=ik)
+    hit = res >= 0
+    assert hit.any()
+    assert np.array_equal(res[hit], pv[hit])
+    # full-path check (device + delta): every key resolves
+    assert np.array_equal(idx.lookup_batch(pk, ikeys=ik), pv)
+    # wrong identity at an existing positioning key must miss
+    miss = _fused_parity(idx, pk[:50], ik64=ik[:50] + 0.001)
+    assert (miss == -1).all()
+
+
+def test_fused_lookup_duplicate_f32_keys_parity():
+    """Adjacent f64 keys that collide in f32: dense duplicate-run scan +
+    identity compares keep lookups exact."""
+    from repro.core.flat_afli import FlatAFLI
+
+    keys = 1e15 + np.arange(40, dtype=np.float64)
+    assert len(np.unique(keys.astype(np.float32))) < 40
+    pv = np.arange(40, dtype=np.int64)
+    idx = FlatAFLI()
+    idx.build(keys, pv)
+    _fused_parity(idx, keys)
+    assert np.array_equal(idx.lookup_batch(keys), pv)
+
+
+def test_fused_lookup_miss_parity():
+    rng = np.random.default_rng(13)
+    from repro.core.flat_afli import FlatAFLI
+
+    keys = np.unique(rng.uniform(0, 1e12, 10_000))
+    idx = FlatAFLI()
+    idx.build(keys[::2], np.arange(len(keys[::2])))
+    res = _fused_parity(idx, keys[1::2])
+    assert (res == -1).all()
+
+
+def test_fused_lookup_flow_parity():
+    """Full fused path (in-kernel NF forward) vs the two-dispatch oracle
+    (nf_forward_pallas + flat_lookup): bit-identical keys AND payloads."""
+    from repro.core.feature import expand_features
+    from repro.core.nfl import NFL, NFLConfig
+
+    keys = np.unique(np.floor(
+        np.random.default_rng(14).lognormal(0, 2, 30_000) * 1e9))
+    pv = np.arange(len(keys), dtype=np.int64)
+    nfl = NFL(NFLConfig(flow_train=FlowTrainConfig(epochs=1),
+                        backend="flat"))
+    nfl.bulkload(keys, pv)
+    assert nfl.use_flow
+    q = np.concatenate([keys[::9], keys[::11] + 3.0])
+    feats = expand_features(q, nfl.normalizer, nfl.cfg.flow.dim,
+                            nfl.cfg.flow.theta, dtype=np.float32)
+    _fused_parity(nfl.index, q, flow=(nfl._packed_w, nfl._shapes),
+                  feats=feats)
+    # end-to-end (fused + delta): every built key resolves
+    assert np.array_equal(nfl.lookup_batch(keys[:4000]), pv[:4000])
+
+
+def test_fused_lookup_vmem_budget_fallback():
+    """Oversized pools must fall back to the oracle path with identical
+    results (the dispatch shim's contract)."""
+    from repro.core.flat_afli import FlatAFLI, split_key_bits
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(15)
+    keys = np.unique(rng.uniform(0, 1e9, 5_000))
+    idx = FlatAFLI()
+    idx.build(keys, np.arange(len(keys)))
+    hi, lo = split_key_bits(keys)
+    kw = dict(max_depth=idx.max_depth,
+              dense_iters=idx.cfg.dense_search_iters,
+              bucket_cap=idx.cfg.max_bucket,
+              dense_window=idx._dense_window_static())
+    feats = jnp.asarray(keys.astype(np.float32).reshape(-1, 1))
+    r_fused, _, i1 = ops.fused_lookup(
+        idx.arrays, idx._kernel_pools(), feats, jnp.asarray(hi),
+        jnp.asarray(lo), flow=None, **kw)
+    r_oracle, _, i2 = ops.fused_lookup(
+        idx.arrays, idx._kernel_pools(), feats, jnp.asarray(hi),
+        jnp.asarray(lo), flow=None, vmem_budget=0, **kw)
+    assert i1["path"] == "fused" and i2["path"] == "oracle"
+    assert np.array_equal(r_fused, r_oracle)
+
+
+def test_fused_lookup_property_randomized():
+    """Property-style sweep: random key sets / scales / duplicates, random
+    query mixes — fused must stay bit-identical to the oracle and correct
+    against a host dict."""
+    from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig
+
+    for seed in range(6):
+        rng = np.random.default_rng(100 + seed)
+        n = int(rng.integers(5, 1500))
+        scale = 10.0 ** rng.integers(0, 12)
+        keys = rng.uniform(0, scale, n)
+        if seed % 2:  # inject f32-colliding duplicates
+            keys = np.concatenate([keys, keys[: n // 3] + 1e-9 * scale])
+        keys = np.unique(keys)
+        pv = np.arange(len(keys), dtype=np.int64)
+        idx = FlatAFLI(FlatAFLIConfig(max_depth=int(rng.integers(1, 8))))
+        idx.build(keys, pv)
+        probes = np.concatenate([keys, keys + rng.uniform(0, 1, len(keys))])
+        _fused_parity(idx, probes)
+        # end-to-end correctness incl. the delta run
+        res = idx.lookup_batch(probes)
+        live = {k: p for k, p in zip(keys, pv)}
+        expect = np.array([live.get(k, -1) for k in probes])
+        assert np.array_equal(res, expect), f"seed {seed}"
 
 
 # ------------------------------------------------------------ flash_decode

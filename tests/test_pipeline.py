@@ -14,6 +14,7 @@ sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.dist.pipeline import pipeline_apply
+from jax.experimental.shard_map import shard_map
 
 mesh = jax.make_mesh((2, 4), ("pipe", "data"))
 S, M, B, D = 2, 4, 8, 16  # stages, microbatches, micro-batch, width
@@ -42,10 +43,10 @@ def run_last(w_local, b_local, xs):
 
 # after the explicit broadcast the value IS pipe-replicated; the vma
 # checker cannot infer that through ppermute, so disable it here
-out = jax.jit(jax.shard_map(
+out = jax.jit(shard_map(
     run_last, mesh=mesh,
     in_specs=(P("pipe"), P("pipe"), P(None, "data")),
-    out_specs=P(None, "data"), check_vma=False))(w, b, x)
+    out_specs=P(None, "data"), check_rep=False))(w, b, x)
 err = float(jnp.abs(out - ref).max())
 assert err < 1e-5, err
 print("PIPE_OK", err)
