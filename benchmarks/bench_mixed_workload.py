@@ -1,0 +1,199 @@
+"""Mixed read/insert serving on the flat backend (DESIGN.md §10).
+
+NFL's headline claim is highest throughput *and lowest tail latency*
+under read-write workloads.  This bench drives the fused flat backend
+through read/insert mixes (95/5, 80/20, 50/50) in fixed-size request
+batches and records the per-op latency distribution — p50/p99/p999/max —
+plus the write-path telemetry that the tiered design is supposed to
+move:
+
+* ``host_tier_probes`` must stay 0 while the delta/run tiers fit the
+  kernel pool budget (every mixed batch is ONE ``pallas_call``, no host
+  delta round trip);
+* no single ``insert_batch`` call may pay a full O(n) rebuild stall —
+  the incremental fold bounds it, reported as ``max_insert_call_s`` and
+  the p999/p50 ratio at the 80/20 mix;
+* results are cross-checked against a dict oracle (last-write-wins).
+
+Emits machine-readable ``BENCH_mixed_workload.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.flat_afli import FlatAFLIConfig
+from repro.core.flow import FlowConfig
+from repro.core.nfl import NFL, NFLConfig
+from repro.core.train_flow import FlowTrainConfig
+from repro.data.datasets import make_dataset
+
+DEFAULT_OUT = "BENCH_mixed_workload.json"
+MIXES = (("95/5", 0.05), ("80/20", 0.20), ("50/50", 0.50))
+
+
+def _percentiles(lat_ns: np.ndarray):
+    return {
+        "p50_ns": float(np.percentile(lat_ns, 50)),
+        "p99_ns": float(np.percentile(lat_ns, 99)),
+        "p999_ns": float(np.percentile(lat_ns, 99.9)),
+        "max_ns": float(lat_ns.max()),
+    }
+
+
+def _run_mix(keys: np.ndarray, insert_pool: np.ndarray, write_frac: float,
+             n_ops: int, batch_size: int, seed: int):
+    """One mix on a freshly bulkloaded index; returns the result dict."""
+    pv = np.arange(len(keys), dtype=np.int64)
+    # tight tier bounds so delta merges AND incremental folds actually
+    # fire inside the measured window (the stall they bound is the test)
+    nfl = NFL(NFLConfig(
+        flow=FlowConfig(dim=3), flow_train=FlowTrainConfig(epochs=1),
+        backend="flat",
+        flat_index=FlatAFLIConfig(rebuild_frac=0.005, delta_cap=256,
+                                  fold_step_keys=8192)))
+    t0 = time.perf_counter()
+    nfl.bulkload(keys, pv)
+    t_load = time.perf_counter() - t0
+
+    oracle = {k: p for k, p in zip(keys, pv)}
+    rng = np.random.default_rng(seed)
+    # warm the compile caches (read + insert shapes) outside timing
+    nfl.lookup_batch(keys[:batch_size])
+    nfl.index.n_host_tier_probes = 0
+
+    next_ins = 0
+    high_water = 0          # how much of insert_pool is live (readable)
+    lat, read_lat, ins_lat, ins_call_s = [], [], [], []
+    wrong = 0
+    serve_tier_path = None  # routing of the SERVING dispatches (the fold's
+    #                         internal verify lookups also touch
+    #                         last_dispatch, so sample right after serving)
+    t_run0 = time.perf_counter()
+    ops_done = 0
+    while ops_done < n_ops:
+        is_write = rng.random(batch_size) < write_frac
+        n_w = int(is_write.sum())
+        n_r = batch_size - n_w
+        if n_r:
+            # reads target bulkloaded AND already-inserted keys, so the
+            # dict-oracle check validates the write tiers' read results
+            q = rng.choice(keys, n_r)
+            if high_water:
+                tiered = rng.random(n_r) < 0.5
+                q[tiered] = rng.choice(insert_pool[:high_water],
+                                       int(tiered.sum()))
+        else:
+            q = None
+        if n_w and next_ins + n_w > len(insert_pool):
+            next_ins = 0  # wrap: re-inserts exercise last-write-wins
+        ins_k = insert_pool[next_ins:next_ins + n_w]
+        ins_v = (np.arange(n_w, dtype=np.int64) + 1_000_000_000
+                 + ops_done)
+        next_ins += n_w
+        # serving time only — dict-oracle bookkeeping stays OUTSIDE every
+        # timed window so the p50/p999 gate measures the index, not the
+        # benchmark's own Python loops
+        t_read = 0.0
+        res = None
+        if q is not None and len(q):
+            t0 = time.perf_counter()
+            res = nfl.lookup_batch(q)
+            t_read = time.perf_counter() - t0
+            read_lat.append(t_read / len(q))
+            serve_tier_path = nfl.index.last_dispatch.get("tier_path")
+        t_ins = 0.0
+        if n_w:
+            t0 = time.perf_counter()
+            nfl.insert_batch(ins_k, ins_v)
+            t_ins = time.perf_counter() - t0
+            ins_call_s.append(t_ins)
+            ins_lat.append(t_ins / n_w)
+        lat.append((t_read + t_ins) / batch_size)
+        if res is not None:
+            exp = np.array([oracle.get(k, -1) for k in q])
+            wrong += int((res != exp).sum())
+        if n_w:
+            for k, v in zip(ins_k, ins_v):
+                oracle[k] = v
+            high_water = max(high_water, next_ins)
+        ops_done += batch_size
+    t_run = time.perf_counter() - t_run0
+
+    lat_ns = np.asarray(lat) * 1e9
+    st = nfl.stats()
+    out = {
+        "write_frac": write_frac,
+        "n_ops": ops_done,
+        "bulkload_s": t_load,
+        "run_s": t_run,
+        "throughput_mops": ops_done / t_run / 1e6,
+        **_percentiles(lat_ns),
+        "read": _percentiles(np.asarray(read_lat) * 1e9),
+        "insert": _percentiles(np.asarray(ins_lat) * 1e9)
+        if ins_lat else {},
+        "max_insert_call_s": float(max(ins_call_s)) if ins_call_s else 0.0,
+        "wrong": wrong,
+        "host_tier_probes": int(st["n_host_tier_probes"]),
+        "n_rebuilds": int(st["n_rebuilds"]),
+        "fold_active_at_end": bool(st["fold_active"]),
+        "delta_len": int(st["delta_len"]),
+        "run_len": int(st["run_len"]),
+        "tier_path": serve_tier_path,
+    }
+    out["p999_over_p50"] = out["p999_ns"] / max(out["p50_ns"], 1.0)
+    return out
+
+
+def run(n_keys: int = 65_536, n_ops: int = 12_288, batch_size: int = 256,
+        out_json: str = DEFAULT_OUT):
+    all_keys = make_dataset("lognormal", int(n_keys * 1.5))
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(all_keys))
+    keys = np.ascontiguousarray(all_keys[perm[:n_keys]])
+    insert_pool = np.ascontiguousarray(all_keys[perm[n_keys:]])
+
+    results = {"workload": {"n_keys": int(len(keys)),
+                            "n_insertable": int(len(insert_pool)),
+                            "n_ops": n_ops, "batch_size": batch_size,
+                            "dataset": "lognormal"},
+               "mixes": {}}
+    for mix_no, (name, frac) in enumerate(MIXES):
+        r = _run_mix(keys, insert_pool, frac, n_ops, batch_size,
+                     seed=1000 + mix_no)
+        results["mixes"][name] = r
+        print(f"[mixed {name}] {r['throughput_mops']*1e3:.1f} kops/s "
+              f"p50={r['p50_ns']/1e3:.1f}us p99={r['p99_ns']/1e3:.1f}us "
+              f"p999={r['p999_ns']/1e3:.1f}us (x{r['p999_over_p50']:.1f}) "
+              f"wrong={r['wrong']} host_probes={r['host_tier_probes']} "
+              f"rebuilds={r['n_rebuilds']}")
+        if r["wrong"]:
+            raise AssertionError(f"mixed workload {name}: {r['wrong']} "
+                                 "lookups diverged from the dict oracle")
+    eighty = results["mixes"]["80/20"]
+    # the gate is only meaningful if the incremental fold actually engaged
+    # in the gated window (a completed fold or one still in flight)
+    results["no_full_rebuild_stall"] = (
+        eighty["p999_over_p50"] < 10.0
+        and (eighty["n_rebuilds"] >= 1 or eighty["fold_active_at_end"]))
+    results["zero_host_probes"] = all(
+        m["host_tier_probes"] == 0 for m in results["mixes"].values())
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
+def rows(results) -> List[Tuple]:
+    out = []
+    for name, r in results["mixes"].items():
+        out.append((f"perf_mixed_workload/{name.replace('/', '_')}",
+                    r["p50_ns"] / 1e3,
+                    f"p999_over_p50={r['p999_over_p50']:.1f};"
+                    f"host_probes={r['host_tier_probes']};"
+                    f"rebuilds={r['n_rebuilds']}"))
+    return out

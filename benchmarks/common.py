@@ -22,8 +22,10 @@ DEFAULT_MIXES = ["read_only", "read_heavy", "write_heavy", "write_only"]
 
 class FlatNFLAdapter:
     """Beyond-paper serving path: the fused single-dispatch Pallas kernel —
-    NF forward + multi-level FlatAFLI traversal in one ``pallas_call`` per
-    request batch (DESIGN.md §9) — with log-structured inserts.
+    NF forward + multi-level FlatAFLI traversal + in-kernel write-tier
+    probe in one ``pallas_call`` per request batch (DESIGN.md §9/§10) —
+    with tiered log-structured inserts (last-write-wins identity) and
+    incremental folds instead of synchronous O(n) rebuilds.
     §Perf hillclimb 3."""
 
     def __init__(self, dim: int = 3):
@@ -45,6 +47,9 @@ class FlatNFLAdapter:
 
     def insert_batch(self, keys, payloads):
         self.nfl.insert_batch(keys, payloads)
+
+    def update_batch(self, keys, payloads):
+        return self.nfl.update_batch(keys, payloads)
 
     def size_bytes(self):
         a = self.nfl.index.arrays

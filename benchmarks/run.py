@@ -17,21 +17,28 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None,
-                    help="comma list: fig7,fig8,fig10,fig11,table1,table2,"
-                         "table3,roofline,fused")
+    ap.add_argument("--only", action="append", default=None,
+                    help="tag filter, repeatable and/or comma-separated: "
+                         "fig7,fig8,fig10,fig11,table1,table2,table3,"
+                         "roofline,fused,mixed")
     ap.add_argument("--n-keys", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale sizes (CI smoke; see "
+                         "scripts/verify.sh)")
     args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else None
+    only = (set(t for part in args.only for t in part.split(","))
+            if args.only else None)
 
     from benchmarks import (bench_alex_nf, bench_bulkload, bench_conflict,
                             bench_fused_lookup, bench_index_size,
-                            bench_latency, bench_nf_latency,
-                            bench_probe_batch, bench_roofline,
-                            bench_throughput)
+                            bench_latency, bench_mixed_workload,
+                            bench_nf_latency, bench_probe_batch,
+                            bench_roofline, bench_throughput)
     from benchmarks.common import ALL_DATASETS, DEFAULT_DATASETS
 
     n_keys = args.n_keys or (400_000 if args.full else 100_000)
+    if args.smoke and args.n_keys is None:
+        n_keys = 8_192
     datasets = ALL_DATASETS if args.full else DEFAULT_DATASETS
     rows = []
 
@@ -60,8 +67,22 @@ def main() -> None:
             n_keys=n_keys, datasets=datasets if not args.full else None))
     if want("fused"):
         # also emits machine-readable BENCH_fused_lookup.json
-        rows += bench_fused_lookup.rows(bench_fused_lookup.run(
-            n_keys=max(n_keys, 65_536) if args.full else 65_536))
+        if args.smoke:
+            # smoke: no artifact — don't clobber the committed full-size
+            # BENCH json with seconds-scale numbers
+            rows += bench_fused_lookup.rows(bench_fused_lookup.run(
+                n_keys=n_keys, n_queries=1_024, repeats=2, out_json=None))
+        else:
+            rows += bench_fused_lookup.rows(bench_fused_lookup.run(
+                n_keys=max(n_keys, 65_536) if args.full else 65_536))
+    if want("mixed"):
+        # read/insert mixes; emits BENCH_mixed_workload.json
+        if args.smoke:
+            rows += bench_mixed_workload.rows(bench_mixed_workload.run(
+                n_keys=n_keys, n_ops=1_024, batch_size=256, out_json=None))
+        else:
+            rows += bench_mixed_workload.rows(bench_mixed_workload.run(
+                n_keys=max(n_keys, 65_536) if args.full else 65_536))
     if want("roofline"):
         rows += bench_roofline.rows(bench_roofline.run())
 

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Pre-merge verification: tier-1 test suite + a seconds-scale smoke of
+# the two serving-path benchmarks (fused read path, mixed write path),
+# so a perf-path regression in either dispatch route is caught before
+# it lands.  Usage: scripts/verify.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 test suite =="
+python -m pytest -x -q "$@"
+
+echo "== serving-path smoke (fused + mixed) =="
+python -m benchmarks.run --smoke --only fused --only mixed
+
+echo "verify.sh: OK"

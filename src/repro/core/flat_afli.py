@@ -14,17 +14,23 @@ nodes) but flattens everything into a structure-of-arrays pool:
   'double' math);
 * key *identity* is exact regardless of f32 collisions: every record carries
   the original 64-bit key as a (hi, lo) uint32 pair compared bitwise;
-* updates are log-structured (the TPU analog of AFLI's buckets-buffer-then-
-  Modelling): batch inserts land in a sorted delta run probed alongside the
-  main structure; a host-side rebuild (the batched Modelling) folds the
-  delta in when it exceeds ``rebuild_frac``.
+* updates are log-structured and tiered (DESIGN.md §10, the TPU analog of
+  AFLI's buckets-buffer-then-Modelling): batch inserts land in a bounded
+  *active delta* that merges into a *compacted sorted run* (two-way merge,
+  last-write-wins by 64-bit identity) when full; both tiers are
+  device-resident pools probed *inside* the fused lookup kernel, and an
+  *incremental fold* (the batched Modelling, split into bounded work
+  steps) folds the run back into the static structure without an O(n)
+  stall on any single ``insert_batch`` call.
 
 The pure-jnp probe here is also the reference oracle for the
-``kernels/index_probe`` Pallas kernel.
+``kernels/index_probe`` Pallas kernel, and ``_probe_delta`` is the host
+oracle for the in-kernel tier probe.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from functools import partial
 from typing import NamedTuple, Optional, Tuple
@@ -34,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.conflict import fit_linear_model, tail_conflict_degree
+from repro.kernels.fused_lookup import _pow2ceil
 
 __all__ = ["FlatAFLI", "FlatAFLIConfig", "FlatArrays"]
 
@@ -56,6 +63,104 @@ def _max_equal_run(sorted_vals: np.ndarray) -> int:
     return int(np.diff(edges).max())
 
 
+def _ids64(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    """(hi, lo) u32 identity bits -> u64 identity words."""
+    return (hi.astype(np.uint64) << np.uint64(32)) | lo.astype(np.uint64)
+
+
+def _depth_round(d: int) -> int:
+    """Traversal depth bound rounded up to a multiple of 4: the level
+    loop exits as soon as every query is done, so a larger static bound
+    costs nothing at runtime but keeps rebuild-churned trees (whose
+    exact height moves by one) on a handful of compiled kernels."""
+    return ((int(d) + 3) // 4) * 4
+
+
+def _window_round(w: int) -> int:
+    """Duplicate-run scan window, rounded up to a power of two so the
+    kernel compile count stays bounded.  Scanning further than the exact
+    run length is semantically free: the scan matches by exact 64-bit
+    identity, so extra positions can only find the one true entry."""
+    return max(4, 1 << max(int(w) - 1, 0).bit_length())
+
+
+def _dedup_newest(pk: np.ndarray, hi: np.ndarray, lo: np.ndarray,
+                  pv: np.ndarray):
+    """Last-write-wins by 64-bit identity, then stable re-sort by
+    positioning key.  Input order is age order (oldest first): the
+    stable identity sort keeps it, so ``keep-last`` selects the newest
+    copy of every identity."""
+    u64 = _ids64(hi, lo)
+    order = np.argsort(u64, kind="stable")
+    su = u64[order]
+    keep = order[np.append(su[1:] != su[:-1], True)]
+    pk, hi, lo, pv = pk[keep], hi[keep], lo[keep], pv[keep]
+    order = np.argsort(pk, kind="stable")
+    return pk[order], hi[order], lo[order], pv[order]
+
+
+def _tier_window(pk_pool: np.ndarray) -> int:
+    """Shared probe-window bound for one sorted tier: the pow2-rounded
+    max equal-key run.  Used by BOTH the host probe and the kernel pack
+    so the two probes scan the same neighborhood geometry."""
+    return _window_round(max(_max_equal_run(pk_pool), 1))
+
+
+def _probe_sorted_pool(pk_pool: np.ndarray, hi_pool: np.ndarray,
+                       lo_pool: np.ndarray, pv_pool: np.ndarray,
+                       q: np.ndarray, qhi: np.ndarray,
+                       qlo: np.ndarray) -> np.ndarray:
+    """Newest matching payload per query from one sorted tier (-1 = miss).
+
+    Host oracle twin of the kernel's ``probe_tier`` with the SAME
+    semantics: leftmost binary search locates the equal-key neighborhood,
+    then a symmetric window scan ``[j - W, j + 3W)`` resolves by exact
+    (hi, lo) identity only — the positioning key is the locator, never
+    the matcher, so a query key that drifted 1 ulp from the stored copy
+    (the kernel's NF re-materialization hazard) resolves identically on
+    both dispatch routes.  Tiers keep insertion order within an
+    equal-pkey window (stable sort), so the highest matching index is
+    the last write — the NEWEST copy wins."""
+    out = np.full(q.shape[0], -1, np.int32)
+    n = pk_pool.shape[0]
+    if not n:
+        return out
+    window = _tier_window(pk_pool)
+    j = np.searchsorted(pk_pool, q, side="left")
+    for w in range(-window, 3 * window):
+        jj = j + w
+        valid = (jj >= 0) & (jj < n)
+        jjc = np.clip(jj, 0, n - 1)
+        ok = valid & (hi_pool[jjc] == qhi) & (lo_pool[jjc] == qlo)
+        out = np.where(ok, pv_pool[jjc], out)  # later w = newer write
+    return out
+
+
+def _pack_tier(pk: np.ndarray, hi: np.ndarray, lo: np.ndarray,
+               pv: np.ndarray):
+    """One write tier -> lane-padded device pool + static probe bounds.
+
+    Pads to a power of two with at least one ``+inf`` sentinel row (the
+    in-kernel binary search can then never land in live-looking padding)
+    and returns ``(jnp arrays, bs_iters, window)``; sizes are
+    pow2-rounded so recompiles stay bounded as the tiers grow."""
+    n = int(pk.shape[0])
+    m = max(128, _pow2ceil(n + 1))
+    ppk = np.full(m, np.inf, np.float32)
+    ppk[:n] = pk
+    phi = np.zeros(m, np.uint32)
+    phi[:n] = hi
+    plo = np.zeros(m, np.uint32)
+    plo[:n] = lo
+    ppv = np.full(m, -1, np.int32)
+    ppv[:n] = pv
+    plen = np.zeros(128, np.int32)
+    plen[0] = n
+    arrays = (jnp.asarray(ppk), jnp.asarray(phi), jnp.asarray(plo),
+              jnp.asarray(ppv), jnp.asarray(plen))
+    return arrays, m.bit_length(), _tier_window(pk)
+
+
 @dataclasses.dataclass(frozen=True)
 class FlatAFLIConfig:
     gamma: float = 0.99
@@ -64,9 +169,12 @@ class FlatAFLIConfig:
     alpha: float = 1.2
     max_depth: int = 16
     dense_search_iters: int = 24      # binary-search rounds (2^24 max dense)
-    rebuild_frac: float = 0.25        # delta/total ratio triggering rebuild
+    rebuild_frac: float = 0.25        # run/total ratio triggering the fold
     use_fused_kernel: bool = True     # serve via kernels/fused_lookup
     vmem_budget: Optional[int] = None  # pool-bytes cap; None -> backend default
+    delta_cap: int = 4096             # active-delta bound before run merge
+    fold_step_keys: int = 4096        # incremental-fold work unit (keys)
+    fold_work_factor: float = 8.0     # fold work per insert call, x batch
 
 
 class FlatArrays(NamedTuple):
@@ -154,8 +262,17 @@ class _Builder:
         return nid
 
     def build(self, pk: np.ndarray, hi: np.ndarray, lo: np.ndarray,
-              pv: np.ndarray, depth: int = 1) -> int:
-        """Returns node id.  pk is f32, sorted."""
+              pv: np.ndarray, depth: int = 1, defer=None,
+              key_base: int = 0) -> int:
+        """Returns node id.  pk is f32, sorted.
+
+        ``defer`` (an ``_IncrementalFold``) bounds the synchronous work:
+        child subtrees and dense fills are enqueued as fold work items
+        (identified by absolute key ranges via ``key_base``) instead of
+        being built inline once ``defer.should_defer`` says the step
+        budget is spent — inline leaf placements report their cost via
+        ``defer.charge`` — so no single call pays more than one bounded
+        partition pass plus ~``fold_step_keys`` of leaf building."""
         cfg = self.cfg
         n = pk.shape[0]
         self.max_depth = max(self.max_depth, depth)
@@ -178,12 +295,17 @@ class _Builder:
             # dense node: sorted compact slice, probed by binary search
             nid = self._alloc_node(KIND_DENSE, 0.0, 0.0, n)
             off = self.node_offset[nid]
+            if defer is not None and defer.should_defer(n):
+                defer.defer_dense(off, key_base, key_base + n)
+                return nid
             for i in range(n):
                 self.etype[off + i] = DATA
                 self.ekey[off + i] = pk[i]
                 self.ehi[off + i] = int(hi[i])
                 self.elo[off + i] = int(lo[i])
                 self.epayload[off + i] = int(pv[i])
+            if defer is not None:
+                defer.charge(n)
             return nid
         size = min(max(int(np.floor(n * cfg.alpha)), 2), last - first + 1)
         # compress into [0, size) in f32, then recompute with f32 math
@@ -225,13 +347,22 @@ class _Builder:
                        and int(counts[run_end]) >= self.d_tail):
                     total += int(counts[run_end])
                     run_end += 1
+                last_slot = int(slots[run_end - 1])
                 if total == n:
                     child = self._alloc_dense(pk[i:i + total], hi[i:i + total],
-                                              lo[i:i + total], pv[i:i + total])
+                                              lo[i:i + total], pv[i:i + total],
+                                              defer, key_base + i)
+                elif defer is not None and defer.should_defer(total):
+                    # bounded-step fold: the subtree is built by a later
+                    # work item, which patches these CHILD entries
+                    child = -1
+                    defer.defer_subtree(off + slot, off + last_slot,
+                                        key_base + i, key_base + i + total,
+                                        depth + 1)
                 else:
                     child = self.build(pk[i:i + total], hi[i:i + total],
-                                       lo[i:i + total], pv[i:i + total], depth + 1)
-                last_slot = int(slots[run_end - 1])
+                                       lo[i:i + total], pv[i:i + total],
+                                       depth + 1, defer, key_base + i)
                 for p in range(slot, last_slot + 1):
                     ee = off + p
                     self.etype[ee] = CHILD
@@ -240,16 +371,30 @@ class _Builder:
                 s = run_end
         return nid
 
-    def _alloc_dense(self, pk, hi, lo, pv) -> int:
+    def _alloc_dense(self, pk, hi, lo, pv, defer=None, key_base: int = 0) -> int:
         nid = self._alloc_node(KIND_DENSE, 0.0, 0.0, pk.shape[0])
         off = self.node_offset[nid]
+        if defer is not None and defer.should_defer(pk.shape[0]):
+            defer.defer_dense(off, key_base, key_base + pk.shape[0])
+            return nid
         for i in range(pk.shape[0]):
             self.etype[off + i] = DATA
             self.ekey[off + i] = pk[i]
             self.ehi[off + i] = int(hi[i])
             self.elo[off + i] = int(lo[i])
             self.epayload[off + i] = int(pv[i])
+        if defer is not None:
+            defer.charge(pk.shape[0])
         return nid
+
+    def fill_dense(self, off: int, pk, hi, lo, pv) -> None:
+        """Deferred dense fill: one bounded chunk of DATA entries."""
+        for i in range(pk.shape[0]):
+            self.etype[off + i] = DATA
+            self.ekey[off + i] = pk[i]
+            self.ehi[off + i] = int(hi[i])
+            self.elo[off + i] = int(lo[i])
+            self.epayload[off + i] = int(pv[i])
 
     def finalize(self) -> FlatArrays:
         cap = self.cfg.max_bucket
@@ -281,6 +426,197 @@ class _Builder:
             bkey=jnp.asarray(bkey), bhi=jnp.asarray(bhi), blo=jnp.asarray(blo),
             bpayload=jnp.asarray(bpv), blen=jnp.asarray(blen),
         )
+
+
+class _IncrementalFold:
+    """Bounded-step rebuild (DESIGN.md §10).
+
+    The batched Modelling, split into work items processed under a
+    per-call key budget so no single ``insert_batch`` pays the full O(n)
+    reorganization stall:
+
+    1. ``root``    — one partition pass over the snapshot (the frozen
+       write tiers merged into the static entries, last-write-wins by
+       identity); child subtrees / dense fills larger than
+       ``fold_step_keys`` are *deferred* as further items;
+    2. ``subtree`` / ``dense`` — bounded child builds that patch their
+       parent CHILD entries when done;
+    3. ``finalize`` — pool flattening + kernel packing;
+    4. ``verify`` (and ``verify_flow`` when a flow serve context is set)
+       — chunked device-verified placement (§8) against the *new* arrays;
+       divergent keys are collected as shadows.
+
+    The old structure plus the frozen tiers keep serving throughout; when
+    the queue drains the new structure swaps in atomically, the consumed
+    run tier is replaced by the collected shadows, and the active delta
+    (which only grew during the fold, so its entries stay newest) carries
+    over untouched.
+    """
+
+    def __init__(self, idx: "FlatAFLI", pk, hi, lo, pv):
+        self.idx = idx
+        self.pk, self.hi, self.lo, self.pv = pk, hi, lo, pv
+        self.n = int(pk.shape[0])
+        self.step = max(int(idx.cfg.fold_step_keys), 1)
+        self.builder = _Builder(idx.cfg, idx.d_tail)
+        self.build_items = collections.deque()
+        self.post_items = collections.deque()
+        self.phase = "root"
+        self.arrays_new: Optional[FlatArrays] = None
+        self.pools_new = None
+        self.max_depth_new = 1
+        self.dense_window_new = 8
+        self.shadow = []  # [(pk, hi, lo, pv)] chunks for the new run tier
+        self._tick_used = 0  # inline leaf work charged by the current item
+
+    # ---- defer hooks (called from _Builder.build)
+    def charge(self, n) -> None:
+        """Inline leaf work performed by the current item (keys placed)."""
+        self._tick_used += int(n)
+
+    def should_defer(self, total) -> bool:
+        """True once building ``total`` more keys inline would blow the
+        per-item step budget — the run is enqueued as its own item
+        instead, so item costs stay ~``fold_step_keys`` even when a
+        partition consists entirely of small child runs."""
+        return (total > self.step
+                or self._tick_used + total > self.step)
+
+    def defer_subtree(self, e_lo, e_hi, k_lo, k_hi, depth):
+        self.build_items.append(("subtree", e_lo, e_hi, k_lo, k_hi, depth))
+
+    def defer_dense(self, off, k_lo, k_hi):
+        for s in range(k_lo, k_hi, self.step):
+            self.build_items.append(
+                ("dense", off + (s - k_lo), s, min(s + self.step, k_hi)))
+
+    # ---- work loop
+    def tick(self, budget: int) -> bool:
+        """Process queued work under ``budget`` (in keys; at least one
+        item per call).  Returns True once the new structure is live."""
+        while budget > 0:
+            if self.phase == "root":
+                self._tick_used = 0
+                self.builder.build(self.pk, self.hi, self.lo, self.pv,
+                                   depth=1, defer=self)
+                self.phase = "build"
+                # inline leaf work + the O(#slots) partition scan
+                budget -= max(self._tick_used, self.n // 16, 1)
+            elif self.phase == "build":
+                if not self.build_items:
+                    self.phase = "finalize"
+                    continue
+                item = self.build_items.popleft()
+                self._tick_used = 0
+                budget -= self._build_item(item)
+            elif self.phase == "finalize":
+                budget -= self._finalize()
+                self.phase = "verify"
+            elif self.phase == "verify":
+                if not self.post_items:
+                    self._swap()
+                    return True
+                kind, k_lo, k_hi = self.post_items.popleft()
+                if kind == "verify":
+                    self._verify_chunk(k_lo, k_hi)
+                else:
+                    self._verify_flow_chunk(k_lo, k_hi)
+                budget -= max(k_hi - k_lo, 1)
+        return False
+
+    def _build_item(self, item) -> int:
+        b = self.builder
+        if item[0] == "subtree":
+            _, e_lo, e_hi, k_lo, k_hi, depth = item
+            child = b.build(self.pk[k_lo:k_hi], self.hi[k_lo:k_hi],
+                            self.lo[k_lo:k_hi], self.pv[k_lo:k_hi],
+                            depth, defer=self, key_base=k_lo)
+            for p in range(e_lo, e_hi + 1):
+                b.echild[p] = child
+            # the item may have deferred most of its range onward; charge
+            # the inline leaf work plus its own partition scan
+            return max(self._tick_used, (k_hi - k_lo) // 16, 1)
+        _, off, k_lo, k_hi = item
+        b.fill_dense(off, self.pk[k_lo:k_hi], self.hi[k_lo:k_hi],
+                     self.lo[k_lo:k_hi], self.pv[k_lo:k_hi])
+        return max(k_hi - k_lo, 1)
+
+    def _finalize(self) -> int:
+        self.arrays_new = self.builder.finalize()
+        self.pools_new = self.arrays_new.to_kernel_args()
+        self.max_depth_new = self.builder.max_depth + 1
+        self.dense_window_new = _max_equal_run(self.pk) + 2
+        for s in range(0, self.n, self.step):
+            self.post_items.append(("verify", s, min(s + self.step, self.n)))
+        if self.idx._serve_flow is not None:
+            for s in range(0, self.n, self.step):
+                self.post_items.append(
+                    ("verify_flow", s, min(s + self.step, self.n)))
+        return max(self.n // 4, 1)
+
+    def _lookup_kwargs(self):
+        return dict(arrays=self.arrays_new, pools=self.pools_new,
+                    max_depth=_depth_round(self.max_depth_new),
+                    dense_window=_window_round(self.dense_window_new),
+                    tiers=False)
+
+    def _verify_chunk(self, k_lo, k_hi) -> None:
+        """§8 device-verified placement, tree-only: tiers are excluded so
+        a during-fold insert for the same identity cannot be mistaken for
+        a placement divergence (its newer payload must keep winning)."""
+        pk = self.pk[k_lo:k_hi]
+        hi, lo = self.hi[k_lo:k_hi], self.lo[k_lo:k_hi]
+        pv = self.pv[k_lo:k_hi]
+        res = self.idx._device_lookup(pk, hi, lo, **self._lookup_kwargs())
+        wrong = res != pv
+        if wrong.any():
+            self.shadow.append((pk[wrong], hi[wrong], lo[wrong], pv[wrong]))
+
+    def _verify_flow_chunk(self, k_lo, k_hi) -> None:
+        """§8 extended to the fused serve path: identity keys are
+        reconstructed from the stored (hi, lo) bit pools and re-run
+        through the in-kernel NF, so keys that diverge only under the
+        serve-path transform keep their shadow across folds."""
+        from repro.core.feature import expand_features
+
+        normalizer, flow_cfg, packed_w, shapes = self.idx._serve_flow
+        hi, lo = self.hi[k_lo:k_hi], self.lo[k_lo:k_hi]
+        pv = self.pv[k_lo:k_hi]
+        ik64 = _ids64(hi, lo).view(np.float64)
+        feats = expand_features(ik64, normalizer, flow_cfg.dim,
+                                flow_cfg.theta, dtype=np.float32)
+        res, z = self.idx._flow_device_lookup(feats, hi, lo, packed_w,
+                                              shapes, **self._lookup_kwargs())
+        wrong = res != pv
+        if wrong.any():
+            self.shadow.append((z[wrong].astype(np.float32), hi[wrong],
+                                lo[wrong], pv[wrong]))
+
+    def _swap(self) -> None:
+        idx = self.idx
+        idx.arrays = self.arrays_new
+        idx._kpools = self.pools_new
+        idx.max_depth = self.max_depth_new
+        idx.dense_window = self.dense_window_new
+        # the frozen run was consumed by the snapshot; placement shadows
+        # seed the new run tier (below the active delta, so newer inserts
+        # for the same identity still win)
+        if self.shadow:
+            pk = np.concatenate([s[0] for s in self.shadow])
+            hi = np.concatenate([s[1] for s in self.shadow])
+            lo = np.concatenate([s[2] for s in self.shadow])
+            pv = np.concatenate([s[3] for s in self.shadow])
+            order = np.argsort(pk, kind="stable")
+            idx._run_pk, idx._run_hi = pk[order], hi[order]
+            idx._run_lo, idx._run_pv = lo[order], pv[order].astype(np.int32)
+        else:
+            idx._run_pk = np.empty(0, np.float32)
+            idx._run_hi = np.empty(0, np.uint32)
+            idx._run_lo = np.empty(0, np.uint32)
+            idx._run_pv = np.empty(0, np.int32)
+        idx._run_pack = None
+        idx.n_rebuilds += 1
+        idx._fold = None
 
 
 @partial(jax.jit, static_argnames=("max_depth", "dense_iters", "bucket_cap",
@@ -373,7 +709,7 @@ def flat_lookup(arrays: FlatArrays, qkey: jnp.ndarray, qhi: jnp.ndarray,
 
 
 class FlatAFLI:
-    """Static flat index + log-structured delta for updates."""
+    """Static flat index + tiered log-structured write path (§10)."""
 
     def __init__(self, cfg: FlatAFLIConfig | None = None):
         self.cfg = cfg or FlatAFLIConfig()
@@ -383,13 +719,14 @@ class FlatAFLI:
         self.max_depth = 1
         self.d_tail = self.cfg.min_bucket
         self.n_keys = 0
-        # delta run (host, sorted by pkey f32) — TPU-adaptation of buckets
-        self._delta_pk = np.empty(0, np.float32)
-        self._delta_hi = np.empty(0, np.uint32)
-        self._delta_lo = np.empty(0, np.uint32)
-        self._delta_pv = np.empty(0, np.int32)
-        self._delta_dev = None
+        # write tiers (host mirrors, sorted by pkey f32; device twins are
+        # packed lazily) — newest first: active delta > compacted run
+        self._fold: Optional[_IncrementalFold] = None
+        self._reset_tiers()
+        self._id_set = set()           # u64 identities currently indexed
+        self._serve_flow = None        # (normalizer, flow_cfg, packed_w, shapes)
         self.n_rebuilds = 0
+        self.n_host_tier_probes = 0    # host _probe_delta fallbacks taken
 
     # -------------------------------------------------------------- build
     def build(self, pkeys: np.ndarray, payloads: np.ndarray,
@@ -419,9 +756,38 @@ class FlatAFLI:
         self.arrays = builder.finalize()
         self._kpools = None
         self.max_depth = builder.max_depth + 1
-        self.n_keys = int(pk32.shape[0])
         self.dense_window = _max_equal_run(pk32) + 2
+        self._reset_tiers()
+        self._id_set = set(_ids64(hi, lo).tolist())
+        self.n_keys = len(self._id_set)
         self._self_verify(pk32, hi, lo, pv.astype(np.int32))
+
+    def _reset_tiers(self) -> None:
+        self._delta_pk = np.empty(0, np.float32)
+        self._delta_hi = np.empty(0, np.uint32)
+        self._delta_lo = np.empty(0, np.uint32)
+        self._delta_pv = np.empty(0, np.int32)
+        self._run_pk = np.empty(0, np.float32)
+        self._run_hi = np.empty(0, np.uint32)
+        self._run_lo = np.empty(0, np.uint32)
+        self._run_pv = np.empty(0, np.int32)
+        self._delta_pack = None
+        self._run_pack = None
+        self._fold = None
+
+    def set_serve_flow(self, normalizer, flow_cfg, packed_w, shapes) -> None:
+        """Register the fused serve-path flow context so every fold can
+        re-verify placement through the in-kernel NF (§8/§10): identity
+        keys are reconstructed from the stored (hi, lo) bit pools, so no
+        raw-key copy needs to be retained."""
+        self._serve_flow = (normalizer, flow_cfg, packed_w, shapes)
+
+    def contains_batch(self, ikeys: np.ndarray) -> np.ndarray:
+        """Exact membership by 64-bit identity (tree + write tiers)."""
+        hi, lo = split_key_bits(np.asarray(ikeys, dtype=np.float64))
+        ids = self._id_set
+        return np.fromiter((int(u) in ids for u in _ids64(hi, lo)),
+                           bool, count=hi.shape[0])
 
     # ---------------------------------------------------- device dispatch
     def _kernel_pools(self):
@@ -431,24 +797,39 @@ class FlatAFLI:
         return self._kpools
 
     def _dense_window_static(self) -> int:
-        """Duplicate-run scan window, rounded up to a power of two so the
-        kernel compile count stays bounded across rebuilds.  Scanning
-        further than the exact run length is semantically free: the scan
-        matches by exact 64-bit identity, so extra positions can only find
-        the one true entry."""
-        w = int(getattr(self, "dense_window", 8))
-        return max(4, 1 << max(w - 1, 0).bit_length())
+        return _window_round(int(getattr(self, "dense_window", 8)))
 
     def _depth_static(self) -> int:
-        """Traversal depth bound rounded up to a multiple of 4: the level
-        loop exits as soon as every query is done, so a larger static
-        bound costs nothing at runtime but keeps rebuild-churned trees
-        (whose exact height moves by one) on a handful of compiled
-        kernels."""
-        return ((int(self.max_depth) + 3) // 4) * 4
+        return _depth_round(self.max_depth)
+
+    def _tier_pack(self):
+        """TierPack thunk for ``ops.fused_lookup`` — ``None`` when both
+        write tiers are empty (the probe stage compiles out).  Run and
+        delta blocks are cached independently: the delta repacks on every
+        insert batch, the (much larger) run only on merge/fold."""
+        from repro.kernels.fused_lookup import TierPack, TierPools
+
+        if not (self._delta_pk.shape[0] or self._run_pk.shape[0]):
+            return None
+        if self._run_pack is None:
+            self._run_pack = _pack_tier(self._run_pk, self._run_hi,
+                                        self._run_lo, self._run_pv)
+        if self._delta_pack is None:
+            self._delta_pack = _pack_tier(self._delta_pk, self._delta_hi,
+                                          self._delta_lo, self._delta_pv)
+        (r_arrays, r_iters, r_window) = self._run_pack
+        (d_arrays, d_iters, d_window) = self._delta_pack
+        return TierPack(pools=TierPools(*r_arrays, *d_arrays),
+                        run_iters=r_iters, run_window=r_window,
+                        delta_iters=d_iters, delta_window=d_window)
 
     def _device_lookup(self, pk32: np.ndarray, hi: np.ndarray,
-                       lo: np.ndarray) -> np.ndarray:
+                       lo: np.ndarray, *, arrays=None, pools=None,
+                       max_depth=None, dense_window=None,
+                       tiers: bool = True) -> np.ndarray:
+        """Non-flow kernel dispatch.  The keyword overrides let the
+        incremental fold verify a *candidate* structure (new arrays/pools,
+        tiers excluded) while the old one keeps serving."""
         from repro.kernels import ops
 
         # pad to power-of-two buckets: ragged request batches would
@@ -460,13 +841,16 @@ class FlatAFLI:
             hi = np.pad(hi, (0, n_pad - n))
             lo = np.pad(lo, (0, n_pad - n))
         res, _z, self.last_dispatch = ops.fused_lookup(
-            self.arrays, self._kernel_pools,
+            self.arrays if arrays is None else arrays,
+            self._kernel_pools if pools is None else pools,
             jnp.asarray(np.ascontiguousarray(pk32).reshape(-1, 1)),
             jnp.asarray(hi), jnp.asarray(lo), flow=None,
-            max_depth=self._depth_static(),
+            max_depth=self._depth_static() if max_depth is None else max_depth,
             dense_iters=self.cfg.dense_search_iters,
             bucket_cap=self.cfg.max_bucket,
-            dense_window=self._dense_window_static(),
+            dense_window=(self._dense_window_static()
+                          if dense_window is None else dense_window),
+            tiers=self._tier_pack if tiers else None,
             vmem_budget=self.cfg.vmem_budget
             if self.cfg.use_fused_kernel else 0,
         )
@@ -477,17 +861,21 @@ class FlatAFLI:
 
         Builder slot arithmetic (numpy f32) and compiled slot arithmetic
         (XLA, FMA-contracted) can disagree by one slot for keys sitting on
-        an exact rint boundary (~0.1%).  Any key the *device* cannot find is
-        appended to the delta run, whose probe uses only exact comparisons.
-        The stale in-tree copy is unreachable-or-identical (identity compare
-        makes false positives impossible), and rebuilds deduplicate.
-        """
-        res = self._device_lookup(pk32, hi, lo)
+        an exact rint boundary (~0.1%).  Any key the *device* cannot find
+        is shadowed into the run tier, whose probe uses only exact
+        comparisons.  The stale in-tree copy is unreachable-or-identical
+        (identity compare makes false positives impossible), and folds
+        deduplicate.  Shadows live in the run — *below* the active delta —
+        so a newer insert for the same identity still wins."""
+        res = self._device_lookup(pk32, hi, lo, tiers=False)
         wrong = res != pv
         if wrong.any():
-            self._append_delta(pk32[wrong], hi[wrong], lo[wrong], pv[wrong])
+            self._append_run(pk32[wrong], hi[wrong], lo[wrong], pv[wrong])
 
     def _append_delta(self, pk, hi, lo, pv) -> None:
+        """Append a batch to the active delta.  The stable sort keeps
+        insertion order within an equal-pkey window, so probes can pick
+        the newest copy (last-write-wins)."""
         mk = np.concatenate([self._delta_pk, pk])
         mhi = np.concatenate([self._delta_hi, hi])
         mlo = np.concatenate([self._delta_lo, lo])
@@ -495,34 +883,51 @@ class FlatAFLI:
         order = np.argsort(mk, kind="stable")
         self._delta_pk, self._delta_hi = mk[order], mhi[order]
         self._delta_lo, self._delta_pv = mlo[order], mpv[order]
+        self._delta_pack = None
+
+    def _append_run(self, pk, hi, lo, pv) -> None:
+        """Merge entries into the compacted run: two-way merge with
+        last-write-wins dedup by 64-bit identity (appended entries are
+        newer than what the run holds)."""
+        (self._run_pk, self._run_hi,
+         self._run_lo, self._run_pv) = _dedup_newest(
+            np.concatenate([self._run_pk, pk]),
+            np.concatenate([self._run_hi, hi]),
+            np.concatenate([self._run_lo, lo]),
+            np.concatenate([self._run_pv, pv.astype(np.int32)]))
+        self._run_pack = None
+
+    def _merge_delta_into_run(self) -> None:
+        """Retire the full active delta into the compacted run."""
+        if not self._delta_pk.shape[0]:
+            return
+        self._append_run(self._delta_pk, self._delta_hi,
+                         self._delta_lo, self._delta_pv)
+        self._delta_pk = np.empty(0, np.float32)
+        self._delta_hi = np.empty(0, np.uint32)
+        self._delta_lo = np.empty(0, np.uint32)
+        self._delta_pv = np.empty(0, np.int32)
+        self._delta_pack = None
 
     # ------------------------------------------------------------- lookup
     def _probe_delta(self, res: np.ndarray, q32: np.ndarray,
                      qhi: np.ndarray, qlo: np.ndarray) -> np.ndarray:
-        """Resolve still-missing queries against the sorted delta run
-        (host searchsorted; exact identity compares only)."""
-        if not self._delta_pk.shape[0]:
+        """Host oracle for the in-kernel tier probe: resolve every query
+        against the write tiers (sorted searchsorted pools; exact identity
+        compares only), newest copy first — active delta > compacted run >
+        device result.  Runs only when the kernel did not already probe
+        the tiers on device (``last_dispatch["host_probe"]``)."""
+        if not (self._delta_pk.shape[0] or self._run_pk.shape[0]):
             return res
-        miss = res < 0
-        if not miss.any():
-            return res
-        q = q32[miss]
-        mhi, mlo = qhi[miss], qlo[miss]
-        j = np.searchsorted(self._delta_pk, q, side="left")
-        j_hi = np.searchsorted(self._delta_pk, q, side="right")
-        found = np.full(q.shape[0], -1, np.int64)
-        window = int(max((j_hi - j).max(initial=0), 1))
-        for w in range(window):  # duplicate-pkey window
-            jj = np.clip(j + w, 0, self._delta_pk.shape[0] - 1)
-            ok = (
-                (self._delta_pk[jj] == q)
-                & (self._delta_hi[jj] == mhi)
-                & (self._delta_lo[jj] == mlo)
-                & (found < 0)
-            )
-            found = np.where(ok, self._delta_pv[jj], found)
-        res[miss] = np.where(found >= 0, found, res[miss])
-        return res
+        self.n_host_tier_probes += 1
+        run_pay = _probe_sorted_pool(self._run_pk, self._run_hi,
+                                     self._run_lo, self._run_pv,
+                                     q32, qhi, qlo)
+        dl_pay = _probe_sorted_pool(self._delta_pk, self._delta_hi,
+                                    self._delta_lo, self._delta_pv,
+                                    q32, qhi, qlo)
+        return np.where(dl_pay >= 0, dl_pay,
+                        np.where(run_pay >= 0, run_pay, res)).astype(res.dtype)
 
     def lookup_batch(self, keys: np.ndarray,
                      ikeys: np.ndarray | None = None) -> np.ndarray:
@@ -533,11 +938,16 @@ class FlatAFLI:
         hi, lo = split_key_bits(ik64)
         q32 = k64.astype(np.float32)
         res = self._device_lookup(q32, hi, lo)
-        return self._probe_delta(res, q32, hi, lo)
+        if self.last_dispatch.get("host_probe", True):
+            res = self._probe_delta(res, q32, hi, lo)
+        return res
 
     def _flow_device_lookup(self, feats: np.ndarray, hi: np.ndarray,
-                            lo: np.ndarray, packed_w, shapes):
-        """Fused NF + traversal dispatch; returns (payloads, serve pkeys)."""
+                            lo: np.ndarray, packed_w, shapes, *,
+                            arrays=None, pools=None, max_depth=None,
+                            dense_window=None, tiers: bool = True):
+        """Fused NF + traversal dispatch; returns (payloads, serve pkeys).
+        Keyword overrides as in ``_device_lookup`` (fold verification)."""
         from repro.kernels import ops
 
         n = feats.shape[0]
@@ -547,13 +957,16 @@ class FlatAFLI:
             hi = np.pad(hi, (0, n_pad - n))
             lo = np.pad(lo, (0, n_pad - n))
         res, z, self.last_dispatch = ops.fused_lookup(
-            self.arrays, self._kernel_pools,
+            self.arrays if arrays is None else arrays,
+            self._kernel_pools if pools is None else pools,
             jnp.asarray(feats, jnp.float32), jnp.asarray(hi),
             jnp.asarray(lo), flow=(packed_w, shapes),
-            max_depth=self._depth_static(),
+            max_depth=self._depth_static() if max_depth is None else max_depth,
             dense_iters=self.cfg.dense_search_iters,
             bucket_cap=self.cfg.max_bucket,
-            dense_window=self._dense_window_static(),
+            dense_window=(self._dense_window_static()
+                          if dense_window is None else dense_window),
+            tiers=self._tier_pack if tiers else None,
             vmem_budget=self.cfg.vmem_budget
             if self.cfg.use_fused_kernel else 0,
         )
@@ -562,54 +975,85 @@ class FlatAFLI:
     def lookup_batch_flow(self, feats: np.ndarray, ikeys: np.ndarray,
                           packed_w, shapes) -> np.ndarray:
         """Single-dispatch serving for flow-positioned indexes: one Pallas
-        call runs the NF forward AND the traversal (DESIGN.md §9).
+        call runs the NF forward, the traversal, AND the write-tier probe
+        (DESIGN.md §9/§10) — a mixed read/insert workload needs no host
+        round trip while the tiers fit the kernel pool budget.
 
         feats: [n, d] f32 expanded query features (``expand_features`` of
         the raw keys); ikeys: f64 identity keys; packed_w/shapes: the
         ``pack_flow_weights`` block of the flow that positioned the build.
         The kernel also emits the transformed positioning keys, which feed
-        the host-side delta-run probe.
+        the host-side tier probe when the kernel could not take it.
         """
         ik64 = np.asarray(ikeys, dtype=np.float64)
         hi, lo = split_key_bits(ik64)
         res, z = self._flow_device_lookup(feats, hi, lo, packed_w, shapes)
-        return self._probe_delta(res, z, hi, lo)
+        if self.last_dispatch.get("host_probe", True):
+            res = self._probe_delta(res, z, hi, lo)
+        return res
 
     def verify_serve_flow(self, feats: np.ndarray, ikeys: np.ndarray,
                           packed_w, shapes, payloads: np.ndarray) -> int:
         """Device-verified placement (DESIGN.md §8) extended to the fused
         serve path: any built key the serve-path kernel cannot resolve is
-        shadowed into the delta run, keyed by the *serve-path* positioning
+        shadowed into the run tier, keyed by the *serve-path* positioning
         key so every future probe finds it by exact comparison.  Returns
         the number of shadowed keys (0 in the common case — the serve NF
         tile is pinned to the build transform's tile)."""
         ik64 = np.asarray(ikeys, dtype=np.float64)
         hi, lo = split_key_bits(ik64)
         res, z = self._flow_device_lookup(feats, hi, lo, packed_w, shapes)
-        res = self._probe_delta(res, z, hi, lo)
+        if self.last_dispatch.get("host_probe", True):
+            res = self._probe_delta(res, z, hi, lo)
         wrong = res != np.asarray(payloads, res.dtype)
         if wrong.any():
-            self._append_delta(z[wrong], hi[wrong], lo[wrong],
-                               np.asarray(payloads)[wrong].astype(np.int32))
+            self._append_run(z[wrong], hi[wrong], lo[wrong],
+                             np.asarray(payloads)[wrong].astype(np.int32))
         return int(wrong.sum())
 
     # ------------------------------------------------------------- insert
     def insert_batch(self, keys: np.ndarray, payloads: np.ndarray,
                      ikeys: np.ndarray | None = None) -> None:
+        """Tiered write path (§10): the batch lands in the active delta
+        (device-probed inside the fused kernel); a full delta merges into
+        the compacted run; an oversized run triggers the *incremental*
+        fold, advanced here by a bounded work budget per call so no single
+        insert pays the full O(n) reorganization."""
         k64 = np.asarray(keys, dtype=np.float64)
         ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
         pv = np.asarray(payloads, dtype=np.int32)
         pk = k64.astype(np.float32)
         hi, lo = split_key_bits(ik64)
         self._append_delta(pk, hi, lo, pv)
-        self.n_keys += int(pk.shape[0])
-        if self._delta_pk.shape[0] > self.cfg.rebuild_frac * max(self.n_keys, 1):
-            self.rebuild()
+        # count only genuinely new identities: re-inserts overwrite
+        ids = self._id_set
+        fresh = 0
+        for u in _ids64(hi, lo).tolist():
+            if u not in ids:
+                ids.add(u)
+                fresh += 1
+        self.n_keys += fresh
+        budget = max(int(self.cfg.fold_step_keys),
+                     int(self.cfg.fold_work_factor * pk.shape[0]))
+        if self._fold is not None:
+            self._fold_tick(budget)
+        if self._fold is None:
+            if self._delta_pk.shape[0] > self.cfg.delta_cap:
+                self._merge_delta_into_run()
+            # no static structure yet (insert-before-build): the tiers
+            # simply keep buffering — there is nothing to fold into
+            if (self.arrays is not None
+                    and self._run_pk.shape[0]
+                    > self.cfg.rebuild_frac * max(self.n_keys, 1)):
+                self._fold_start()
+                self._fold_tick(budget)
 
-    def rebuild(self) -> None:
-        """Fold the delta into the static structure (batched Modelling)."""
-        if self.arrays is None:
-            return
+    def _fold_start(self) -> None:
+        """Begin an incremental fold: freeze the write tiers into a
+        snapshot (static entries oldest, run newest; last-write-wins dedup
+        by identity) and seed the work queue.  Serving continues against
+        the old structure + frozen tiers until the fold swaps in."""
+        self._merge_delta_into_run()
         et = np.asarray(self.arrays.etype)
         data_mask = et == DATA
         pk = np.asarray(self.arrays.ekey)[data_mask]
@@ -618,35 +1062,40 @@ class FlatAFLI:
         pv = np.asarray(self.arrays.epayload)[data_mask]
         blen = np.asarray(self.arrays.blen)
         cap = self.cfg.max_bucket
-        col = np.arange(cap)[None, :]
-        bmask = col < blen[:, None]
-        pk = np.concatenate([pk, np.asarray(self.arrays.bkey)[bmask], self._delta_pk])
-        hi = np.concatenate([hi, np.asarray(self.arrays.bhi)[bmask], self._delta_hi])
-        lo = np.concatenate([lo, np.asarray(self.arrays.blo)[bmask], self._delta_lo])
-        pv = np.concatenate([pv, np.asarray(self.arrays.bpayload)[bmask], self._delta_pv])
-        # deduplicate by 64-bit identity (self-verify can shadow a key into
-        # the delta; delta copies come last and win)
-        u64 = (hi.astype(np.uint64) << np.uint64(32)) | lo.astype(np.uint64)
-        order = np.argsort(u64, kind="stable")
-        su = u64[order]
-        is_last = np.append(su[1:] != su[:-1], True)
-        keep = order[is_last]
-        pk, hi, lo, pv = pk[keep], hi[keep], lo[keep], pv[keep]
-        order = np.argsort(pk, kind="stable")
-        pk, hi, lo, pv = pk[order], hi[order], lo[order], pv[order]
-        builder = _Builder(self.cfg, self.d_tail)
-        builder.build(pk, hi, lo, pv.astype(np.int64))
-        self.arrays = builder.finalize()
-        self._kpools = None
-        self.max_depth = builder.max_depth + 1
-        self.dense_window = _max_equal_run(pk) + 2
-        self._delta_pk = np.empty(0, np.float32)
-        self._delta_hi = np.empty(0, np.uint32)
-        self._delta_lo = np.empty(0, np.uint32)
-        self._delta_pv = np.empty(0, np.int32)
-        self.n_rebuilds += 1
-        self.n_keys = int(pk.shape[0])
-        self._self_verify(pk, hi, lo, pv.astype(np.int32))
+        bmask = np.arange(cap)[None, :] < blen[:, None]
+        pk = np.concatenate([pk, np.asarray(self.arrays.bkey)[bmask],
+                             self._run_pk])
+        hi = np.concatenate([hi, np.asarray(self.arrays.bhi)[bmask],
+                             self._run_hi])
+        lo = np.concatenate([lo, np.asarray(self.arrays.blo)[bmask],
+                             self._run_lo])
+        pv = np.concatenate([pv, np.asarray(self.arrays.bpayload)[bmask],
+                             self._run_pv])
+        # dedup by 64-bit identity, newest copy wins (run entries and
+        # placement shadows come last)
+        pk, hi, lo, pv = _dedup_newest(pk, hi, lo, pv)
+        self._fold = _IncrementalFold(self, pk, hi, lo,
+                                      pv.astype(np.int64))
+
+    def _fold_tick(self, budget: int) -> None:
+        if self._fold is not None and self._fold.tick(budget):
+            # swapped in; apply any delta merge deferred during the fold
+            if self._delta_pk.shape[0] > self.cfg.delta_cap:
+                self._merge_delta_into_run()
+
+    def rebuild(self) -> None:
+        """Fold every write tier into the static structure synchronously
+        (the incremental fold run to completion in one call — the batched
+        Modelling).  ``insert_batch`` amortizes the same work instead."""
+        if self.arrays is None:
+            return
+        # a fold already in flight consumed a snapshot that excludes any
+        # inserts made since; complete it, then fold the leftovers too
+        while self._fold is not None:
+            self._fold_tick(1 << 62)
+        self._fold_start()
+        while self._fold is not None:
+            self._fold_tick(1 << 62)
 
     def stats(self):
         a = self.arrays
@@ -655,6 +1104,10 @@ class FlatAFLI:
             "n_entries": int(a.etype.shape[0]) if a is not None else 0,
             "n_buckets": int(a.blen.shape[0]) if a is not None else 0,
             "max_depth": self.max_depth,
+            "n_keys": self.n_keys,
             "delta_len": int(self._delta_pk.shape[0]),
+            "run_len": int(self._run_pk.shape[0]),
+            "fold_active": self._fold is not None,
             "n_rebuilds": self.n_rebuilds,
+            "n_host_tier_probes": self.n_host_tier_probes,
         }

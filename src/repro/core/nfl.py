@@ -15,11 +15,12 @@ Two serving backends (DESIGN.md §9):
 * ``backend="afli"`` — the paper-faithful pointer tree, probed key by key
   on the host.  Full read/write API (insert/update/delete).
 * ``backend="flat"`` — FlatAFLI served through the fused single-dispatch
-  Pallas kernel: one ``pallas_call`` per request batch runs the NF forward
-  and the whole multi-level traversal.  Bulk-load positioning keys come
-  from the *kernel* NF path so build-time and serve-time placement is
-  bit-identical.  Reads + log-structured inserts; update/delete are not
-  supported (deltas resolve misses only).
+  Pallas kernel: one ``pallas_call`` per request batch runs the NF forward,
+  the whole multi-level traversal, AND the write-tier probe (DESIGN.md
+  §9/§10).  Bulk-load positioning keys come from the *kernel* NF path so
+  build-time and serve-time placement is bit-identical.  Reads +
+  log-structured tiered inserts with last-write-wins identity semantics
+  (so update == insert of an existing key); delete is not supported.
 """
 
 from __future__ import annotations
@@ -99,8 +100,12 @@ class NFL:
         if self.cfg.backend == "flat":
             if self.use_flow:
                 self.index.build(transformed, payloads, ikeys=keys)
+                # register the serve-path flow so every future fold can
+                # re-verify placement through the in-kernel NF (§8/§10)
+                self.index.set_serve_flow(normalizer, self.cfg.flow,
+                                          self._packed_w, self._shapes)
                 # verify the *serve* path (in-kernel NF) end to end; any
-                # divergent key is delta-shadowed (DESIGN.md §8/§9)
+                # divergent key is shadowed into the run tier (§8/§9)
                 feats = expand_features(keys, normalizer, self.cfg.flow.dim,
                                         self.cfg.flow.theta, dtype=np.float32)
                 n_shadow = self.index.verify_serve_flow(
@@ -193,11 +198,15 @@ class NFL:
             insert(float(pkeys[i]), int(payloads[i]), float(keys[i]))
 
     def update_batch(self, keys: np.ndarray, payloads: np.ndarray) -> np.ndarray:
-        if self.cfg.backend == "flat":
-            raise NotImplementedError(
-                "flat backend is read+insert only (delta resolves misses, "
-                "not overwrites); use backend='afli' for updates")
         keys = np.asarray(keys, dtype=np.float64)
+        if self.cfg.backend == "flat":
+            # tiered write path is last-write-wins by identity (§10), so
+            # updating an existing key IS an insert; absent keys are
+            # refused (update must not create them)
+            ok = self.index.contains_batch(keys)
+            if ok.any():
+                self.insert_batch(keys[ok], np.asarray(payloads)[ok])
+            return ok
         pkeys = self._pkeys(keys)
         ok = np.zeros(keys.shape[0], dtype=bool)
         for i in range(keys.shape[0]):
@@ -207,8 +216,8 @@ class NFL:
     def delete_batch(self, keys: np.ndarray) -> np.ndarray:
         if self.cfg.backend == "flat":
             raise NotImplementedError(
-                "flat backend is read+insert only; use backend='afli' "
-                "for deletes")
+                "flat backend is read/insert/update (last-write-wins "
+                "tiers); use backend='afli' for deletes")
         keys = np.asarray(keys, dtype=np.float64)
         pkeys = self._pkeys(keys)
         ok = np.zeros(keys.shape[0], dtype=bool)

@@ -19,7 +19,12 @@ al.), so this kernel folds the whole read path into ONE ``pallas_call``:
    query, exactly mirroring the ``flat_lookup`` oracle so results are
    bit-identical;
 3. **exact identity resolution** — 64-bit (hi, lo) key identity compares,
-   emitting payloads in one VMEM round trip.
+   emitting payloads in one VMEM round trip;
+4. **in-kernel write-path tiers** — the compacted run and active delta
+   (log-structured inserts, DESIGN.md §10) ride along as sorted VMEM
+   pools probed by bounded binary search + newest-match window scan, so
+   mixed read/insert batches stay a single dispatch with no host-side
+   delta probe.
 
 The flattened node/entry/bucket pools (``FlatArrays.to_kernel_args``) ride
 along as grid-invariant VMEM blocks: after the NF transform the pools are
@@ -44,8 +49,8 @@ from repro.kernels.backend import resolve_interpret
 from repro.kernels.nf_forward import DEFAULT_TILE as NF_TILE
 from repro.kernels.nf_forward import apply_flow_tile
 
-__all__ = ["fused_lookup_pallas", "KernelPools", "DEFAULT_TILE",
-           "INTERPRET_TILE", "NF_TILE"]
+__all__ = ["fused_lookup_pallas", "KernelPools", "TierPools", "TierPack",
+           "DEFAULT_TILE", "INTERPRET_TILE", "NF_TILE"]
 
 DEFAULT_TILE = 512       # lane-aligned query tile for compiled TPU runs
 INTERPRET_TILE = 8192    # CPU validation: one grid step per request batch
@@ -84,14 +89,59 @@ class KernelPools(NamedTuple):
         return int(sum(a.size * a.dtype.itemsize for a in self))
 
 
+class TierPools(NamedTuple):
+    """Device-resident write-path tiers (DESIGN.md §10): the compacted
+    sorted run and the active delta, each a lane-padded sorted pool of
+    (positioning key, identity bits, payload) plus a length scalar.
+
+    Padding rows carry ``+inf`` keys so the in-kernel binary search never
+    lands in them; the length scalar rides in lane 0 of a lane-padded
+    vector so every block stays 1-D lane-aligned.  Probed *after* the tree
+    traversal with newest-copy-wins precedence: active delta > compacted
+    run > static tree.
+    """
+
+    run_pk: jnp.ndarray   # f32[R]  sorted positioning keys (+inf padded)
+    run_hi: jnp.ndarray   # u32[R]  identity bits
+    run_lo: jnp.ndarray   # u32[R]
+    run_pv: jnp.ndarray   # i32[R]
+    run_len: jnp.ndarray  # i32[lane]  built length at [0]
+    dl_pk: jnp.ndarray    # f32[D]  active delta (same layout)
+    dl_hi: jnp.ndarray    # u32[D]
+    dl_lo: jnp.ndarray    # u32[D]
+    dl_pv: jnp.ndarray    # i32[D]
+    dl_len: jnp.ndarray   # i32[lane]
+
+    def nbytes(self) -> int:
+        return int(sum(a.size * a.dtype.itemsize for a in self))
+
+
+class TierPack(NamedTuple):
+    """TierPools plus their static probe bounds (binary-search iteration
+    count per pool and the duplicate-pkey window, both host-computed at
+    pack time and rounded so the kernel compile count stays bounded)."""
+
+    pools: TierPools
+    run_iters: int
+    run_window: int
+    delta_iters: int
+    delta_window: int
+
+    def nbytes(self) -> int:
+        return self.pools.nbytes()
+
+
 def _kernel(feat_ref, qhi_ref, qlo_ref, w_ref,
             nkind_ref, nslope_ref, nicept_ref, noff_ref, nsize_ref,
             etype_ref, ekey_ref, ehi_ref, elo_ref, epay_ref, echild_ref,
             bhi_ref, blo_ref, bpay_ref, blen_ref,
+            rpk_ref, rhi_ref, rlo_ref, rpv_ref, rlen_ref,
+            dpk_ref, dhi_ref, dlo_ref, dpv_ref, dlen_ref,
             pay_ref, z_ref, *,
             dim: int, shapes: Tuple[Tuple[int, int], ...], max_depth: int,
             dense_iters: int, bucket_cap: int, dense_window: int,
-            use_flow: bool):
+            use_flow: bool, probe_tiers: bool, run_iters: int,
+            run_window: int, delta_iters: int, delta_window: int):
     """One [TILE] query tile: NF forward + full traversal -> payloads.
 
     Mirrors ``repro.core.flat_afli.flat_lookup`` op-for-op (the oracle);
@@ -115,6 +165,15 @@ def _kernel(feat_ref, qhi_ref, qlo_ref, w_ref,
         qkey = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
     else:
         qkey = feat_ref[:, 0]
+    # materialize the positioning keys through the output ref: the VMEM
+    # round trip pins ONE evaluation of the NF chain.  Without it XLA
+    # re-materializes the tanh chain per consumer shape (1-ulp divergent
+    # even behind optimization_barrier), and the tier probe's exact
+    # f32-equality compares see keys that differ from the emitted z —
+    # with it, traversal, tier probe, and the z output are bit-identical
+    # by construction.
+    z_ref[...] = qkey
+    qkey = z_ref[...]
     qhi = qhi_ref[...]
     qlo = qlo_ref[...]
 
@@ -225,8 +284,65 @@ def _kernel(feat_ref, qhi_ref, qlo_ref, w_ref,
     _, result, _, _ = jax.lax.while_loop(level_cond, level_body,
                                          (node, result, done, 0))
 
+    # ---- (4) write-path tiers (DESIGN.md §10): probe the compacted run
+    # and the active delta in-kernel so a mixed read/insert batch never
+    # needs a host-side delta round trip.  Each tier is a sorted pool:
+    # bounded binary search locates the equal-key neighborhood, then a
+    # static window scan resolves by exact (hi, lo) identity ONLY — the
+    # positioning key is the locator, never the matcher.  That split is
+    # load-bearing: XLA re-materializes the NF tanh chain per consumer
+    # shape (1-ulp divergent even behind optimization_barrier), so an
+    # f32-equality compare against qkey is not codegen-stable, but a
+    # +/-1-ulp perturbed qkey still lands the search within the adjacent
+    # equal-key runs (no f32 value exists strictly between 1-ulp
+    # neighbors), and the symmetric window covers them.  The NEWEST
+    # matching copy wins — tiers keep insertion order within an
+    # equal-pkey window (stable sort), so the largest matching index is
+    # the last write — and the freshest tier takes precedence:
+    # active delta > compacted run > static tree.  Mirrors the host
+    # ``FlatAFLI._probe_delta`` oracle; parity must stay exact.
+    if probe_tiers:
+        def probe_tier(phi, plo, ppv, n_pool, l_fin, nmax, window):
+            # scan [l_fin - window, l_fin + 3*window): backward reach for
+            # a high landing (qkey 1 ulp above the stored key skips its
+            # whole equal run), forward reach for a low landing plus the
+            # equal run itself (each bounded by `window`, the pow2-rounded
+            # max equal-key run length of the pool)
+            widx = (l_fin - window)[:, None] + jax.lax.broadcasted_iota(
+                jnp.int32, (l_fin.shape[0], 4 * window), 1)
+            wc = jnp.clip(widx, 0, nmax - 1)
+            ok = ((widx >= 0) & (widx < n_pool)
+                  & (jnp.take(phi, wc) == qhi[:, None])
+                  & (jnp.take(plo, wc) == qlo[:, None]))
+            last = jnp.max(jnp.where(ok, widx, -1), axis=1)
+            pay = jnp.take(ppv, jnp.clip(last, 0, nmax - 1))
+            return jnp.where(last >= 0, pay, -1)
+
+        def tier_search(ppk, n_pool, iters):
+            def bs_body(_, lh):
+                l, h = lh
+                mid = (l + h) // 2
+                go_right = jnp.take(ppk, mid) < qkey
+                return (jnp.where(go_right, mid + 1, l),
+                        jnp.where(go_right, h, mid))
+
+            l0 = jnp.zeros(qkey.shape, jnp.int32)
+            h0 = jnp.full(qkey.shape, n_pool, jnp.int32)
+            l_fin, _ = jax.lax.fori_loop(0, iters, bs_body, (l0, h0))
+            return l_fin
+
+        rlen = rlen_ref[...][0]
+        run_pay = probe_tier(rhi_ref[...], rlo_ref[...], rpv_ref[...], rlen,
+                             tier_search(rpk_ref[...], rlen, run_iters),
+                             rpk_ref.shape[0], run_window)
+        dlen = dlen_ref[...][0]
+        dl_pay = probe_tier(dhi_ref[...], dlo_ref[...], dpv_ref[...], dlen,
+                            tier_search(dpk_ref[...], dlen, delta_iters),
+                            dpk_ref.shape[0], delta_window)
+        result = jnp.where(dl_pay >= 0, dl_pay,
+                           jnp.where(run_pay >= 0, run_pay, result))
+
     pay_ref[...] = result
-    z_ref[...] = qkey
 
 
 def _pow2ceil(n: int) -> int:
@@ -237,7 +353,8 @@ def _pow2ceil(n: int) -> int:
     jax.jit,
     static_argnames=("dim", "shapes", "max_depth", "dense_iters",
                      "bucket_cap", "dense_window", "use_flow", "tile",
-                     "interpret"),
+                     "interpret", "probe_tiers", "run_iters", "run_window",
+                     "delta_iters", "delta_window"),
 )
 def fused_lookup_pallas(
     feats: jnp.ndarray,
@@ -245,6 +362,7 @@ def fused_lookup_pallas(
     qlo: jnp.ndarray,
     packed_w: jnp.ndarray,
     pools: KernelPools,
+    tiers: Optional[TierPools] = None,
     *,
     dim: int,
     shapes: Tuple[Tuple[int, int], ...] = (),
@@ -255,6 +373,11 @@ def fused_lookup_pallas(
     use_flow: bool = True,
     tile: Optional[int] = None,
     interpret: Optional[bool] = None,
+    probe_tiers: bool = False,
+    run_iters: int = 1,
+    run_window: int = 4,
+    delta_iters: int = 1,
+    delta_window: int = 4,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused NF-transform + FlatAFLI traversal in one ``pallas_call``.
 
@@ -263,9 +386,13 @@ def fused_lookup_pallas(
     identity bits; packed_w: [1, n] ``pack_flow_weights`` block (any
     [1, >=1] f32 array when ``use_flow=False``).
 
-    Returns (payload i32[B] or -1, positioning key f32[B]).  The key output
-    feeds the host-side delta-run probe (log-structured inserts).
-    Bit-identical to ``nf_forward_pallas`` + ``flat_lookup`` by
+    Returns (payload i32[B] or -1, positioning key f32[B]).  When
+    ``tiers``/``probe_tiers`` is set, the write-path tiers (compacted run
+    + active delta, DESIGN.md §10) are probed in-kernel after the
+    traversal with newest-copy-wins precedence, so a mixed read/insert
+    batch needs no host-side delta probe; otherwise the key output feeds
+    the host ``_probe_delta`` fallback.  Bit-identical to
+    ``nf_forward_pallas`` + ``flat_lookup`` (+ the host tier probe) by
     construction.  ``interpret=None`` auto-detects the backend.
 
     Tile discipline (DESIGN.md §9): the in-kernel NF always evaluates in
@@ -278,6 +405,21 @@ def fused_lookup_pallas(
     a pure throughput choice (rounded to an NF_TILE multiple under flow).
     """
     interpret = resolve_interpret(interpret)
+    if tiers is None:
+        # no write tiers: ride tiny dummy blocks through the call (the
+        # probe stage is compiled out by the static flag)
+        probe_tiers = False
+        lane = jnp.zeros((128,), jnp.int32)
+        tiers = TierPools(
+            run_pk=jnp.full((128,), jnp.inf, jnp.float32),
+            run_hi=jnp.zeros((128,), jnp.uint32),
+            run_lo=jnp.zeros((128,), jnp.uint32),
+            run_pv=jnp.full((128,), -1, jnp.int32), run_len=lane,
+            dl_pk=jnp.full((128,), jnp.inf, jnp.float32),
+            dl_hi=jnp.zeros((128,), jnp.uint32),
+            dl_lo=jnp.zeros((128,), jnp.uint32),
+            dl_pv=jnp.full((128,), -1, jnp.int32), dl_len=lane,
+        )
     b = feats.shape[0]
     if use_flow:
         # pinned: the NF must evaluate on the build transform's block
@@ -315,6 +457,9 @@ def fused_lookup_pallas(
             _kernel, dim=dim, shapes=shapes, max_depth=max_depth,
             dense_iters=dense_iters, bucket_cap=bucket_cap,
             dense_window=dense_window, use_flow=use_flow,
+            probe_tiers=probe_tiers, run_iters=run_iters,
+            run_window=run_window, delta_iters=delta_iters,
+            delta_window=delta_window,
         ),
         out_shape=(
             jax.ShapeDtypeStruct((b_pad,), jnp.int32),
@@ -322,9 +467,9 @@ def fused_lookup_pallas(
         ),
         grid=(b_pad // tile,),
         in_specs=[fspec, qspec, qspec, wspec]
-        + [pool_spec(a) for a in pools],
+        + [pool_spec(a) for a in pools] + [pool_spec(a) for a in tiers],
         out_specs=(qspec, qspec),
         interpret=interpret,
     )(feats.astype(jnp.float32), qhi, qlo, packed_w.astype(jnp.float32),
-      *pools)
+      *pools, *tiers)
     return pay[:b], z[:b]

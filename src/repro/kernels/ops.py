@@ -68,8 +68,8 @@ def pool_nbytes(pools) -> int:
 
 def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
                  max_depth: int, dense_iters: int, bucket_cap: int,
-                 dense_window: int = 8, vmem_budget=None, tile=None,
-                 interpret=None):
+                 dense_window: int = 8, tiers=None, vmem_budget=None,
+                 tile=None, interpret=None):
     """Dispatch shim for the fused single-dispatch lookup (DESIGN.md §9).
 
     When the packed pools fit the VMEM budget, the whole read path — NF
@@ -83,10 +83,17 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
     form lets callers skip the packing/upload entirely when the kernel
     path is disabled (``vmem_budget <= 0``); feats: [n, d] f32 query
     features, or [n, 1] positioning keys when ``flow is None``; flow:
-    optional ``(packed_w, shapes)`` from ``pack_flow_weights``.
+    optional ``(packed_w, shapes)`` from ``pack_flow_weights``; tiers:
+    optional ``TierPack`` (or a thunk producing one, or ``None`` when the
+    write tiers are empty) — when it also fits the budget the run/delta
+    tiers are probed *in-kernel* (DESIGN.md §10) and no host-side delta
+    probe is needed.
 
-    Returns ``(payload i32[n], positioning_key f32[n], info)`` as numpy,
-    where ``info`` records the chosen path and device dispatch count.
+    Returns ``(payload i32[n], positioning_key f32[n], info)`` as numpy.
+    ``info`` records the chosen path, dispatch count, and the tier
+    routing: ``tier_path`` is ``"kernel"`` (tiers resolved on device),
+    ``"host"`` (caller must run the host ``_probe_delta`` oracle), or
+    ``"none"`` (no write tiers); ``host_probe`` is the boolean form.
     """
     from repro.core.flat_afli import flat_lookup
     from repro.kernels.fused_lookup import fused_lookup_pallas
@@ -100,6 +107,16 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
         if callable(pools):
             pools = pools()
         nbytes = pool_nbytes(pools)
+        if nbytes <= vmem_budget and callable(tiers):
+            tiers = tiers()
+    if callable(tiers):
+        # kernel path ruled out: never pack/upload the tier pools just to
+        # report their size — the host probe resolves them (and no-ops
+        # when they are empty)
+        have_tiers, tier_bytes = True, None
+    else:
+        have_tiers = tiers is not None
+        tier_bytes = tiers.nbytes() if have_tiers else 0
     use_flow = flow is not None
     dim = int(feats.shape[1])
     if use_flow:
@@ -108,13 +125,26 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
         packed_w, shapes = jnp.zeros((1, 1), jnp.float32), ()
 
     if nbytes is not None and nbytes <= vmem_budget:
+        # tree pools fit; tiers ride along only if the budget still holds
+        kernel_tiers = have_tiers and nbytes + tier_bytes <= vmem_budget
         pay, z = fused_lookup_pallas(
-            feats, qhi, qlo, packed_w, pools, dim=dim, shapes=shapes,
+            feats, qhi, qlo, packed_w, pools,
+            tiers.pools if kernel_tiers else None,
+            dim=dim, shapes=shapes,
             max_depth=max_depth, dense_iters=dense_iters,
             bucket_cap=bucket_cap, dense_window=dense_window,
             use_flow=use_flow, tile=tile, interpret=interpret,
+            probe_tiers=kernel_tiers,
+            run_iters=tiers.run_iters if kernel_tiers else 1,
+            run_window=tiers.run_window if kernel_tiers else 4,
+            delta_iters=tiers.delta_iters if kernel_tiers else 1,
+            delta_window=tiers.delta_window if kernel_tiers else 4,
         )
-        info = {"path": "fused", "n_dispatch": 1, "pool_bytes": nbytes}
+        info = {"path": "fused", "n_dispatch": 1, "pool_bytes": nbytes,
+                "tier_bytes": tier_bytes,
+                "tier_path": ("kernel" if kernel_tiers
+                              else "host" if have_tiers else "none"),
+                "host_probe": have_tiers and not kernel_tiers}
         return np.asarray(pay), np.asarray(z), info
 
     # oracle fallback: pools exceed the budget -> keep them in HBM and use
@@ -129,7 +159,10 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
     res = flat_lookup(arrays, z, qhi, qlo, max_depth=max_depth,
                       dense_iters=dense_iters, bucket_cap=bucket_cap,
                       dense_window=dense_window)
-    info = {"path": "oracle", "n_dispatch": n_dispatch, "pool_bytes": nbytes}
+    info = {"path": "oracle", "n_dispatch": n_dispatch, "pool_bytes": nbytes,
+            "tier_bytes": tier_bytes,
+            "tier_path": "host" if have_tiers else "none",
+            "host_probe": have_tiers}
     return np.asarray(res), np.asarray(z), info
 
 

@@ -71,6 +71,146 @@ def test_f32_colliding_keys_resolve_by_identity():
     assert np.array_equal(idx.lookup_batch(keys), pv)
 
 
+def test_insert_before_build_buffers_in_tiers():
+    """Regression: inserts on an un-built index must keep buffering in
+    the write tiers (the fold trigger has no static structure to fold
+    into) instead of crashing once the delta cap is crossed."""
+    idx = FlatAFLI(FlatAFLIConfig(delta_cap=64, rebuild_frac=0.05))
+    rng = np.random.default_rng(30)
+    keys = np.unique(rng.uniform(0, 1e9, 1_000))
+    for s in range(0, len(keys), 100):
+        idx.insert_batch(keys[s:s + 100], np.arange(s, s + len(keys[s:s + 100])))
+    assert idx.n_keys == len(keys)
+    assert idx.stats()["run_len"] + idx.stats()["delta_len"] == len(keys)
+    # a later build adopts fresh data; the buffered tiers are reset
+    idx.build(keys, np.arange(len(keys)))
+    assert np.array_equal(idx.lookup_batch(keys), np.arange(len(keys)))
+
+
+def test_reinsert_same_identity_newest_wins():
+    """Regression: duplicate-identity reads used to be first-write-wins
+    before a rebuild (host probe kept the OLDEST delta copy) but
+    last-write-wins after (rebuild dedup kept the newest), silently
+    flipping answers at the rebuild boundary.  The probe must prefer the
+    newest copy at every point: between the two inserts, after both, and
+    across an explicit rebuild."""
+    rng = np.random.default_rng(31)
+    keys = np.unique(rng.uniform(0, 1e9, 10_000))
+    pv = np.arange(len(keys), dtype=np.int64)
+    idx = FlatAFLI(FlatAFLIConfig(delta_cap=100_000))
+    idx.build(keys, pv)
+    k0 = keys[:200]
+    idx.insert_batch(k0, np.full(200, 111))
+    assert (idx.lookup_batch(k0) == 111).all()      # overrides the tree
+    idx.insert_batch(k0, np.full(200, 222))
+    assert (idx.lookup_batch(k0) == 222).all()      # newest delta copy
+    idx.rebuild()
+    assert (idx.lookup_batch(k0) == 222).all()      # stable across rebuild
+    rest = idx.lookup_batch(keys[200:])
+    assert np.array_equal(rest, pv[200:])
+
+
+def test_n_keys_counts_unique_identities():
+    """Regression: n_keys used to grow by the full batch even for
+    re-inserted identities, drifting until the next rebuild corrected it
+    (and skewing the rebuild trigger)."""
+    rng = np.random.default_rng(32)
+    keys = np.unique(rng.uniform(0, 1e9, 3_000))
+    idx = FlatAFLI(FlatAFLIConfig(delta_cap=100_000))
+    idx.build(keys[:2000], np.arange(2000))
+    assert idx.n_keys == 2000
+    # half new, half already present
+    batch = np.concatenate([keys[2000:2500], keys[:500]])
+    idx.insert_batch(batch, np.arange(1000))
+    assert idx.n_keys == 2500
+    idx.insert_batch(batch, np.arange(1000))        # pure re-insert
+    assert idx.n_keys == 2500
+    idx.rebuild()
+    assert idx.n_keys == 2500
+    assert idx.stats()["n_keys"] == 2500
+
+
+def test_incremental_fold_keeps_serving():
+    """Streamed small inserts with tight tier bounds: folds must advance
+    incrementally (bounded work per call) while every interleaved lookup
+    stays correct across delta-merge and fold boundaries."""
+    rng = np.random.default_rng(33)
+    keys = np.unique(rng.uniform(0, 1e9, 16_000))
+    pv = np.arange(len(keys), dtype=np.int64)
+    idx = FlatAFLI(FlatAFLIConfig(rebuild_frac=0.05, delta_cap=256,
+                                  fold_step_keys=512, fold_work_factor=4.0))
+    idx.build(keys[::2], pv[::2])
+    oracle = {k: p for k, p in zip(keys[::2], pv[::2])}
+    ins, ipv = keys[1::2], pv[1::2]
+    saw_fold = False
+    for s in range(0, len(ins), 128):
+        idx.insert_batch(ins[s:s + 128], ipv[s:s + 128])
+        for k, p in zip(ins[s:s + 128], ipv[s:s + 128]):
+            oracle[k] = p
+        saw_fold = saw_fold or idx.stats()["fold_active"]
+        if s % 1024 == 0:
+            probe = np.concatenate([keys[:500], keys[:100] + 0.123])
+            res = idx.lookup_batch(probe)
+            exp = np.array([oracle.get(k, -1) for k in probe])
+            assert np.array_equal(res, exp)
+    assert saw_fold, "fold never went incremental"
+    assert idx.n_rebuilds >= 1
+    assert np.array_equal(idx.lookup_batch(keys), pv)
+    idx.rebuild()
+    assert idx.stats()["delta_len"] == 0
+    assert np.array_equal(idx.lookup_batch(keys), pv)
+
+
+def test_rebuild_flow_reverifies_serve_path():
+    """Regression: rebuilding a flow-positioned index used to re-verify
+    placement only through the non-flow kernel, so keys diverging only
+    under the in-kernel NF lost their shadow at rebuild.  After a fold
+    the serve path must still resolve every key (identity keys are
+    reconstructed from the stored (hi, lo) bit pools)."""
+    from repro.core.nfl import NFL, NFLConfig
+    from repro.core.train_flow import FlowTrainConfig
+
+    keys = np.unique(np.floor(
+        np.random.default_rng(34).lognormal(0, 2, 25_000) * 1e9))
+    pv = np.arange(len(keys), dtype=np.int64)
+    nfl = NFL(NFLConfig(flow_train=FlowTrainConfig(epochs=1),
+                        backend="flat"))
+    nfl.bulkload(keys, pv)
+    assert nfl.use_flow
+    assert nfl.index._serve_flow is not None  # fold re-verify context
+    extra = np.unique(np.floor(
+        np.random.default_rng(35).lognormal(0, 2, 8_000) * 1e9))
+    new = extra[~np.isin(extra, keys)][:3000]
+    npv = np.arange(len(new)) + 4_000_000
+    nfl.insert_batch(new, npv)
+    nfl.index.rebuild()
+    assert nfl.index.n_rebuilds >= 1
+    assert np.array_equal(nfl.lookup_batch(keys), pv)
+    assert np.array_equal(nfl.lookup_batch(new), npv)
+
+
+def test_update_batch_flat_backend():
+    """update == insert of an existing identity (last-write-wins);
+    absent keys are refused and not created."""
+    from repro.core.nfl import NFL, NFLConfig
+    from repro.core.train_flow import FlowTrainConfig
+
+    keys = np.unique(np.floor(
+        np.random.default_rng(36).lognormal(0, 2, 8_000) * 1e9))
+    pv = np.arange(len(keys), dtype=np.int64)
+    nfl = NFL(NFLConfig(flow_train=FlowTrainConfig(epochs=1),
+                        backend="flat"))
+    nfl.bulkload(keys, pv)
+    ok = nfl.update_batch(keys[:100], pv[:100] + 1_000_000)
+    assert ok.all()
+    missing = nfl.update_batch(keys[:50] + 0.5, np.zeros(50))
+    assert not missing.any()
+    assert np.array_equal(nfl.lookup_batch(keys[:100]), pv[:100] + 1_000_000)
+    assert (nfl.lookup_batch(keys[:50] + 0.5) == -1).all()
+    with pytest.raises(NotImplementedError):
+        nfl.delete_batch(keys[:10])
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.lists(st.floats(min_value=-1e12, max_value=1e12, allow_nan=False,
                           allow_infinity=False),

@@ -276,6 +276,166 @@ def test_fused_lookup_property_randomized():
         assert np.array_equal(res, expect), f"seed {seed}"
 
 
+# ------------------------------------------------- fused_lookup write tiers
+def _tier_parity(idx, q64, ik64=None):
+    """Assert the in-kernel tier probe (run + active delta, DESIGN.md §10)
+    is result-identical to the host oracle — ``flat_lookup`` traversal
+    followed by ``_probe_delta`` — with zero host-side tier probes on the
+    kernel path.  Returns the (shared) payloads."""
+    from repro.core.flat_afli import flat_lookup, split_key_bits
+
+    ik64 = q64 if ik64 is None else ik64
+    hi, lo = split_key_bits(np.asarray(ik64, np.float64))
+    q32 = np.asarray(q64, np.float64).astype(np.float32)
+    kw = dict(max_depth=idx._depth_static(),
+              dense_iters=idx.cfg.dense_search_iters,
+              bucket_cap=idx.cfg.max_bucket,
+              dense_window=idx._dense_window_static())
+    r_k, _z, info = ops.fused_lookup(
+        idx.arrays, idx._kernel_pools(),
+        jnp.asarray(q32.reshape(-1, 1)), jnp.asarray(hi), jnp.asarray(lo),
+        flow=None, tiers=idx._tier_pack, **kw)
+    assert info["path"] == "fused" and info["n_dispatch"] == 1
+    assert info["tier_path"] == "kernel" and not info["host_probe"]
+    r_o = np.asarray(flat_lookup(idx.arrays, jnp.asarray(q32),
+                                 jnp.asarray(hi), jnp.asarray(lo), **kw))
+    r_o = idx._probe_delta(r_o, q32, hi, lo)
+    assert np.array_equal(r_k, r_o)
+    return r_k
+
+
+def test_tier_probe_model_node_parity():
+    """Inserts over a model-node tree: hits in tree, delta, and run, plus
+    misses, all resolved in ONE dispatch with no host tier probe."""
+    from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig
+
+    rng = np.random.default_rng(21)
+    keys = np.unique(rng.uniform(0, 1e9, 20_000))
+    idx = FlatAFLI(FlatAFLIConfig(delta_cap=1500))
+    idx.build(keys[::2], np.arange(len(keys[::2])))
+    new = keys[1::2][:3000]
+    idx.insert_batch(new, np.arange(len(new)) + 10_000_000)  # -> run merge
+    idx.insert_batch(new[:500], np.arange(500) + 20_000_000)  # active delta
+    assert idx._run_pk.shape[0] and idx._delta_pk.shape[0]
+    q = np.concatenate([keys[::2][:2000], new, keys[1::2][3000:4000]])
+    res = _tier_parity(idx, q)
+    assert (res[2000 + 500:2000 + 3000] >= 0).all()
+    assert (res[2000:2000 + 500] >= 20_000_000).all()  # newest wins
+    # full serving path agrees and needs no host probe
+    idx.n_host_tier_probes = 0
+    full = idx.lookup_batch(q)
+    assert np.array_equal(full, res)
+    assert idx.n_host_tier_probes == 0
+    assert idx.last_dispatch["tier_path"] == "kernel"
+
+
+def test_tier_probe_dense_node_parity():
+    """max_depth=1 forces a dense root; tier probe rides along."""
+    from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig
+
+    rng = np.random.default_rng(22)
+    keys = np.unique(rng.uniform(0, 1e6, 3_000))
+    idx = FlatAFLI(FlatAFLIConfig(max_depth=1, delta_cap=10_000))
+    idx.build(keys[::2], np.arange(len(keys[::2])))
+    assert int(idx.arrays.node_kind[0]) == 1  # KIND_DENSE
+    idx.insert_batch(keys[1::2], np.arange(len(keys[1::2])) + 5_000)
+    _tier_parity(idx, np.concatenate([keys, keys + 0.5]))
+
+
+def test_tier_probe_bucket_parity():
+    """Conflict buckets + delta entries sharing positioning keys with
+    distinct identities: exact-identity resolution in every tier."""
+    from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig
+
+    pk = np.repeat(np.arange(100, dtype=np.float64), 3)
+    ik = np.arange(len(pk), dtype=np.float64) * 7.5
+    pv = np.arange(len(pk), dtype=np.int64)
+    idx = FlatAFLI(FlatAFLIConfig(delta_cap=10_000))
+    idx.build(pk, pv, ikeys=ik)
+    # delta entries at the SAME positioning keys, new identities
+    ik2 = ik + 0.25
+    idx.insert_batch(pk, pv + 1000, ikeys=ik2)
+    res = _tier_parity(idx, np.concatenate([pk, pk]),
+                       ik64=np.concatenate([ik, ik2]))
+    assert np.array_equal(res[len(pk):], pv + 1000)
+    # wrong identity at an existing positioning key must miss
+    miss = _tier_parity(idx, pk[:50], ik64=ik[:50] + 0.001)
+    assert (miss == -1).all()
+
+
+def test_tier_probe_duplicate_reinsert_parity():
+    """Same identity re-inserted repeatedly (duplicates inside the active
+    delta): probe must return the NEWEST copy, host and kernel alike."""
+    from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig
+
+    rng = np.random.default_rng(23)
+    keys = np.unique(rng.uniform(0, 1e9, 5_000))
+    idx = FlatAFLI(FlatAFLIConfig(delta_cap=10_000))
+    idx.build(keys, np.arange(len(keys)))
+    for gen in range(3):
+        idx.insert_batch(keys[:300], np.arange(300) + (gen + 1) * 100_000)
+    res = _tier_parity(idx, keys[:600])
+    assert (res[:300] >= 300_000).all()
+    assert np.array_equal(res[300:600], np.arange(300, 600))
+
+
+def test_tier_probe_budget_fallback_identical():
+    """Force the oracle/host path (vmem_budget=0): results must equal the
+    kernel tier path bit for bit; host probe flag must flip."""
+    from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig, split_key_bits
+
+    rng = np.random.default_rng(24)
+    keys = np.unique(rng.uniform(0, 1e9, 8_000))
+    idx = FlatAFLI(FlatAFLIConfig(delta_cap=10_000))
+    idx.build(keys[::2], np.arange(len(keys[::2])))
+    idx.insert_batch(keys[1::2][:1000], np.arange(1000) + 7_000_000)
+    q = keys[:4000]
+    idx.n_host_tier_probes = 0
+    r_kernel = idx.lookup_batch(q)
+    assert idx.last_dispatch["tier_path"] == "kernel"
+    assert idx.n_host_tier_probes == 0
+    import dataclasses
+    idx.cfg = dataclasses.replace(idx.cfg, vmem_budget=0)
+    r_host = idx.lookup_batch(q)
+    assert idx.last_dispatch["host_probe"]
+    assert idx.n_host_tier_probes == 1
+    assert np.array_equal(r_kernel, r_host)
+
+
+def test_tier_probe_flow_serving_end_to_end():
+    """Flow-positioned serving with tiers: mixed read/insert stays one
+    dispatch (kernel NF + traversal + tier probe), matches a dict oracle,
+    and executes zero host-side tier probes."""
+    from repro.core.nfl import NFL, NFLConfig
+    from repro.core.flat_afli import FlatAFLIConfig
+
+    keys = np.unique(np.floor(
+        np.random.default_rng(25).lognormal(0, 2, 20_000) * 1e9))
+    pv = np.arange(len(keys), dtype=np.int64)
+    nfl = NFL(NFLConfig(flow_train=FlowTrainConfig(epochs=1),
+                        backend="flat",
+                        flat_index=FlatAFLIConfig(delta_cap=10_000)))
+    nfl.bulkload(keys, pv)
+    assert nfl.use_flow
+    oracle = {k: p for k, p in zip(keys, pv)}
+    extra = np.unique(np.floor(
+        np.random.default_rng(26).lognormal(0, 2, 6_000) * 1e9))
+    new = extra[~np.isin(extra, keys)][:2000]
+    nfl.index.n_host_tier_probes = 0
+    for s in range(0, len(new), 512):
+        ins_v = np.arange(s, s + len(new[s:s + 512])) + 3_000_000
+        nfl.insert_batch(new[s:s + 512], ins_v)
+        for k, v in zip(new[s:s + 512], ins_v):
+            oracle[k] = v
+    q = np.concatenate([keys[:1500], new, new[:200] + 1.0])
+    res = nfl.lookup_batch(q)
+    exp = np.array([oracle.get(k, -1) for k in q])
+    assert np.array_equal(res, exp)
+    assert nfl.index.last_dispatch["tier_path"] == "kernel"
+    assert nfl.index.last_dispatch["n_dispatch"] == 1
+    assert nfl.index.n_host_tier_probes == 0
+
+
 # ------------------------------------------------------------ flash_decode
 @pytest.mark.parametrize("b,h,kh,d,s", [
     (1, 4, 4, 32, 128),      # MHA

@@ -1,0 +1,111 @@
+"""Mixed read/write interleavings vs a dict oracle (DESIGN.md §10).
+
+Random interleavings of ``insert_batch`` / ``lookup_batch`` (plus
+occasional explicit ``rebuild``) on ``NFL(backend="flat")`` — flow on and
+off — must match a last-write-wins dict oracle at every step, across
+active-delta merges and incremental-fold boundaries, including duplicate
+re-inserts and missing keys.  Tier bounds are squeezed so a short op
+sequence crosses every write-path boundary.
+"""
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep: seeded-random fallback
+    from _hyp_fallback import given, settings, st
+
+from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig
+
+_TIGHT = dict(rebuild_frac=0.1, delta_cap=24, fold_step_keys=48,
+              fold_work_factor=4.0)
+
+
+def _run_interleaving(index, rng, key_pool, payload_gen, n_ops,
+                      lookup=None, insert=None):
+    """Drive random op batches against ``index``, checking a dict oracle
+    after every step.  Returns the op trace for failure reporting."""
+    lookup = lookup or index.lookup_batch
+    insert = insert or index.insert_batch
+    oracle = {}
+    # seed: bulk-build half the pool
+    n0 = len(key_pool) // 2
+    build_keys = key_pool[:n0]
+    build_pv = np.arange(n0, dtype=np.int64)
+    if isinstance(index, FlatAFLI):
+        index.build(build_keys, build_pv)
+    else:
+        index.bulkload(build_keys, build_pv)
+    oracle.update(zip(build_keys, build_pv))
+    trace = []
+    for step in range(n_ops):
+        op = rng.choice(["insert", "insert_dup", "lookup", "rebuild"],
+                        p=[0.35, 0.2, 0.4, 0.05])
+        if op == "rebuild":
+            (index.index if hasattr(index, "index") else index).rebuild()
+            trace.append(("rebuild",))
+            continue
+        size = int(rng.integers(1, 24))
+        if op == "insert":
+            k = rng.choice(key_pool, size, replace=False)
+        elif op == "insert_dup":  # re-inserts of live identities
+            live = np.array(sorted(oracle))
+            k = rng.choice(live, min(size, len(live)), replace=False)
+        else:
+            k = rng.choice(key_pool, size, replace=False)
+            if rng.random() < 0.5:  # definite misses
+                k = np.concatenate([k, k + 0.123])
+        if op.startswith("insert"):
+            v = payload_gen(step, len(k))
+            insert(k, v)
+            oracle.update(zip(k, v))
+            trace.append((op, len(k)))
+        else:
+            res = lookup(k)
+            exp = np.array([oracle.get(x, -1) for x in k])
+            assert np.array_equal(res, exp), (
+                f"step {step}: {np.sum(res != exp)} diverged "
+                f"(trace={trace[-6:]})")
+            trace.append(("lookup", len(k)))
+    # closing sweep: every live identity + guaranteed misses
+    live = np.array(sorted(oracle))
+    res = lookup(live)
+    assert np.array_equal(res, np.array([oracle[x] for x in live]))
+    assert (lookup(live + 0.321) == -1).all()
+    return trace
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_mixed_interleaving_flat_direct(seed):
+    """FlatAFLI alone (no flow): tight tiers, many boundary crossings."""
+    rng = np.random.default_rng(seed)
+    pool = np.unique(rng.uniform(0, 1e9, 400))
+    idx = FlatAFLI(FlatAFLIConfig(**_TIGHT))
+
+    def payloads(step, n):
+        return np.arange(n, dtype=np.int64) + (step + 1) * 10_000
+
+    _run_interleaving(idx, rng, pool, payloads, n_ops=14)
+    assert idx.stats()["n_keys"] == idx.n_keys
+
+
+@pytest.mark.parametrize("force_flow", [False, True])
+def test_mixed_interleaving_nfl(force_flow):
+    """NFL(backend='flat'), flow forced on/off: the full serving stack
+    (kernel NF + traversal + tier probe) against the dict oracle."""
+    from repro.core.nfl import NFL, NFLConfig
+    from repro.core.train_flow import FlowTrainConfig
+
+    rng = np.random.default_rng(97 + int(force_flow))
+    pool = np.unique(np.floor(rng.lognormal(0, 2, 600) * 1e9))
+    nfl = NFL(NFLConfig(flow_train=FlowTrainConfig(epochs=1),
+                        backend="flat", force_flow=force_flow,
+                        flat_index=FlatAFLIConfig(**_TIGHT)))
+
+    def payloads(step, n):
+        return np.arange(n, dtype=np.int64) + (step + 1) * 100_000
+
+    _run_interleaving(nfl, rng, pool, payloads, n_ops=12,
+                      lookup=nfl.lookup_batch, insert=nfl.insert_batch)
+    assert nfl.use_flow == force_flow
