@@ -36,14 +36,23 @@ from repro.kernels.nf_forward import nf_forward_pallas
 DEFAULT_OUT = "BENCH_fused_lookup.json"
 
 
-def _best_s(fn, repeats: int) -> float:
+def _best_s(fn, repeats: int):
+    """(best wall seconds, warmup compiles, measurement compiles).
+
+    The warmup call primes the jit/pallas caches outside the timed
+    region; compile counts per phase come from the serving jit-cache
+    growth (``ops.serving_cache_size``) so steady-state measurements can
+    assert zero mid-measurement compiles instead of assuming them."""
+    c0 = ops.serving_cache_size()
     fn()  # warm the jit/pallas caches outside the timed region
+    warm_compiles = ops.serving_cache_size() - c0
     best = float("inf")
+    c1 = ops.serving_cache_size()
     for _ in range(repeats):
         t0 = time.perf_counter()
         fn()
         best = min(best, time.perf_counter() - t0)
-    return best
+    return best, warm_compiles, ops.serving_cache_size() - c1
 
 
 def run(n_keys: int = 65_536, n_queries: int = 4_096, repeats: int = 9,
@@ -102,10 +111,10 @@ def run(n_keys: int = 65_536, n_queries: int = 4_096, repeats: int = 9,
         raise AssertionError("fused path diverged from two-dispatch path")
     hit_frac = float((r_fused >= 0).mean())
 
-    t_two = _best_s(two_dispatch, repeats)
-    t_fused = _best_s(fused, repeats)
-    t_trav_o = _best_s(traversal_oracle, repeats)
-    t_trav_f = _best_s(traversal_fused, repeats)
+    t_two, c_two_w, c_two_m = _best_s(two_dispatch, repeats)
+    t_fused, c_fused_w, c_fused_m = _best_s(fused, repeats)
+    t_trav_o, c_to_w, c_to_m = _best_s(traversal_oracle, repeats)
+    t_trav_f, c_tf_w, c_tf_m = _best_s(traversal_fused, repeats)
 
     results = {
         "workload": {"n_keys": int(len(keys)), "n_queries": int(n_queries),
@@ -117,11 +126,17 @@ def run(n_keys: int = 65_536, n_queries: int = 4_096, repeats: int = 9,
                      "pool_bytes": ops.pool_nbytes(idx._kernel_pools()),
                      "max_depth": idx.max_depth},
         "two_dispatch": {"wall_s": t_two, "n_dispatch": 2,
-                         "us_per_query": t_two / n_queries * 1e6},
+                         "us_per_query": t_two / n_queries * 1e6,
+                         "compiles_warmup": c_two_w,
+                         "compiles_measure": c_two_m},
         "fused": {"wall_s": t_fused, "n_dispatch": 1,
-                  "us_per_query": t_fused / n_queries * 1e6},
+                  "us_per_query": t_fused / n_queries * 1e6,
+                  "compiles_warmup": c_fused_w,
+                  "compiles_measure": c_fused_m},
         "traversal_only": {
             "oracle_wall_s": t_trav_o, "fused_wall_s": t_trav_f,
+            "compiles_warmup": c_to_w + c_tf_w,
+            "compiles_measure": c_to_m + c_tf_m,
             "speedup": t_trav_o / t_trav_f if t_trav_f else float("nan")},
         "speedup_fused_vs_two_dispatch": t_two / t_fused,
         "identical_results": True,

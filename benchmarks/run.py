@@ -20,8 +20,11 @@ def main() -> None:
     ap.add_argument("--only", action="append", default=None,
                     help="tag filter, repeatable and/or comma-separated: "
                          "fig7,fig8,fig10,fig11,table1,table2,table3,"
-                         "roofline,fused,mixed")
+                         "roofline,fused,mixed,serving")
     ap.add_argument("--n-keys", type=int, default=None)
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="timed repeats per variant in the repeat-based "
+                         "benches (fused)")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale sizes (CI smoke; see "
                          "scripts/verify.sh)")
@@ -33,7 +36,8 @@ def main() -> None:
                             bench_fused_lookup, bench_index_size,
                             bench_latency, bench_mixed_workload,
                             bench_nf_latency, bench_probe_batch,
-                            bench_roofline, bench_throughput)
+                            bench_roofline, bench_serving_state,
+                            bench_throughput)
     from benchmarks.common import ALL_DATASETS, DEFAULT_DATASETS
 
     n_keys = args.n_keys or (400_000 if args.full else 100_000)
@@ -71,17 +75,30 @@ def main() -> None:
             # smoke: no artifact — don't clobber the committed full-size
             # BENCH json with seconds-scale numbers
             rows += bench_fused_lookup.rows(bench_fused_lookup.run(
-                n_keys=n_keys, n_queries=1_024, repeats=2, out_json=None))
+                n_keys=n_keys, n_queries=1_024,
+                repeats=args.repeats or 2, out_json=None))
         else:
             rows += bench_fused_lookup.rows(bench_fused_lookup.run(
-                n_keys=max(n_keys, 65_536) if args.full else 65_536))
+                n_keys=max(n_keys, 65_536) if args.full else 65_536,
+                **({"repeats": args.repeats} if args.repeats else {})))
     if want("mixed"):
         # read/insert mixes; emits BENCH_mixed_workload.json
         if args.smoke:
             rows += bench_mixed_workload.rows(bench_mixed_workload.run(
-                n_keys=n_keys, n_ops=1_024, batch_size=256, out_json=None))
+                n_keys=n_keys, n_ops=1_024, batch_size=256,
+                n_warmup=1_024, out_json=None))
         else:
             rows += bench_mixed_workload.rows(bench_mixed_workload.run(
+                n_keys=max(n_keys, 65_536) if args.full else 65_536))
+    if want("serving"):
+        # §11 zero-repack serving: steady-state tails + retrace/upload
+        # telemetry + legacy before/after; emits BENCH_serving_state.json
+        if args.smoke:
+            rows += bench_serving_state.rows(bench_serving_state.run(
+                n_keys=n_keys, n_ops=1_024, n_warmup=1_024,
+                batch_size=256, out_json=None, legacy=False))
+        else:
+            rows += bench_serving_state.rows(bench_serving_state.run(
                 n_keys=max(n_keys, 65_536) if args.full else 65_536))
     if want("roofline"):
         rows += bench_roofline.rows(bench_roofline.run())

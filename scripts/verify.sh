@@ -1,17 +1,71 @@
 #!/usr/bin/env bash
 # Pre-merge verification: tier-1 test suite + a seconds-scale smoke of
-# the two serving-path benchmarks (fused read path, mixed write path),
-# so a perf-path regression in either dispatch route is caught before
-# it lands.  Usage: scripts/verify.sh [extra pytest args]
+# the serving-path benchmarks (fused read path, mixed write path, §11
+# serving state), so a perf-path regression in any dispatch route is
+# caught before it lands.  Any "wrong" count > 0 in an emitted BENCH
+# JSON fails the run.
+#
+# Usage:
+#   scripts/verify.sh [extra pytest args]          # full tier
+#   scripts/verify.sh --quick [extra pytest args]  # hard wall-clock
+#       budget per phase (VERIFY_QUICK_BUDGET_S, default 1500s): tier-1
+#       tests + smoke benches, then the bench-JSON correctness gate
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 test suite =="
-python -m pytest -x -q "$@"
+QUICK=0
+if [[ "${1:-}" == "--quick" ]]; then
+  QUICK=1
+  shift
+fi
+BUDGET="${VERIFY_QUICK_BUDGET_S:-1500}"
+run_phase() {
+  if [[ "$QUICK" == 1 ]]; then
+    timeout "$BUDGET" "$@"
+  else
+    "$@"
+  fi
+}
 
-echo "== serving-path smoke (fused + mixed) =="
-python -m benchmarks.run --smoke --only fused --only mixed
+echo "== tier-1 test suite =="
+run_phase python -m pytest -x -q "$@"
+
+echo "== serving-path smoke (fused + mixed + serving state) =="
+run_phase python -m benchmarks.run --smoke --only fused --only mixed \
+  --only serving
+
+echo "== bench JSON correctness gate (wrong > 0 fails) =="
+python - <<'PY'
+import glob
+import json
+import sys
+
+bad = []
+
+
+def scan(obj, path):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if k == "wrong" and isinstance(v, (int, float)) and v > 0:
+                bad.append(f"{path}/{k}={v}")
+            else:
+                scan(v, f"{path}/{k}")
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            scan(v, f"{path}[{i}]")
+
+
+for f in sorted(glob.glob("BENCH_*.json")):
+    with open(f) as fh:
+        scan(json.load(fh), f)
+if bad:
+    print("verify.sh: wrong > 0 in emitted bench JSON:")
+    for b in bad:
+        print("  " + b)
+    sys.exit(1)
+print("bench JSONs clean")
+PY
 
 echo "verify.sh: OK"

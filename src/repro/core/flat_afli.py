@@ -120,20 +120,23 @@ def _probe_sorted_pool(pk_pool: np.ndarray, hi_pool: np.ndarray,
     (the kernel's NF re-materialization hazard) resolves identically on
     both dispatch routes.  Tiers keep insertion order within an
     equal-pkey window (stable sort), so the highest matching index is
-    the last write — the NEWEST copy wins."""
-    out = np.full(q.shape[0], -1, np.int32)
+    the last write — the NEWEST copy wins.
+
+    Fully vectorized over the query batch: one ``searchsorted`` plus one
+    [n_queries, 4*window] identity-compare round (no per-query or
+    per-offset Python loop on the ``host_probe`` path)."""
     n = pk_pool.shape[0]
     if not n:
-        return out
+        return np.full(q.shape[0], -1, np.int32)
     window = _tier_window(pk_pool)
     j = np.searchsorted(pk_pool, q, side="left")
-    for w in range(-window, 3 * window):
-        jj = j + w
-        valid = (jj >= 0) & (jj < n)
-        jjc = np.clip(jj, 0, n - 1)
-        ok = valid & (hi_pool[jjc] == qhi) & (lo_pool[jjc] == qlo)
-        out = np.where(ok, pv_pool[jjc], out)  # later w = newer write
-    return out
+    widx = j[:, None] + np.arange(-window, 3 * window)[None, :]
+    valid = (widx >= 0) & (widx < n)
+    wc = np.clip(widx, 0, n - 1)
+    ok = valid & (hi_pool[wc] == qhi[:, None]) & (lo_pool[wc] == qlo[:, None])
+    last = np.max(np.where(ok, widx, -1), axis=1)  # highest index = newest
+    return np.where(last >= 0, pv_pool[np.clip(last, 0, n - 1)],
+                    -1).astype(np.int32)
 
 
 def _pack_tier(pk: np.ndarray, hi: np.ndarray, lo: np.ndarray,
@@ -175,6 +178,8 @@ class FlatAFLIConfig:
     delta_cap: int = 4096             # active-delta bound before run merge
     fold_step_keys: int = 4096        # incremental-fold work unit (keys)
     fold_work_factor: float = 8.0     # fold work per insert call, x batch
+    bucketed_serving: bool = True     # §11 persistent shape-bucketed pools
+                                      # (False = legacy per-mutation repack)
 
 
 class FlatArrays(NamedTuple):
@@ -197,18 +202,27 @@ class FlatArrays(NamedTuple):
     bpayload: jnp.ndarray         # i32[B, cap]
     blen: jnp.ndarray             # i32[B]
 
-    def to_kernel_args(self, lane: int = 128):
+    def to_kernel_args(self, lane: int = 128, bucketed: bool = False):
         """Pack the pools for ``kernels/fused_lookup``: u8 type codes cast
         to i32 and every pool's leading dim padded to a lane multiple
         (padding is never addressed — all traversal indices stay in the
         built range).  Bucket arrays stay [B, cap] so the in-kernel scan
-        is one row gather per level, as in the oracle."""
+        is one row gather per level, as in the oracle.
+
+        ``bucketed=True`` pads each leading dim up to a power-of-two
+        bucket instead of the exact lane multiple, so a fold swap whose
+        pool sizes drift within the bucket keeps the traced kernel
+        shapes — the serving jit cache stays warm across rebuilds
+        (DESIGN.md §11).  Padding is zero-filled: etype 0 is EMPTY and
+        padded nodes/buckets are never addressed."""
         from repro.kernels.fused_lookup import KernelPools
 
         def pad1(x):
             x = np.asarray(x)
             n = x.shape[0]
             m = ((n + lane - 1) // lane) * lane
+            if bucketed:
+                m = max(lane, _pow2ceil(m))
             if m != n:
                 pad = [(0, m - n)] + [(0, 0)] * (x.ndim - 1)
                 x = np.pad(x, pad)
@@ -543,15 +557,22 @@ class _IncrementalFold:
 
     def _finalize(self) -> int:
         self.arrays_new = self.builder.finalize()
-        self.pools_new = self.arrays_new.to_kernel_args()
+        self.pools_new = self.arrays_new.to_kernel_args(
+            bucketed=self.idx._serving.bucketed)
         self.max_depth_new = self.builder.max_depth + 1
         self.dense_window_new = _max_equal_run(self.pk) + 2
-        for s in range(0, self.n, self.step):
-            self.post_items.append(("verify", s, min(s + self.step, self.n)))
-        if self.idx._serve_flow is not None:
+        for kind in (("verify",)
+                     + (("verify_flow",) if self.idx._serve_flow is not None
+                        else ())):
             for s in range(0, self.n, self.step):
-                self.post_items.append(
-                    ("verify_flow", s, min(s + self.step, self.n)))
+                # uniform chunk shapes: the final ragged chunk is slid
+                # back to a full step (re-verifying overlap keys is
+                # idempotent), so every fold's verify dispatches reuse
+                # ONE traced kernel shape instead of minting a new
+                # ragged-tail shape per fold (§11 zero-retrace serving)
+                lo = min(s, max(self.n - self.step, 0))
+                self.post_items.append((kind, lo, min(lo + self.step,
+                                                      self.n)))
         return max(self.n // 4, 1)
 
     def _lookup_kwargs(self):
@@ -595,9 +616,14 @@ class _IncrementalFold:
     def _swap(self) -> None:
         idx = self.idx
         idx.arrays = self.arrays_new
-        idx._kpools = self.pools_new
         idx.max_depth = self.max_depth_new
         idx.dense_window = self.dense_window_new
+        # atomic serving swap: the pools were packed off the serve path
+        # at finalize; statics ratchet inside the serving cache so the
+        # warm jit entries survive the swap (§11)
+        idx._serving.set_tree(self.arrays_new, self.pools_new,
+                              max_depth=self.max_depth_new,
+                              dense_window=self.dense_window_new)
         # the frozen run was consumed by the snapshot; placement shadows
         # seed the new run tier (below the active delta, so newer inserts
         # for the same identity still win)
@@ -614,7 +640,9 @@ class _IncrementalFold:
             idx._run_hi = np.empty(0, np.uint32)
             idx._run_lo = np.empty(0, np.uint32)
             idx._run_pv = np.empty(0, np.int32)
-        idx._run_pack = None
+        idx._serving.mark_run_dirty()
+        idx._sync_tiers()
+        idx._preallocate_tiers(self.n)  # n grew: ratchet capacity floors
         idx.n_rebuilds += 1
         idx._fold = None
 
@@ -712,15 +740,20 @@ class FlatAFLI:
     """Static flat index + tiered log-structured write path (§10)."""
 
     def __init__(self, cfg: FlatAFLIConfig | None = None):
+        from repro.core.serving_state import ServingState
+
         self.cfg = cfg or FlatAFLIConfig()
         self.arrays: Optional[FlatArrays] = None
-        self._kpools = None            # cached to_kernel_args() packing
+        # persistent device-resident serving cache (DESIGN.md §11): tree
+        # pools packed once per build/fold-swap, bucketed tier buffers,
+        # ratcheted static kernel params
+        self._serving = ServingState(bucketed=self.cfg.bucketed_serving)
         self.last_dispatch = {}        # ops.fused_lookup info of last probe
         self.max_depth = 1
         self.d_tail = self.cfg.min_bucket
         self.n_keys = 0
-        # write tiers (host mirrors, sorted by pkey f32; device twins are
-        # packed lazily) — newest first: active delta > compacted run
+        # write tiers (host mirrors, sorted by pkey f32; the device twins
+        # live in the ServingState) — newest first: delta > compacted run
         self._fold: Optional[_IncrementalFold] = None
         self._reset_tiers()
         self._id_set = set()           # u64 identities currently indexed
@@ -754,13 +787,29 @@ class FlatAFLI:
         builder = _Builder(self.cfg, self.d_tail)
         builder.build(pk32, hi, lo, pv.astype(np.int64))
         self.arrays = builder.finalize()
-        self._kpools = None
         self.max_depth = builder.max_depth + 1
         self.dense_window = _max_equal_run(pk32) + 2
+        # pack ONCE into the serving cache; every serve call reuses the
+        # device-resident pools until the next build / fold swap (§11)
+        self._serving.set_tree(self.arrays, max_depth=self.max_depth,
+                               dense_window=self.dense_window)
         self._reset_tiers()
+        self._preallocate_tiers(pk32.shape[0])
         self._id_set = set(_ids64(hi, lo).tolist())
         self.n_keys = len(self._id_set)
         self._self_verify(pk32, hi, lo, pv.astype(np.int32))
+
+    def _preallocate_tiers(self, n: int) -> None:
+        """Fix the tier capacity buckets from the configured workload
+        bounds (§11): the delta is capped at ``delta_cap`` between
+        merges but keeps absorbing inserts while a fold is in flight,
+        and the run peaks around the fold trigger plus deferred merges —
+        8x headroom over both keeps steady-state serving off the
+        capacity-growth (repack + retrace) path entirely."""
+        self._serving.preallocate(
+            delta_floor=8 * self.cfg.delta_cap + 1,
+            run_floor=int(self.cfg.rebuild_frac * max(n, 1))
+            + 8 * self.cfg.delta_cap + 1)
 
     def _reset_tiers(self) -> None:
         self._delta_pk = np.empty(0, np.float32)
@@ -771,8 +820,7 @@ class FlatAFLI:
         self._run_hi = np.empty(0, np.uint32)
         self._run_lo = np.empty(0, np.uint32)
         self._run_pv = np.empty(0, np.int32)
-        self._delta_pack = None
-        self._run_pack = None
+        self._serving.reset_tiers()
         self._fold = None
 
     def set_serve_flow(self, normalizer, flow_cfg, packed_w, shapes) -> None:
@@ -791,37 +839,43 @@ class FlatAFLI:
 
     # ---------------------------------------------------- device dispatch
     def _kernel_pools(self):
-        """Lazily packed, cached kernel pools (invalidated on rebuild)."""
-        if self._kpools is None:
-            self._kpools = self.arrays.to_kernel_args()
-        return self._kpools
+        """The device-resident kernel pools: packed once per build/fold
+        swap into the serving cache, reused by every dispatch (§11)."""
+        if self._serving.tree_pools is None:
+            self._serving.set_tree(self.arrays, max_depth=self.max_depth,
+                                   dense_window=getattr(self, "dense_window",
+                                                        8))
+        return self._serving.tree_pools
 
     def _dense_window_static(self) -> int:
-        return _window_round(int(getattr(self, "dense_window", 8)))
+        """Ratcheted serve-path duplicate-run window (upward-only so a
+        fold swap that shrinks it cannot retrace the kernel)."""
+        return max(self._serving.dense_window,
+                   _window_round(int(getattr(self, "dense_window", 8))))
 
     def _depth_static(self) -> int:
-        return _depth_round(self.max_depth)
+        return max(self._serving.max_depth, _depth_round(self.max_depth))
+
+    def _sync_tiers(self) -> None:
+        """Ship dirty tier prefixes into the persistent device buffers.
+        Called eagerly from every write-path mutation so serve calls
+        (reads) find the pack resident and pay nothing.  The mirror
+        thunks are evaluated per dirty tier only — a delta append never
+        re-scans the (unchanged, much larger) run mirror for its
+        window."""
+        self._serving.refresh_tiers(
+            lambda: (self._run_pk, self._run_hi, self._run_lo,
+                     self._run_pv, _tier_window(self._run_pk)),
+            lambda: (self._delta_pk, self._delta_hi, self._delta_lo,
+                     self._delta_pv, _tier_window(self._delta_pk)))
 
     def _tier_pack(self):
         """TierPack thunk for ``ops.fused_lookup`` — ``None`` when both
-        write tiers are empty (the probe stage compiles out).  Run and
-        delta blocks are cached independently: the delta repacks on every
-        insert batch, the (much larger) run only on merge/fold."""
-        from repro.kernels.fused_lookup import TierPack, TierPools
-
-        if not (self._delta_pk.shape[0] or self._run_pk.shape[0]):
-            return None
-        if self._run_pack is None:
-            self._run_pack = _pack_tier(self._run_pk, self._run_hi,
-                                        self._run_lo, self._run_pv)
-        if self._delta_pack is None:
-            self._delta_pack = _pack_tier(self._delta_pk, self._delta_hi,
-                                          self._delta_lo, self._delta_pv)
-        (r_arrays, r_iters, r_window) = self._run_pack
-        (d_arrays, d_iters, d_window) = self._delta_pack
-        return TierPack(pools=TierPools(*r_arrays, *d_arrays),
-                        run_iters=r_iters, run_window=r_window,
-                        delta_iters=d_iters, delta_window=d_window)
+        write tiers are empty (the probe stage compiles out).  Returns
+        the *resident* pack: mutations refresh only the changed prefix
+        of the persistent bucketed buffers, never a full repack."""
+        self._sync_tiers()
+        return self._serving.tier_pack()
 
     def _device_lookup(self, pk32: np.ndarray, hi: np.ndarray,
                        lo: np.ndarray, *, arrays=None, pools=None,
@@ -873,17 +927,25 @@ class FlatAFLI:
             self._append_run(pk32[wrong], hi[wrong], lo[wrong], pv[wrong])
 
     def _append_delta(self, pk, hi, lo, pv) -> None:
-        """Append a batch to the active delta.  The stable sort keeps
-        insertion order within an equal-pkey window, so probes can pick
-        the newest copy (last-write-wins)."""
-        mk = np.concatenate([self._delta_pk, pk])
-        mhi = np.concatenate([self._delta_hi, hi])
-        mlo = np.concatenate([self._delta_lo, lo])
-        mpv = np.concatenate([self._delta_pv, pv.astype(np.int32)])
-        order = np.argsort(mk, kind="stable")
-        self._delta_pk, self._delta_hi = mk[order], mhi[order]
-        self._delta_lo, self._delta_pv = mlo[order], mpv[order]
-        self._delta_pack = None
+        """Append a batch to the active delta with last-write-wins dedup
+        by 64-bit identity (the batch is newer than what the delta
+        holds, and within the batch later entries win).
+
+        Deduplicating here — not just at merge — keeps each identity at
+        ONE copy, so an equal-pkey run in the delta can only come from
+        genuinely colliding f32 positioning keys, never from re-insert
+        traffic.  That bounds the probe window by the *data*, not the
+        workload: a re-insert-heavy stream cannot ratchet the kernel's
+        static scan window mid-serving (§11 zero-retrace), and the probe
+        semantics are unchanged (the newest copy is the only copy)."""
+        (self._delta_pk, self._delta_hi,
+         self._delta_lo, self._delta_pv) = _dedup_newest(
+            np.concatenate([self._delta_pk, pk]),
+            np.concatenate([self._delta_hi, hi]),
+            np.concatenate([self._delta_lo, lo]),
+            np.concatenate([self._delta_pv, pv.astype(np.int32)]))
+        self._serving.mark_delta_dirty()
+        self._sync_tiers()
 
     def _append_run(self, pk, hi, lo, pv) -> None:
         """Merge entries into the compacted run: two-way merge with
@@ -895,7 +957,8 @@ class FlatAFLI:
             np.concatenate([self._run_hi, hi]),
             np.concatenate([self._run_lo, lo]),
             np.concatenate([self._run_pv, pv.astype(np.int32)]))
-        self._run_pack = None
+        self._serving.mark_run_dirty()
+        self._sync_tiers()
 
     def _merge_delta_into_run(self) -> None:
         """Retire the full active delta into the compacted run."""
@@ -907,7 +970,8 @@ class FlatAFLI:
         self._delta_hi = np.empty(0, np.uint32)
         self._delta_lo = np.empty(0, np.uint32)
         self._delta_pv = np.empty(0, np.int32)
-        self._delta_pack = None
+        self._serving.mark_delta_dirty()
+        self._sync_tiers()
 
     # ------------------------------------------------------------- lookup
     def _probe_delta(self, res: np.ndarray, q32: np.ndarray,
@@ -1110,4 +1174,5 @@ class FlatAFLI:
             "fold_active": self._fold is not None,
             "n_rebuilds": self.n_rebuilds,
             "n_host_tier_probes": self.n_host_tier_probes,
+            "serving": self._serving.stats(),
         }

@@ -228,3 +228,17 @@ class NFL:
     # ---------------------------------------------------------------- misc
     def stats(self):
         return self.index.stats()
+
+    def dispatch_stats(self):
+        """Serving-path telemetry for benchmarks and ops dashboards
+        (DESIGN.md §11): the fused-dispatch counters (fallbacks, tier
+        routing, ``retrace_count``) plus, on the flat backend, the
+        persistent serving-state counters (pack reuse, tier prefix
+        uploads, full repacks) and the host tier-probe count."""
+        from repro.kernels.ops import fused_lookup_stats
+
+        out = {"dispatch": fused_lookup_stats()}
+        if self.cfg.backend == "flat":
+            out["serving"] = self.index._serving.stats()
+            out["host_tier_probes"] = self.index.n_host_tier_probes
+        return out

@@ -1,0 +1,313 @@
+"""Persistent device-resident serving state (DESIGN.md §11).
+
+The serving hot path must pay only for the kernel.  Before this module,
+every pool mutation re-packed and re-uploaded whole tiers from host
+numpy, and every tier length change altered the lane-padded shapes the
+jit cache is keyed on — an XLA retrace + recompile in the middle of a
+mixed workload (the BENCH_mixed_workload read p99 was ~750x its p50 for
+exactly this reason).  ``ServingState`` makes serving zero-repack:
+
+* **pack once** — the static tree pools are packed to kernel layout once
+  per build/fold-swap and cached until the next swap (invalidate on
+  mutation, never per call);
+* **shape-bucketed tiers** — the write tiers live in *persistent* device
+  buffers sized to power-of-two capacity buckets with a ``(length,)``
+  scalar ridealong; a delta append overwrites the live prefix in place
+  through ``lax.dynamic_update_slice`` (a small bounded device copy),
+  so traced shapes change only when a tier outgrows its bucket;
+* **ratcheted statics** — every static kernel parameter that can drift
+  with the data (traversal depth bound, duplicate-run scan windows,
+  binary-search iteration counts) only ever ratchets upward, so a fold
+  swap that would shrink them cannot retrace the kernel.  Scanning or
+  looping further than necessary is semantically free: all matching is
+  by exact 64-bit identity and the traversal early-exits.
+
+The rows of a tier buffer beyond the live prefix are inert by
+construction: the in-kernel binary search is bounded by the length
+scalar and the window scan masks on ``index < length``, so stale data
+from a previous (longer) tier state is never observed.  ``+inf`` key
+padding is still written inside each refreshed prefix as belt and
+braces.
+
+Instrumented throughout: uploads (count + bytes), full repacks
+(fresh-buffer allocations), and pack reuse are all counted so the
+serving benchmarks can assert the zero-repack property instead of
+inferring it from tail latencies.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ServingState", "DeviceTier", "pow2_bucket"]
+
+_LANE = 128
+
+
+def pow2_bucket(n: int, floor: int = _LANE) -> int:
+    """Smallest power-of-two bucket >= max(n, floor)."""
+    n = max(int(n), int(floor))
+    return 1 << max(n - 1, 0).bit_length()
+
+
+# ------------------------------------------------------------------ jitted
+# device-side prefix writes: one cache entry per (capacity, prefix) shape
+# pair — a bounded ladder (log2 x log2), warmed once per bucket.
+@jax.jit
+def _write_prefix(buf: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.dynamic_update_slice(buf, vals, (0,))
+
+
+@jax.jit
+def _write_len(buf: jnp.ndarray, n) -> jnp.ndarray:
+    return buf.at[0].set(n)
+
+
+class DeviceTier:
+    """One sorted write tier in a persistent bucketed device buffer.
+
+    Layout matches ``_pack_tier``: pk f32 / hi u32 / lo u32 / pv i32 at
+    bucket capacity, plus an i32[128] length lane with the live length
+    at [0].  ``refresh`` ships the new live prefix; the buffers are
+    reallocated only when the tier outgrows its capacity bucket.
+    """
+
+    def __init__(self, bucketed: bool = True):
+        self.bucketed = bucketed
+        self.capacity = 0
+        self.min_capacity = 0      # preallocation floor (see preallocate)
+        self.length = 0
+        self.window = 4            # ratcheted pow2 duplicate-run window
+        self.pk = self.hi = self.lo = self.pv = self.plen = None
+        self.uploads = 0
+        self.upload_bytes = 0
+        self.repacks = 0
+
+    @property
+    def iters(self) -> int:
+        """Binary-search rounds covering the capacity bucket (static)."""
+        return max(self.capacity, 1).bit_length()
+
+    def _alloc(self, cap: int, pk, hi, lo, pv, n: int) -> None:
+        """Fresh +inf-padded buffers at ``cap`` (full repack)."""
+        ppk = np.full(cap, np.inf, np.float32)
+        ppk[:n] = pk
+        phi = np.zeros(cap, np.uint32)
+        phi[:n] = hi
+        plo = np.zeros(cap, np.uint32)
+        plo[:n] = lo
+        ppv = np.full(cap, -1, np.int32)
+        ppv[:n] = pv
+        plen = np.zeros(_LANE, np.int32)
+        plen[0] = n
+        self.pk, self.hi = jnp.asarray(ppk), jnp.asarray(phi)
+        self.lo, self.pv = jnp.asarray(plo), jnp.asarray(ppv)
+        self.plen = jnp.asarray(plen)
+        self.capacity = cap
+        self.repacks += 1
+        self.upload_bytes += 4 * cap * 4 + _LANE * 4
+        self.uploads += 1
+
+    def refresh(self, pk: np.ndarray, hi: np.ndarray, lo: np.ndarray,
+                pv: np.ndarray, window: int) -> None:
+        """Adopt a new live tier state (sorted host mirror).
+
+        Within the capacity bucket this is an in-place device prefix
+        write; outgrowing the bucket (or ``bucketed=False`` legacy mode)
+        reallocates.  The duplicate-run window only ratchets upward so
+        the kernel statics stay warm."""
+        n = int(pk.shape[0])
+        # +1 keeps at least one +inf sentinel row inside the bucket
+        need = max(pow2_bucket(n + 1), self.min_capacity)
+        if not self.bucketed:
+            # legacy per-mutation repack (the pre-§11 behavior, kept for
+            # the before/after serving benchmark): exact window, fresh
+            # buffers, capacity free to shrink — every drift retraces
+            self.window = max(4, int(window))
+            self._alloc(need, pk, hi, lo, pv, n)
+            self.length = n
+            return
+        self.window = max(self.window, int(window))
+        if self.pk is None or need > self.capacity:
+            self._alloc(max(need, self.capacity), pk, hi, lo, pv, n)
+            self.length = n
+            return
+        # in-bucket: ship the padded live prefix, leave the rest
+        # resident.  n+1, not n: the row at index n must be rewritten to
+        # +inf even when n is an exact power of two — the fixed-round
+        # tier binary search reads ppk[n] once converged at l=h=n, and a
+        # stale finite key there would push the landing (and its scan
+        # window) one slot high.  capacity >= pow2(n+1) is guaranteed on
+        # this branch by the `need` check above.
+        m = min(pow2_bucket(n + 1, floor=64), self.capacity)
+        ppk = np.full(m, np.inf, np.float32)
+        ppk[:n] = pk
+        phi = np.zeros(m, np.uint32)
+        phi[:n] = hi
+        plo = np.zeros(m, np.uint32)
+        plo[:n] = lo
+        ppv = np.full(m, -1, np.int32)
+        ppv[:n] = pv
+        self.pk = _write_prefix(self.pk, jnp.asarray(ppk))
+        self.hi = _write_prefix(self.hi, jnp.asarray(phi))
+        self.lo = _write_prefix(self.lo, jnp.asarray(plo))
+        self.pv = _write_prefix(self.pv, jnp.asarray(ppv))
+        self.plen = _write_len(self.plen, np.int32(n))
+        self.length = n
+        self.uploads += 1
+        self.upload_bytes += 4 * m * 4
+
+
+class ServingState:
+    """Device-resident serving cache for one ``FlatAFLI`` instance.
+
+    Owns the packed tree pools (rebuilt only at build / fold-swap), the
+    two persistent write-tier buffers (run + active delta), and the
+    ratcheted static kernel parameters.  ``FlatAFLI`` routes every
+    serve-path dispatch through this object; mutations mark the affected
+    piece dirty and the next (or an eager) ``refresh`` ships only the
+    changed prefix.
+    """
+
+    def __init__(self, bucketed: bool = True):
+        self.bucketed = bucketed
+        self.tree_pools = None          # KernelPools, packed once per swap
+        self.run = DeviceTier(bucketed)
+        self.delta = DeviceTier(bucketed)
+        # ratcheted statics (upward-only; see module docstring)
+        self.max_depth = 4
+        self.dense_window = 4
+        self.tree_packs = 0             # full tree pool packings
+        self.tier_reuses = 0            # tier_pack calls with warm buffers
+        self._run_dirty = True
+        self._delta_dirty = True
+
+    # ------------------------------------------------------------- tree
+    def set_tree(self, arrays, pools=None, *, max_depth: int,
+                 dense_window: int) -> None:
+        """Adopt a (re)built static structure.  ``pools`` may be packed
+        ahead of time (the incremental fold packs off the serve path);
+        statics ratchet so a shallower new tree cannot retrace."""
+        from repro.core.flat_afli import _depth_round, _window_round
+
+        if pools is None:
+            pools = arrays.to_kernel_args(bucketed=self.bucketed)
+        self.tree_pools = pools
+        self.tree_packs += 1
+        if self.bucketed:
+            self.max_depth = max(self.max_depth, _depth_round(max_depth))
+            self.dense_window = max(self.dense_window,
+                                    _window_round(dense_window))
+        else:  # legacy: exact statics, free to shrink (and retrace)
+            self.max_depth = _depth_round(max_depth)
+            self.dense_window = _window_round(dense_window)
+
+    # ------------------------------------------------------------ tiers
+    def preallocate(self, *, delta_floor: int, run_floor: int) -> None:
+        """Pin tier capacity buckets from the workload's configured
+        bounds (delta cap, fold trigger) with headroom, and allocate the
+        buffers now.  With capacities fixed up front, the kernel's tier
+        block shapes and iteration statics are decided at build time —
+        steady-state serving cannot hit a capacity-growth repack (and
+        its retrace) no matter how the tier lengths move."""
+        if not self.bucketed:
+            return
+        self.delta.min_capacity = max(self.delta.min_capacity,
+                                      pow2_bucket(delta_floor))
+        self.run.min_capacity = max(self.run.min_capacity,
+                                    pow2_bucket(run_floor))
+        empty = (np.empty(0, np.float32), np.empty(0, np.uint32),
+                 np.empty(0, np.uint32), np.empty(0, np.int32))
+        for t in (self.run, self.delta):
+            if t.capacity < t.min_capacity:
+                live = None
+                if t.pk is not None and t.length:
+                    live = tuple(np.asarray(a)[:t.length]
+                                 for a in (t.pk, t.hi, t.lo, t.pv))
+                t._alloc(t.min_capacity, *(live or empty),
+                         n=t.length if live else 0)
+
+    def reset_tiers(self) -> None:
+        """Drop tier contents (new build).  Buffers stay allocated —
+        lengths go to zero, capacities and ratchets are retained so the
+        next workload starts with a warm jit cache."""
+        if self.run.pk is not None:
+            self.run.refresh(np.empty(0, np.float32), np.empty(0, np.uint32),
+                             np.empty(0, np.uint32), np.empty(0, np.int32),
+                             self.run.window)
+        else:
+            self.run.length = 0
+        if self.delta.pk is not None:
+            self.delta.refresh(np.empty(0, np.float32),
+                               np.empty(0, np.uint32),
+                               np.empty(0, np.uint32),
+                               np.empty(0, np.int32), self.delta.window)
+        else:
+            self.delta.length = 0
+        self._run_dirty = self._delta_dirty = False
+
+    def mark_run_dirty(self) -> None:
+        self._run_dirty = True
+
+    def mark_delta_dirty(self) -> None:
+        self._delta_dirty = True
+
+    def refresh_tiers(self, run_mirror, delta_mirror) -> None:
+        """Ship dirty tier prefixes to the device.  Mirrors are
+        zero-arg thunks returning ``(pk, hi, lo, pv, window)`` of the
+        live host state — evaluated only for the dirty tier(s), so a
+        delta append never pays the window scan over the (unchanged,
+        much larger) run mirror.  Called eagerly from the write path so
+        reads never pay it."""
+        if self._run_dirty:
+            self.run.refresh(*run_mirror())
+            self._run_dirty = False
+        if self._delta_dirty:
+            self.delta.refresh(*delta_mirror())
+            self._delta_dirty = False
+
+    def tier_pack(self):
+        """The resident ``TierPack`` (``None`` while both tiers are
+        empty).  Requires the tiers to be clean — ``FlatAFLI`` refreshes
+        on mutation and before dispatch."""
+        from repro.kernels.fused_lookup import TierPack, TierPools
+
+        if not (self.run.length or self.delta.length):
+            return None
+        empty = (np.empty(0, np.float32), np.empty(0, np.uint32),
+                 np.empty(0, np.uint32), np.empty(0, np.int32))
+        for t in (self.run, self.delta):
+            if t.pk is None:  # never-touched tier riding along empty
+                t.refresh(*empty, window=t.window)
+        self.tier_reuses += 1
+        r, d = self.run, self.delta
+        return TierPack(
+            pools=TierPools(run_pk=r.pk, run_hi=r.hi, run_lo=r.lo,
+                            run_pv=r.pv, run_len=r.plen,
+                            dl_pk=d.pk, dl_hi=d.hi, dl_lo=d.lo,
+                            dl_pv=d.pv, dl_len=d.plen),
+            run_iters=r.iters, run_window=r.window,
+            delta_iters=d.iters, delta_window=d.window)
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> dict:
+        return {
+            "tree_packs": self.tree_packs,
+            "tier_reuses": self.tier_reuses,
+            "tier_uploads": self.run.uploads + self.delta.uploads,
+            "tier_upload_bytes": (self.run.upload_bytes
+                                  + self.delta.upload_bytes),
+            "tier_repacks": self.run.repacks + self.delta.repacks,
+            "run_capacity": self.run.capacity,
+            "delta_capacity": self.delta.capacity,
+            "static_max_depth": self.max_depth,
+            "static_dense_window": self.dense_window,
+        }
+
+    def reset_stats(self) -> None:
+        for t in (self.run, self.delta):
+            t.uploads = t.upload_bytes = t.repacks = 0
+        self.tree_packs = 0
+        self.tier_reuses = 0

@@ -32,8 +32,13 @@ small enough for VMEM residency on real workloads; the
 ``kernels/ops.fused_lookup`` shim falls back to the two-dispatch oracle
 path when they are not.
 
-Grid: (ceil(B / TILE),).  TILE is lane-aligned on TPU; on the CPU
-validation platform a single grid step avoids re-materializing the pools.
+Grid: (ceil(B / TILE),) — a real tiled grid over the query batch with
+the pools as grid-invariant blocks (DESIGN.md §11).  TILE is
+lane-aligned on TPU; the interpret tile is a multi-step-grid throughput
+choice (``select_tile``).  Per-level work is batch-gated: the dense
+binary search + duplicate scan run only on levels where some live query
+sits on a dense node, and each write tier's probe only while the tier
+is non-empty.
 """
 
 from __future__ import annotations
@@ -53,7 +58,9 @@ __all__ = ["fused_lookup_pallas", "KernelPools", "TierPools", "TierPack",
            "DEFAULT_TILE", "INTERPRET_TILE", "NF_TILE"]
 
 DEFAULT_TILE = 512       # lane-aligned query tile for compiled TPU runs
-INTERPRET_TILE = 8192    # CPU validation: one grid step per request batch
+INTERPRET_TILE = 2048    # CPU validation: per-step query tile of the
+#                          tiled grid (a 4k+ batch is a multi-step grid,
+#                          not one giant block — DESIGN.md §11)
 
 # entry / node codes — schema owned by repro.core.flat_afli
 EMPTY, DATA, BUCKET, CHILD = 0, 1, 2, 3
@@ -201,79 +208,102 @@ def _kernel(feat_ref, qhi_ref, qlo_ref, w_ref,
     # ---- (2) bounded traversal: early-exit while_loop over levels with
     # per-query active masks, exactly as the flat_lookup oracle runs it (a
     # loop, not a python unroll — compile time stays flat in tree height).
+    # NOTE gather idiom: plain ``pool[idx]`` indexing, never
+    # ``jnp.take(pool, idx)``.  Both clamp out-of-bounds reads, but the
+    # explicit clip-mode gather take() emits defeats XLA:CPU
+    # vectorization and ran the whole traversal ~2x slower than the
+    # flat_lookup oracle (the BENCH_fused_lookup traversal_only.speedup
+    # = 0.79 anomaly); indexing compiles to the same gather the oracle
+    # uses, restoring parity op-for-op.
     def level_body(carry):
         node, result, done, depth = carry
-        kind = jnp.take(nkind, node)
-        slope = jnp.take(nslope, node)
-        intercept = jnp.take(nicept, node)
-        offset = jnp.take(noff, node)
-        size = jnp.take(nsize, node)
+        kind = nkind[node]
+        slope = nslope[node]
+        intercept = nicept[node]
+        offset = noff[node]
+        size = nsize[node]
 
         # model-node path: precise predicted slot (f32 FMA, as built)
         slot = jnp.clip(
             jnp.rint(slope * qkey + intercept).astype(jnp.int32), 0, size - 1
         )
         e_model = offset + slot
-
-        # dense-node path: fixed-iteration binary search by ekey
-        def bs_body(_, lh):
-            l, h = lh
-            mid = (l + h) // 2
-            v = jnp.take(ekey, mid)
-            go_right = v < qkey
-            return (jnp.where(go_right, mid + 1, l),
-                    jnp.where(go_right, h, mid))
-
-        l_fin, _ = jax.lax.fori_loop(0, dense_iters, bs_body,
-                                     (offset, offset + size))
-        e_dense = jnp.clip(l_fin, offset, offset + size - 1)
-
-        e = jnp.where(kind == KIND_MODEL, e_model, e_dense)
-        et = jnp.take(etype, e)
         is_dense = kind == KIND_DENSE
 
-        # (3) exact 64-bit identity resolution
-        hit_data = (et == DATA) & (jnp.take(ehi, e) == qhi) & \
-            (jnp.take(elo, e) == qlo)
+        # dense-node path, level-gated: the fixed-iteration binary
+        # search + duplicate-run scan are the dominant per-level gather
+        # cost (dense_iters rounds), but NF-transformed trees are
+        # model-node-heavy — most levels have NO live query on a dense
+        # node.  ``lax.cond`` on the batch-collective predicate skips
+        # the whole stage for such levels; ``dense_payload`` feeds only
+        # ``is_dense`` lanes, so the skip is bit-invisible (this is
+        # where the fused path overtakes the unconditionally-searching
+        # flat_lookup oracle on traversal-only workloads).
+        def dense_stage(_):
+            def bs_body(_, lh):
+                l, h = lh
+                mid = (l + h) // 2
+                v = ekey[mid]
+                go_right = v < qkey
+                return (jnp.where(go_right, mid + 1, l),
+                        jnp.where(go_right, h, mid))
 
-        # dense duplicates of an f32 pkey: bounded forward scan, done as
-        # one [tile, window] vectorized gather round; the first matching
-        # position wins (argmax picks the first True), exactly the
-        # oracle's acc<0 first-match fold
-        widx = jnp.clip(
-            e_dense[:, None]
-            + jax.lax.broadcasted_iota(jnp.int32, (e_dense.shape[0],
-                                                   dense_window), 1),
-            offset[:, None], (offset + size - 1)[:, None])
-        wok = ((jnp.take(ekey, widx) == qkey[:, None])
-               & (jnp.take(ehi, widx) == qhi[:, None])
-               & (jnp.take(elo, widx) == qlo[:, None]))
-        first = jnp.argmax(wok, axis=1)
-        found = jnp.take_along_axis(wok, first[:, None], 1)[:, 0]
-        wpay = jnp.take_along_axis(jnp.take(epay, widx),
-                                   first[:, None], 1)[:, 0]
-        dense_payload = jnp.where(found, wpay, -1)
+            l_fin, _ = jax.lax.fori_loop(0, dense_iters, bs_body,
+                                         (offset, offset + size))
+            e_dense = jnp.clip(l_fin, offset, offset + size - 1)
+
+            # dense duplicates of an f32 pkey: bounded forward scan, done
+            # as one [tile, window] vectorized gather round; the first
+            # matching position wins (argmax picks the first True),
+            # exactly the oracle's acc<0 first-match fold
+            widx = jnp.clip(
+                e_dense[:, None]
+                + jax.lax.broadcasted_iota(jnp.int32, (e_dense.shape[0],
+                                                       dense_window), 1),
+                offset[:, None], (offset + size - 1)[:, None])
+            wok = ((ekey[widx] == qkey[:, None])
+                   & (ehi[widx] == qhi[:, None])
+                   & (elo[widx] == qlo[:, None]))
+            first = jnp.argmax(wok, axis=1)
+            found = jnp.take_along_axis(wok, first[:, None], 1)[:, 0]
+            wpay = jnp.take_along_axis(epay[widx], first[:, None], 1)[:, 0]
+            return e_dense, jnp.where(found, wpay, -1)
+
+        def dense_skip(_):
+            # no live dense-node query this level: e_dense only feeds
+            # is_dense lanes (none live) so any in-range entry index is
+            # equivalent; offset is always valid
+            return offset, jnp.full(offset.shape, -1, jnp.int32)
+
+        e_dense, dense_payload = jax.lax.cond(
+            jnp.any(is_dense & ~done), dense_stage, dense_skip, None)
+
+        e = jnp.where(kind == KIND_MODEL, e_model, e_dense)
+        et = etype[e]
+
+        # (3) exact 64-bit identity resolution
+        hit_data = (et == DATA) & (ehi[e] == qhi) & (elo[e] == qlo)
 
         # conflict-bucket scan: one row gather over the fixed capacity
         # (max over where(match, payload, -1), as in the oracle)
-        bid = jnp.maximum(jnp.take(echild, e), 0)
-        brow_hi = jnp.take(bhi, bid, axis=0)         # [tile, cap]
-        brow_lo = jnp.take(blo, bid, axis=0)
-        brow_pv = jnp.take(bpay, bid, axis=0)
+        bid = jnp.maximum(echild[e], 0)
+        brow_hi = bhi[bid]                           # [tile, cap]
+        brow_lo = blo[bid]
+        brow_pv = bpay[bid]
         col = jax.lax.broadcasted_iota(jnp.int32, brow_hi.shape, 1)
         bmatch = ((brow_hi == qhi[:, None]) & (brow_lo == qlo[:, None])
-                  & (col < jnp.take(blen, bid)[:, None]))
+                  & (col < blen[bid][:, None]))
         bucket_payload = jnp.max(jnp.where(bmatch, brow_pv, -1), axis=-1)
 
         model_payload = jnp.where(
-            hit_data, jnp.take(epay, e),
+            hit_data, epay[e],
             jnp.where(et == BUCKET, bucket_payload, -1),
         )
         result = jnp.where(
             done, result, jnp.where(is_dense, dense_payload, model_payload)
         )
         goes_deeper = (~is_dense) & (et == CHILD) & (~done)
-        node = jnp.where(goes_deeper, jnp.take(echild, e), node)
+        node = jnp.where(goes_deeper, echild[e], node)
         done = done | ~goes_deeper
         return node, result, done, depth + 1
 
@@ -312,17 +342,17 @@ def _kernel(feat_ref, qhi_ref, qlo_ref, w_ref,
                 jnp.int32, (l_fin.shape[0], 4 * window), 1)
             wc = jnp.clip(widx, 0, nmax - 1)
             ok = ((widx >= 0) & (widx < n_pool)
-                  & (jnp.take(phi, wc) == qhi[:, None])
-                  & (jnp.take(plo, wc) == qlo[:, None]))
+                  & (phi[wc] == qhi[:, None])
+                  & (plo[wc] == qlo[:, None]))
             last = jnp.max(jnp.where(ok, widx, -1), axis=1)
-            pay = jnp.take(ppv, jnp.clip(last, 0, nmax - 1))
+            pay = ppv[jnp.clip(last, 0, nmax - 1)]
             return jnp.where(last >= 0, pay, -1)
 
         def tier_search(ppk, n_pool, iters):
             def bs_body(_, lh):
                 l, h = lh
                 mid = (l + h) // 2
-                go_right = jnp.take(ppk, mid) < qkey
+                go_right = ppk[mid] < qkey
                 return (jnp.where(go_right, mid + 1, l),
                         jnp.where(go_right, h, mid))
 
@@ -331,14 +361,26 @@ def _kernel(feat_ref, qhi_ref, qlo_ref, w_ref,
             l_fin, _ = jax.lax.fori_loop(0, iters, bs_body, (l0, h0))
             return l_fin
 
-        rlen = rlen_ref[...][0]
-        run_pay = probe_tier(rhi_ref[...], rlo_ref[...], rpv_ref[...], rlen,
-                             tier_search(rpk_ref[...], rlen, run_iters),
-                             rpk_ref.shape[0], run_window)
-        dlen = dlen_ref[...][0]
-        dl_pay = probe_tier(dhi_ref[...], dlo_ref[...], dpv_ref[...], dlen,
-                            tier_search(dpk_ref[...], dlen, delta_iters),
-                            dpk_ref.shape[0], delta_window)
+        def tier_stage(phi, plo, ppv, ppk, n_pool, iters, window, nmax):
+            # length-gated: a tier that is empty right now (e.g. the run
+            # between a fold swap and the first shadow) skips its whole
+            # search+scan; misses are the only possible outcome anyway
+            def live(_):
+                return probe_tier(phi, plo, ppv, n_pool,
+                                  tier_search(ppk, n_pool, iters),
+                                  nmax, window)
+
+            def empty(_):
+                return jnp.full(qkey.shape, -1, jnp.int32)
+
+            return jax.lax.cond(n_pool > 0, live, empty, None)
+
+        run_pay = tier_stage(rhi_ref[...], rlo_ref[...], rpv_ref[...],
+                             rpk_ref[...], rlen_ref[...][0], run_iters,
+                             run_window, rpk_ref.shape[0])
+        dl_pay = tier_stage(dhi_ref[...], dlo_ref[...], dpv_ref[...],
+                            dpk_ref[...], dlen_ref[...][0], delta_iters,
+                            delta_window, dpk_ref.shape[0])
         result = jnp.where(dl_pay >= 0, dl_pay,
                            jnp.where(run_pay >= 0, run_pay, result))
 
@@ -347,6 +389,33 @@ def _kernel(feat_ref, qhi_ref, qlo_ref, w_ref,
 
 def _pow2ceil(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def select_tile(b: int, use_flow: bool, tile: Optional[int] = None,
+                interpret: Optional[bool] = None) -> int:
+    """Query-tile selection for the tiled grid (DESIGN.md §11).
+
+    The batch is served as a grid over query tiles with the pools as
+    grid-invariant blocks.  Flow tiles are pinned to whole ``NF_TILE``
+    multiples (build/serve key bit-equality, see module docstring); the
+    no-flow tile is a pure throughput choice: power-of-two bucketed so
+    per-batch-size recompiles stay bounded, capped at ``DEFAULT_TILE``
+    compiled / ``INTERPRET_TILE`` interpreted so a large batch becomes a
+    multi-step grid instead of one giant block.  Exposed so the dispatch
+    shim can bill the per-step query blocks against the VMEM budget with
+    the same tile the kernel will actually use."""
+    interpret = resolve_interpret(interpret)
+    if use_flow:
+        if tile is None:
+            tile = NF_TILE
+        # whole sub-tiles only: a ragged final sub-tile would evaluate
+        # the NF on a different shape and break key bit-equality
+        return ((max(tile, NF_TILE) + NF_TILE - 1) // NF_TILE) * NF_TILE
+    if tile is None:
+        tile = INTERPRET_TILE if interpret else DEFAULT_TILE
+    # never pad a small batch up to a huge tile; stay lane-aligned on TPU
+    tile = min(tile, _pow2ceil(b))
+    return tile if interpret else max(tile, 128)
 
 
 @functools.partial(
@@ -421,24 +490,12 @@ def fused_lookup_pallas(
             dl_pv=jnp.full((128,), -1, jnp.int32), dl_len=lane,
         )
     b = feats.shape[0]
-    if use_flow:
-        # pinned: the NF must evaluate on the build transform's block
-        # shape for bit-equal serve-time keys (see docstring).  Sub-tiling
-        # plus an optimization barrier narrows but does not close the gap —
-        # XLA still re-fuses across the traversal consumers at larger
-        # tiles — so only NF_TILE is exactness-safe.
-        if tile is None:
-            tile = NF_TILE
-        # whole sub-tiles only: a ragged final sub-tile would evaluate the
-        # NF on a different shape and break build/serve key bit-equality
-        tile = ((max(tile, NF_TILE) + NF_TILE - 1) // NF_TILE) * NF_TILE
-    else:
-        if tile is None:
-            tile = INTERPRET_TILE if interpret else DEFAULT_TILE
-        # never pad a small batch up to a huge tile; stay lane-aligned on TPU
-        tile = min(tile, _pow2ceil(b))
-        if not interpret:
-            tile = max(tile, 128)
+    # tiled grid over the query batch (pools ride as grid-invariant
+    # blocks).  Flow tiles are pinned: the NF must evaluate on the build
+    # transform's block shape for bit-equal serve-time keys (see
+    # docstring) — sub-tiling plus an optimization barrier narrows but
+    # does not close the gap, so only NF_TILE multiples are safe.
+    tile = select_tile(b, use_flow, tile, interpret)
     b_pad = ((b + tile - 1) // tile) * tile
     if b_pad != b:
         feats = jnp.pad(feats, ((0, b_pad - b), (0, 0)))

@@ -25,7 +25,11 @@ __all__ = [
     "nf_transform_keys",
     "index_probe",
     "fused_lookup",
+    "fused_lookup_stats",
+    "reset_fused_lookup_stats",
     "pool_nbytes",
+    "kernel_block_bytes",
+    "serving_cache_size",
     "flash_decode",
 ]
 
@@ -66,6 +70,57 @@ def pool_nbytes(pools) -> int:
     return pools.nbytes()
 
 
+def kernel_block_bytes(pools, tier_bytes: int, tile: int, dim: int) -> int:
+    """The full VMEM-residency bill for one grid step: the grid-invariant
+    pool blocks *as padded* (shape-bucketed padding is what the kernel
+    actually holds resident, not the raw pool bytes), the write-tier
+    pools at their bucket capacities, and the per-step query/output
+    blocks (feats f32[tile, dim], qhi/qlo u32[tile], payload i32[tile],
+    z f32[tile])."""
+    q_bytes = tile * (dim + 4) * 4
+    return pool_nbytes(pools) + int(tier_bytes) + q_bytes
+
+
+# ------------------------------------------------------- serving telemetry
+# Cumulative fused-lookup dispatch counters (reset via
+# ``reset_fused_lookup_stats``).  ``retrace_count`` counts calls that
+# grew a serving jit cache — i.e. paid an XLA trace+compile inside the
+# serving window; the zero-retrace acceptance gates read it directly
+# instead of inferring compiles from tail latencies.
+_FUSED_STATS = {
+    "dispatch_count": 0,   # fused_lookup shim calls
+    "fused_count": 0,      # single-dispatch kernel path taken
+    "fallback_count": 0,   # oracle fallback taken (budget exceeded)
+    "tier_kernel_count": 0,  # calls that probed the tiers in-kernel
+    "host_probe_count": 0,   # calls whose tiers fell to the host oracle
+    "retrace_count": 0,    # calls that paid a fresh XLA trace
+}
+
+
+def fused_lookup_stats() -> Dict[str, int]:
+    """Snapshot of the cumulative fused-lookup dispatch counters."""
+    return dict(_FUSED_STATS)
+
+
+def reset_fused_lookup_stats() -> None:
+    for k in _FUSED_STATS:
+        _FUSED_STATS[k] = 0
+
+
+def serving_cache_size() -> int:
+    """Total jit-cache entries across the serving dispatch routes."""
+    from repro.core.flat_afli import flat_lookup
+    from repro.kernels.fused_lookup import fused_lookup_pallas
+
+    total = 0
+    for fn in (fused_lookup_pallas, flat_lookup, nf_forward_pallas):
+        try:
+            total += fn._cache_size()
+        except AttributeError:  # not a jit wrapper (e.g. monkeypatched)
+            pass
+    return total
+
+
 def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
                  max_depth: int, dense_iters: int, bucket_cap: int,
                  dense_window: int = 8, tiers=None, vmem_budget=None,
@@ -94,19 +149,34 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
     routing: ``tier_path`` is ``"kernel"`` (tiers resolved on device),
     ``"host"`` (caller must run the host ``_probe_delta`` oracle), or
     ``"none"`` (no write tiers); ``host_probe`` is the boolean form.
+
+    The VMEM budget is billed against the shapes the kernel actually
+    holds resident — the bucketed *padded* pools plus the query tile
+    blocks (``kernel_block_bytes``) — and every call updates the
+    module-level dispatch counters (``fused_lookup_stats``):
+    fallbacks taken, tier routing, and ``retrace_count`` (calls that
+    grew a serving jit cache, i.e. paid an XLA trace+compile).
     """
     from repro.core.flat_afli import flat_lookup
-    from repro.kernels.fused_lookup import fused_lookup_pallas
+    from repro.kernels.fused_lookup import fused_lookup_pallas, select_tile
 
     interpret = resolve_interpret(interpret)
+    _FUSED_STATS["dispatch_count"] += 1
+    cache_before = serving_cache_size()
     if vmem_budget is None:
         vmem_budget = (DEFAULT_INTERPRET_BUDGET if interpret
                        else DEFAULT_VMEM_BUDGET)
+    use_flow = flow is not None
+    dim = int(feats.shape[1])
+    # the VMEM bill is checked against the shapes the kernel will
+    # actually hold resident: bucketed padded pools + the query tile
+    # blocks of the tile the grid will use — not the raw pool bytes
+    q_tile = select_tile(int(feats.shape[0]), use_flow, tile, interpret)
     nbytes = None
     if vmem_budget > 0:
         if callable(pools):
             pools = pools()
-        nbytes = pool_nbytes(pools)
+        nbytes = kernel_block_bytes(pools, 0, q_tile, dim)
         if nbytes <= vmem_budget and callable(tiers):
             tiers = tiers()
     if callable(tiers):
@@ -117,8 +187,6 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
     else:
         have_tiers = tiers is not None
         tier_bytes = tiers.nbytes() if have_tiers else 0
-    use_flow = flow is not None
-    dim = int(feats.shape[1])
     if use_flow:
         packed_w, shapes = flow
     else:
@@ -140,8 +208,14 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
             delta_iters=tiers.delta_iters if kernel_tiers else 1,
             delta_window=tiers.delta_window if kernel_tiers else 4,
         )
+        retraced = serving_cache_size() > cache_before
+        _FUSED_STATS["fused_count"] += 1
+        _FUSED_STATS["retrace_count"] += int(retraced)
+        _FUSED_STATS["tier_kernel_count"] += int(kernel_tiers)
+        _FUSED_STATS["host_probe_count"] += int(have_tiers
+                                                and not kernel_tiers)
         info = {"path": "fused", "n_dispatch": 1, "pool_bytes": nbytes,
-                "tier_bytes": tier_bytes,
+                "tier_bytes": tier_bytes, "retraced": retraced,
                 "tier_path": ("kernel" if kernel_tiers
                               else "host" if have_tiers else "none"),
                 "host_probe": have_tiers and not kernel_tiers}
@@ -159,8 +233,12 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
     res = flat_lookup(arrays, z, qhi, qlo, max_depth=max_depth,
                       dense_iters=dense_iters, bucket_cap=bucket_cap,
                       dense_window=dense_window)
+    retraced = serving_cache_size() > cache_before
+    _FUSED_STATS["fallback_count"] += 1
+    _FUSED_STATS["retrace_count"] += int(retraced)
+    _FUSED_STATS["host_probe_count"] += int(have_tiers)
     info = {"path": "oracle", "n_dispatch": n_dispatch, "pool_bytes": nbytes,
-            "tier_bytes": tier_bytes,
+            "tier_bytes": tier_bytes, "retraced": retraced,
             "tier_path": "host" if have_tiers else "none",
             "host_probe": have_tiers}
     return np.asarray(res), np.asarray(z), info
