@@ -33,26 +33,9 @@ from repro.data.datasets import make_dataset
 from repro.kernels import ops
 from repro.kernels.nf_forward import nf_forward_pallas
 
+from benchmarks.common import best_s as _best_s
+
 DEFAULT_OUT = "BENCH_fused_lookup.json"
-
-
-def _best_s(fn, repeats: int):
-    """(best wall seconds, warmup compiles, measurement compiles).
-
-    The warmup call primes the jit/pallas caches outside the timed
-    region; compile counts per phase come from the serving jit-cache
-    growth (``ops.serving_cache_size``) so steady-state measurements can
-    assert zero mid-measurement compiles instead of assuming them."""
-    c0 = ops.serving_cache_size()
-    fn()  # warm the jit/pallas caches outside the timed region
-    warm_compiles = ops.serving_cache_size() - c0
-    best = float("inf")
-    c1 = ops.serving_cache_size()
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best, warm_compiles, ops.serving_cache_size() - c1
 
 
 def run(n_keys: int = 65_536, n_queries: int = 4_096, repeats: int = 9,

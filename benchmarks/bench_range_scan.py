@@ -1,0 +1,320 @@
+"""Fused tier-merged range scans vs the host oracle and the naive loop.
+
+The workload is the ISSUE-4 acceptance shape: >= 64k flow-positioned
+keys, 4k ``[lo, hi)`` range queries.  Three variants over identical
+inputs:
+
+* ``per_key_loop`` — the only pre-§12 way to answer a range query: a
+  host-side loop that enumerates each range's member keys (host
+  ``searchsorted`` over a sorted key snapshot) and resolves them through
+  batched *point* lookups, one serving call per range;
+* ``host_oracle``  — the vectorized host fallback path
+  (``nf_forward_pallas`` endpoint transform + ``_range_scan_host``),
+  the bit-exactness reference;
+* ``fused``        — ONE ``pallas_call`` per query batch: in-kernel NF
+  forward on both endpoints + lower-bound location + three-way tier
+  merge (``kernels/range_scan``).
+
+A steady-state phase then mixes range traffic into the 80/20 serving
+loop (reads / inserts / deletes / scans) and asserts the §11/§12
+zero-retrace, zero-repack properties with the scan path live.  Every
+scan is cross-checked against a positioning-key-order dict oracle;
+``wrong`` must be 0.  Emits machine-readable ``BENCH_range_scan.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.feature import expand_features
+from repro.core.flat_afli import FlatAFLIConfig
+from repro.core.flow import FlowConfig
+from repro.core.nfl import NFL, NFLConfig
+from repro.core.train_flow import FlowTrainConfig
+from repro.data.datasets import make_dataset
+from repro.kernels import ops
+
+from benchmarks.common import best_s as _best_s
+
+DEFAULT_OUT = "BENCH_range_scan.json"
+
+
+def _z32(nfl, keys):
+    """Serve-path positioning keys (kernel NF path, f32) for oracles."""
+    keys = np.asarray(keys, dtype=np.float64)
+    if not nfl.use_flow:
+        return keys.astype(np.float32)
+    return nfl._transform(nfl.flow_params, nfl.normalizer,
+                          keys).astype(np.float32)
+
+
+def _steady_state(nfl, keys, insert_pool, *, n_ops: int, n_warmup: int,
+                  batch_size: int, cap: int, seed: int = 7):
+    """Mix range scans into the 80/20 serving loop: 70% point reads,
+    15% inserts, 5% deletes, 10% range scans per batch.  Warmup primes
+    every shape bucket, then the telemetry is zeroed and the measured
+    window must show zero retraces and zero repacks with the scan path
+    live (§12 acceptance)."""
+    rng = np.random.default_rng(seed)
+    oracle = dict(zip(keys.tolist(),
+                      np.arange(len(keys), dtype=np.int64).tolist()))
+    zmap = dict(zip(keys.tolist(), _z32(nfl, keys).tolist()))
+    next_ins = 0
+    wrong = 0
+    scan_lat, read_lat = [], []
+
+    def one_window(n_ops):
+        nonlocal next_ins, wrong
+        done = 0
+        t0_run = time.perf_counter()
+        while done < n_ops:
+            n_scan = max(batch_size // 10, 1)
+            n_del = max(batch_size // 20, 1)
+            n_ins = max(int(batch_size * 0.15), 1)
+            n_read = batch_size - n_scan - n_del - n_ins
+            live = np.fromiter(oracle.keys(), np.float64, len(oracle))
+            # point reads
+            q = rng.choice(live, n_read)
+            t0 = time.perf_counter()
+            res = nfl.lookup_batch(q)
+            read_lat.append((time.perf_counter() - t0) / n_read)
+            exp = np.array([oracle.get(k, -1) for k in q])
+            wrong += int((res != exp).sum())
+            # inserts (fresh keys; payloads disjoint from the build's)
+            if next_ins + n_ins > len(insert_pool):
+                next_ins = 0
+            ins_k = insert_pool[next_ins:next_ins + n_ins]
+            ins_v = np.arange(n_ins, dtype=np.int64) + 1_000_000_000 + done
+            next_ins += n_ins
+            nfl.insert_batch(ins_k, ins_v)
+            for k, v, z in zip(ins_k.tolist(), ins_v.tolist(),
+                               _z32(nfl, ins_k).tolist()):
+                oracle[k] = v
+                zmap[k] = z
+            # deletes of live keys
+            dk = rng.choice(live, min(n_del, len(live)), replace=False)
+            nfl.delete_batch(dk)
+            for k in dk.tolist():
+                oracle.pop(k, None)
+            # range scans around live keys (spans well under scan_cap).
+            # Endpoints are perturbed OFF the stored keys: a fold
+            # re-keys serve-path-divergent identities at their in-kernel
+            # z (§8 shadows, 1 ulp from the build z), so an endpoint
+            # exactly equal to a stored key's build z is ambiguous by
+            # construction — strictly-between endpoints are not
+            lo = rng.choice(live, n_scan) * (1.0
+                                             + rng.uniform(1e-7, 1e-5,
+                                                           n_scan))
+            hi = lo * (1.0 + rng.uniform(1e-4, 3e-3, n_scan))
+            t0 = time.perf_counter()
+            pv, cnt, tot = nfl.scan_batch(lo, hi, cap=cap)
+            scan_lat.append((time.perf_counter() - t0) / n_scan)
+            zlo, zhi = _z32(nfl, lo), _z32(nfl, hi)
+            zs = np.fromiter((zmap[k] for k in oracle), np.float32,
+                             len(oracle))
+            pvs = np.fromiter(oracle.values(), np.int64, len(oracle))
+            for i in range(n_scan):
+                if tot[i] > cap:
+                    continue  # truncated: counted via dispatch stats
+                exp = np.sort(pvs[(zs >= zlo[i]) & (zs < zhi[i])])
+                got = np.sort(pv[i, :cnt[i]])
+                wrong += int(not np.array_equal(got, exp))
+            done += batch_size
+        return time.perf_counter() - t0_run
+
+    one_window(n_warmup)
+    ops.reset_fused_lookup_stats()
+    nfl.index._serving.reset_stats()
+    nfl.index.n_host_tier_probes = 0
+    nfl.index.n_host_scans = 0
+    rebuilds_before = nfl.index.n_rebuilds
+    wrong = 0
+    scan_lat.clear()
+    read_lat.clear()
+    run_s = one_window(n_ops)
+    disp = nfl.dispatch_stats()
+    st = nfl.stats()
+    out = {
+        "n_ops": n_ops,
+        "run_s": run_s,
+        "wrong": wrong,
+        "retrace_count": disp["dispatch"]["retrace_count"],
+        "scan_dispatches": disp["dispatch"]["scan_dispatch_count"],
+        "scan_fallbacks": disp["dispatch"]["scan_fallback_count"],
+        "scan_truncations": disp["dispatch"]["scan_trunc_count"],
+        "host_scans": disp["host_scans"],
+        "host_tier_probes": disp["host_tier_probes"],
+        "tier_repacks": disp["serving"]["tier_repacks"],
+        "tier_uploads": disp["serving"]["tier_uploads"],
+        "n_rebuilds_in_window": int(st["n_rebuilds"]) - rebuilds_before,
+        "fold_active_at_end": bool(st["fold_active"]),
+        "scan_p50_us": float(np.percentile(scan_lat, 50) * 1e6),
+        "read_p50_us": float(np.percentile(read_lat, 50) * 1e6),
+    }
+    return out
+
+
+def run(n_keys: int = 65_536, n_queries: int = 4_096, repeats: int = 7,
+        span_keys: int = 24, n_steady: int = 4_096,
+        n_steady_warmup: int = 6_144, batch_size: int = 256,
+        out_json: str = DEFAULT_OUT):
+    all_keys = make_dataset("lognormal", int(n_keys * 1.25))
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(all_keys))
+    keys = np.sort(all_keys[perm[:n_keys]])
+    insert_pool = np.ascontiguousarray(all_keys[perm[n_keys:]])
+    pv = np.arange(len(keys), dtype=np.int64)
+
+    # the §11 serving-state tier bounds: merges and incremental folds
+    # recur every few batches, so the steady-state warmup crosses the
+    # full tier lifecycle (delta merge, fold verify, swap) and the
+    # measured window can assert zero retraces across in-window folds
+    nfl = NFL(NFLConfig(
+        flow=FlowConfig(dim=3), flow_train=FlowTrainConfig(epochs=1),
+        backend="flat", force_flow=True,
+        flat_index=FlatAFLIConfig(rebuild_frac=0.005, delta_cap=256,
+                                  fold_step_keys=8192)))
+    t0 = time.perf_counter()
+    nfl.bulkload(keys, pv)
+    t_load = time.perf_counter() - t0
+    cap = nfl.cfg.flat_index.scan_cap
+    idx = nfl.index
+
+    # ranges spanning ~span_keys consecutive keys in positioning order,
+    # so results are dense runs and never near the cap
+    zk = _z32(nfl, keys)
+    zorder = np.argsort(zk, kind="stable")
+    zsorted = zk[zorder]
+    starts = rng.integers(0, len(keys) - span_keys - 1, n_queries)
+    spans = rng.integers(1, span_keys + 1, n_queries)
+    lo_q = keys[zorder[starts]]
+    hi_q = keys[zorder[starts + spans]]
+    zlo = _z32(nfl, lo_q)
+    zhi = _z32(nfl, hi_q)
+
+    dim, theta = nfl.cfg.flow.dim, nfl.cfg.flow.theta
+    feats_lo = expand_features(lo_q, nfl.normalizer, dim, theta,
+                               dtype=np.float32)
+    feats_hi = expand_features(hi_q, nfl.normalizer, dim, theta,
+                               dtype=np.float32)
+
+    def fused():
+        return nfl.scan_batch(lo_q, hi_q, cap=cap)
+
+    def host_oracle():
+        # the ops shim's fallback path, end to end: kernel-NF endpoint
+        # transform + the vectorized host merge
+        from repro.kernels.nf_forward import nf_forward_pallas
+        import jax.numpy as jnp
+
+        a = np.asarray(nf_forward_pallas(jnp.asarray(feats_lo),
+                                         nfl._packed_w, nfl._shapes, dim))
+        b = np.asarray(nf_forward_pallas(jnp.asarray(feats_hi),
+                                         nfl._packed_w, nfl._shapes, dim))
+        return idx._range_scan_host(a, b, cap)
+
+    # the naive pre-§12 serving shape: per range, enumerate member keys
+    # on the host and resolve them through batched POINT lookups — one
+    # serving call per range
+    def per_key_loop():
+        n_points = 0
+        outs = []
+        for i in range(n_queries):
+            a = int(np.searchsorted(zsorted, zlo[i], side="left"))
+            b = int(np.searchsorted(zsorted, zhi[i], side="left"))
+            members = keys[zorder[a:b]]
+            n_points += len(members)
+            outs.append(nfl.lookup_batch(members) if len(members)
+                        else np.empty(0, np.int64))
+        return outs, n_points
+
+    # correctness cross-checks before timing
+    r_fused, c_fused, t_fused_tot = fused()
+    r_host, c_host, t_host_tot = host_oracle()
+    identical = (np.array_equal(r_fused, r_host)
+                 and np.array_equal(c_fused, c_host)
+                 and np.array_equal(t_fused_tot, t_host_tot))
+    if not identical:
+        raise AssertionError("fused range scan diverged from host oracle")
+    loop_res, n_points = per_key_loop()
+    wrong = 0
+    for i in range(n_queries):
+        got = np.sort(r_fused[i, :c_fused[i]])
+        exp = np.sort(np.asarray(loop_res[i]))
+        wrong += int(not np.array_equal(got, exp))
+    if wrong:
+        raise AssertionError(
+            f"fused range scan disagreed with the per-key loop on "
+            f"{wrong}/{n_queries} ranges")
+
+    t_fused, cf_w, cf_m = _best_s(fused, repeats)
+    t_host, ch_w, ch_m = _best_s(host_oracle, max(repeats // 2, 1))
+    t0 = time.perf_counter()  # loop baseline: single timed pass (its
+    loop_res, _ = per_key_loop()  # shape buckets are warm from the check)
+    t_loop = time.perf_counter() - t0
+
+    steady = _steady_state(nfl, keys, insert_pool, n_ops=n_steady,
+                           n_warmup=n_steady_warmup,
+                           batch_size=batch_size, cap=cap)
+
+    results = {
+        "workload": {"n_keys": int(len(keys)), "n_queries": int(n_queries),
+                     "span_keys": int(span_keys), "scan_cap": int(cap),
+                     "n_steady": int(n_steady),
+                     "n_steady_warmup": int(n_steady_warmup),
+                     "batch_size": int(batch_size),
+                     "mix": "range_only+steady", "dataset": "lognormal",
+                     "flow_dim": dim, "use_flow": bool(nfl.use_flow),
+                     "repeats": repeats,
+                     "backend": "interpret" if ops.should_interpret()
+                     else "tpu",
+                     "bulkload_s": t_load,
+                     "mean_range_len": float(np.mean(c_fused))},
+        "fused": {"wall_s": t_fused, "n_dispatch": 1,
+                  "us_per_query": t_fused / n_queries * 1e6,
+                  "compiles_warmup": cf_w, "compiles_measure": cf_m},
+        "host_oracle": {"wall_s": t_host,
+                        "us_per_query": t_host / n_queries * 1e6,
+                        "compiles_warmup": ch_w, "compiles_measure": ch_m},
+        "per_key_loop": {"wall_s": t_loop,
+                         "us_per_query": t_loop / n_queries * 1e6,
+                         "n_point_lookups": int(n_points),
+                         "n_serving_calls": int(n_queries)},
+        "speedup_fused_vs_loop": t_loop / t_fused,
+        "speedup_fused_vs_host_oracle": t_host / t_fused,
+        "identical_to_host_oracle": identical,
+        "wrong": wrong,
+        "steady_state": steady,
+    }
+    if steady["wrong"]:
+        raise AssertionError(
+            f"steady-state scans diverged from the dict oracle: "
+            f"{steady['wrong']}")
+    print(f"[range_scan] keys={len(keys)} queries={n_queries} "
+          f"fused={t_fused*1e3:.2f}ms host={t_host*1e3:.2f}ms "
+          f"loop={t_loop*1e3:.2f}ms "
+          f"speedup_vs_loop={t_loop/t_fused:.2f}x "
+          f"(vs_host {t_host/t_fused:.2f}x) "
+          f"steady retraces={steady['retrace_count']} "
+          f"repacks={steady['tier_repacks']} wrong={steady['wrong']}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
+def rows(results) -> List[Tuple]:
+    n = results["workload"]["n_queries"]
+    return [
+        ("perf_range_scan/per_key_loop",
+         results["per_key_loop"]["wall_s"] / n * 1e6,
+         f"n_serving_calls={results['per_key_loop']['n_serving_calls']}"),
+        ("perf_range_scan/fused",
+         results["fused"]["wall_s"] / n * 1e6,
+         f"n_dispatch=1;speedup_vs_loop="
+         f"{results['speedup_fused_vs_loop']:.2f}"),
+    ]

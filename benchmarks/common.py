@@ -15,6 +15,27 @@ from repro.data.workloads import WorkloadConfig, Workload, make_workload
 from repro.index import make_index
 
 DEFAULT_DATASETS = ["longlat", "lognormal", "ycsb", "facebook"]
+
+
+def best_s(fn: Callable, repeats: int):
+    """(best wall seconds, warmup compiles, measurement compiles).
+
+    The warmup call primes the jit/pallas caches outside the timed
+    region; compile counts per phase come from the serving jit-cache
+    growth (``ops.serving_cache_size``) so steady-state measurements can
+    assert zero mid-measurement compiles instead of assuming them."""
+    from repro.kernels import ops
+
+    c0 = ops.serving_cache_size()
+    fn()  # warm the jit/pallas caches outside the timed region
+    warm_compiles = ops.serving_cache_size() - c0
+    best = float("inf")
+    c1 = ops.serving_cache_size()
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, warm_compiles, ops.serving_cache_size() - c1
 ALL_DATASETS = ["longitudes", "longlat", "lognormal", "ycsb", "amazon",
                 "facebook", "wikipedia"]
 DEFAULT_MIXES = ["read_only", "read_heavy", "write_heavy", "write_only"]
@@ -50,6 +71,12 @@ class FlatNFLAdapter:
 
     def update_batch(self, keys, payloads):
         return self.nfl.update_batch(keys, payloads)
+
+    def delete_batch(self, keys):
+        return self.nfl.delete_batch(keys)
+
+    def scan_batch(self, lo_keys, hi_keys, cap=None):
+        return self.nfl.scan_batch(lo_keys, hi_keys, cap=cap)
 
     def size_bytes(self):
         a = self.nfl.index.arrays

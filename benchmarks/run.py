@@ -5,13 +5,127 @@ human-readable logging.  ``--full`` widens to all 7 datasets and larger op
 counts; the default profile finishes on a laptop-class CPU.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only fig7,table2,...]
+
+``--compare BENCH_x.json`` re-runs the bench that produced the baseline
+JSON at its recorded workload and diffs the two: exit nonzero on any
+``wrong > 0`` in the fresh run or a >15% regression on any shared
+throughput metric (``throughput_mops`` lower, ``us_per_query`` higher) —
+the perf trajectory is machine-checkable against committed baselines.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+REGRESSION_FRAC = 0.15  # tolerated throughput slack vs the baseline
+
+
+def _walk_numeric(obj, path=""):
+    """Yield (path, key, value) for every numeric leaf of a BENCH json."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if isinstance(v, bool):
+                continue
+            if isinstance(v, (int, float)):
+                yield f"{path}/{k}", k, float(v)
+            else:
+                yield from _walk_numeric(v, f"{path}/{k}")
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _walk_numeric(v, f"{path}[{i}]")
+
+
+def _compare_rerun(name: str, base: dict):
+    """Re-run the bench behind a baseline JSON at its recorded workload
+    (no artifact emitted — the committed baseline stays untouched)."""
+    w = base.get("workload", {})
+    n_keys = int(w.get("n_keys", 65_536))
+    if name.startswith("BENCH_fused_lookup"):
+        from benchmarks import bench_fused_lookup
+
+        return bench_fused_lookup.run(
+            n_keys=n_keys, n_queries=int(w.get("n_queries", 4_096)),
+            repeats=int(w.get("repeats", 9)), out_json=None)
+    if name.startswith("BENCH_range_scan"):
+        from benchmarks import bench_range_scan
+
+        return bench_range_scan.run(
+            n_keys=n_keys, n_queries=int(w.get("n_queries", 4_096)),
+            repeats=int(w.get("repeats", 7)),
+            span_keys=int(w.get("span_keys", 24)),
+            n_steady=int(w.get("n_steady", 4_096)),
+            n_steady_warmup=int(w.get("n_steady_warmup", 6_144)),
+            batch_size=int(w.get("batch_size", 256)), out_json=None)
+    if name.startswith("BENCH_mixed_workload"):
+        from benchmarks import bench_mixed_workload
+
+        # n_warmup is recorded per mix, uniformly — adopt the first's
+        mixes = base.get("mixes", {})
+        warm = next((m.get("n_warmup") for m in mixes.values()
+                     if isinstance(m, dict) and "n_warmup" in m), None)
+        return bench_mixed_workload.run(
+            n_keys=n_keys, n_ops=int(w.get("n_ops", 12_288)),
+            batch_size=int(w.get("batch_size", 256)),
+            n_warmup=int(warm) if warm is not None else None,
+            out_json=None)
+    if name.startswith("BENCH_serving_state"):
+        from benchmarks import bench_serving_state
+
+        return bench_serving_state.run(
+            n_keys=n_keys, n_ops=int(w.get("n_ops", 8_192)),
+            n_warmup=int(w.get("n_warmup", 6_144)),
+            batch_size=int(w.get("batch_size", 256)), out_json=None)
+    raise SystemExit(f"--compare: no runner known for {name}")
+
+
+def compare(paths) -> int:
+    """Diff fresh re-runs against committed baselines; returns the
+    number of failures (regressions + nonzero wrong counts)."""
+    failures = 0
+    for path in paths:
+        with open(path) as f:
+            base = json.load(f)
+        try:
+            fresh = _compare_rerun(os.path.basename(path), base)
+        except AssertionError as e:
+            # the benches self-assert correctness (wrong>0, oracle
+            # divergence) and raise before returning — count it as a
+            # comparison failure and keep going with the next baseline
+            print(f"COMPARE FAIL {path}: fresh run failed its own "
+                  f"correctness gate: {e}")
+            failures += 1
+            print(f"# compared {path}: 1 failure(s)")
+            continue
+        base_vals = {p: (k, v) for p, k, v in _walk_numeric(base)}
+        failures_before = failures
+        for p, k, v in _walk_numeric(fresh):
+            if k == "wrong" and v > 0:
+                print(f"COMPARE FAIL {path}{p}: wrong={v:g}")
+                failures += 1
+                continue
+            if p not in base_vals:
+                continue
+            bv = base_vals[p][1]
+            if k == "throughput_mops" and v < bv * (1 - REGRESSION_FRAC):
+                print(f"COMPARE FAIL {path}{p}: {v:.4g} Mops/s vs "
+                      f"baseline {bv:.4g} (>{REGRESSION_FRAC:.0%} slower)")
+                failures += 1
+            elif k == "us_per_query" and "/fused" in p and bv > 0 \
+                    and v > bv / (1 - REGRESSION_FRAC):
+                # gate the optimized path's latency only: the reference
+                # variants (two_dispatch, per_key_loop, host_oracle) are
+                # informational baselines, not the protected trajectory
+                print(f"COMPARE FAIL {path}{p}: {v:.4g} us/query vs "
+                      f"baseline {bv:.4g} (>{REGRESSION_FRAC:.0%} slower)")
+                failures += 1
+        here = failures - failures_before
+        print(f"# compared {path}: "
+              f"{'OK' if not here else f'{here} failure(s)'}")
+    return failures
 
 
 def main() -> None:
@@ -20,7 +134,7 @@ def main() -> None:
     ap.add_argument("--only", action="append", default=None,
                     help="tag filter, repeatable and/or comma-separated: "
                          "fig7,fig8,fig10,fig11,table1,table2,table3,"
-                         "roofline,fused,mixed,serving")
+                         "roofline,fused,mixed,serving,range")
     ap.add_argument("--n-keys", type=int, default=None)
     ap.add_argument("--repeats", type=int, default=None,
                     help="timed repeats per variant in the repeat-based "
@@ -28,7 +142,14 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale sizes (CI smoke; see "
                          "scripts/verify.sh)")
+    ap.add_argument("--compare", action="append", default=None,
+                    metavar="BENCH_JSON",
+                    help="re-run the bench behind this committed baseline "
+                         "JSON and exit nonzero on >15%% throughput "
+                         "regression or any wrong > 0 (repeatable)")
     args = ap.parse_args()
+    if args.compare:
+        sys.exit(1 if compare(args.compare) else 0)
     only = (set(t for part in args.only for t in part.split(","))
             if args.only else None)
 
@@ -36,8 +157,8 @@ def main() -> None:
                             bench_fused_lookup, bench_index_size,
                             bench_latency, bench_mixed_workload,
                             bench_nf_latency, bench_probe_batch,
-                            bench_roofline, bench_serving_state,
-                            bench_throughput)
+                            bench_range_scan, bench_roofline,
+                            bench_serving_state, bench_throughput)
     from benchmarks.common import ALL_DATASETS, DEFAULT_DATASETS
 
     n_keys = args.n_keys or (400_000 if args.full else 100_000)
@@ -100,6 +221,20 @@ def main() -> None:
         else:
             rows += bench_serving_state.rows(bench_serving_state.run(
                 n_keys=max(n_keys, 65_536) if args.full else 65_536))
+    if want("range"):
+        # §12 fused tier-merged range scans + tombstone deletes; emits
+        # BENCH_range_scan.json (smoke: a .smoke.json artifact so the
+        # verify.sh correctness gate still sees the wrong counts without
+        # clobbering the committed full-size baseline)
+        if args.smoke:
+            rows += bench_range_scan.rows(bench_range_scan.run(
+                n_keys=n_keys, n_queries=512, repeats=2,
+                n_steady=768, n_steady_warmup=512,
+                out_json="BENCH_range_scan.smoke.json"))
+        else:
+            rows += bench_range_scan.rows(bench_range_scan.run(
+                n_keys=max(n_keys, 65_536) if args.full else 65_536,
+                **({"repeats": args.repeats} if args.repeats else {})))
     if want("roofline"):
         rows += bench_roofline.rows(bench_roofline.run())
 

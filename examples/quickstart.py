@@ -38,6 +38,24 @@ def main():
     print("btree height:", bt.stats()["height"],
           " vs AFLI height:", nfl.stats().height)
 
+    # 5. the fused flat backend: range scans + deletes (DESIGN.md §12).
+    # A batch of [lo, hi) ranges is ONE kernel dispatch; deletes are
+    # tombstones that vanish from point and range reads immediately.
+    # (flow off: ranges then follow plain key order — with a flow they
+    # follow the transformed positioning order, see DESIGN.md §12)
+    flat = NFL(NFLConfig(backend="flat", force_flow=False))
+    flat.bulkload(keys[::2], payloads[::2])
+    lo, hi = keys[::2][1000], keys[::2][1040]
+    pv, cnt, tot = flat.scan_batch([lo], [hi])
+    assert cnt[0] == 40 and (np.sort(pv[0, :40])
+                             == payloads[::2][1000:1040]).all()
+    ok = flat.delete_batch(keys[::2][1000:1010])
+    assert ok.all() and (flat.lookup_batch(keys[::2][1000:1010]) == -1).all()
+    pv, cnt, tot = flat.scan_batch([lo], [hi])
+    print("range [1000:1040) after deleting 10:", int(cnt[0]), "hits,",
+          "dispatch:", flat.index.last_scan_dispatch["path"])
+    assert cnt[0] == 30
+
 
 if __name__ == "__main__":
     main()

@@ -32,9 +32,14 @@ run_phase() {
 echo "== tier-1 test suite =="
 run_phase python -m pytest -x -q "$@"
 
-echo "== serving-path smoke (fused + mixed + serving state) =="
+echo "== serving-path smoke (fused + mixed + serving state + range) =="
 run_phase python -m benchmarks.run --smoke --only fused --only mixed \
   --only serving
+# the range smoke emits BENCH_range_scan.smoke.json so the correctness
+# gate below sees its wrong counts; the EXIT trap removes it on every
+# outcome — only the committed full-size BENCH_range_scan.json persists
+trap 'rm -f BENCH_range_scan.smoke.json' EXIT
+run_phase python -m benchmarks.run --smoke --only range
 
 echo "== bench JSON correctness gate (wrong > 0 fails) =="
 python - <<'PY'

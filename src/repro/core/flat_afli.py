@@ -21,7 +21,13 @@ nodes) but flattens everything into a structure-of-arrays pool:
   device-resident pools probed *inside* the fused lookup kernel, and an
   *incremental fold* (the batched Modelling, split into bounded work
   steps) folds the run back into the static structure without an O(n)
-  stall on any single ``insert_batch`` call.
+  stall on any single ``insert_batch`` call;
+* deletes are TOMBSTONE appends to the delta (DESIGN.md §12) — the
+  newest copy of an identity masks every older one on the point and
+  range paths, and the fold drops tombstoned identities physically;
+* range queries (``scan_batch``) are served by the fused range-scan
+  kernel over a *rank-ordered scan pool* (the structure's keys in
+  sorted order, §12) merged in-kernel with both write tiers.
 
 The pure-jnp probe here is also the reference oracle for the
 ``kernels/index_probe`` Pallas kernel, and ``_probe_delta`` is the host
@@ -40,9 +46,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.conflict import fit_linear_model, tail_conflict_degree
-from repro.kernels.fused_lookup import _pow2ceil
+from repro.kernels.fused_lookup import TOMBSTONE, _pow2ceil
 
-__all__ = ["FlatAFLI", "FlatAFLIConfig", "FlatArrays"]
+__all__ = ["FlatAFLI", "FlatAFLIConfig", "FlatArrays", "TOMBSTONE"]
 
 EMPTY, DATA, BUCKET, CHILD = 0, 1, 2, 3
 KIND_MODEL, KIND_DENSE = 0, 1
@@ -180,6 +186,9 @@ class FlatAFLIConfig:
     fold_work_factor: float = 8.0     # fold work per insert call, x batch
     bucketed_serving: bool = True     # §11 persistent shape-bucketed pools
                                       # (False = legacy per-mutation repack)
+    scan_cap: int = 128               # §12 range-scan output lanes per
+                                      # query (= per-query candidate-work
+                                      # bound; totals report truncation)
 
 
 class FlatArrays(NamedTuple):
@@ -624,6 +633,11 @@ class _IncrementalFold:
         idx._serving.set_tree(self.arrays_new, self.pools_new,
                               max_depth=self.max_depth_new,
                               dense_window=self.dense_window_new)
+        # the rank-ordered scan pool swaps with the tree it mirrors
+        # (§12): the fold snapshot IS the new structure's keys in sorted
+        # order, tombstones already dropped
+        idx._set_scan_mirror(self.pk, self.hi, self.lo,
+                             self.pv.astype(np.int32))
         # the frozen run was consumed by the snapshot; placement shadows
         # seed the new run tier (below the active delta, so newer inserts
         # for the same identity still win)
@@ -760,6 +774,20 @@ class FlatAFLI:
         self._serve_flow = None        # (normalizer, flow_cfg, packed_w, shapes)
         self.n_rebuilds = 0
         self.n_host_tier_probes = 0    # host _probe_delta fallbacks taken
+        self.n_host_scans = 0          # host _range_scan_host fallbacks
+        self.last_scan_dispatch = {}   # ops.fused_range_scan info
+        self._reset_scan_mirror()
+
+    @staticmethod
+    def _check_payloads(pv: np.ndarray) -> None:
+        """Payloads must be non-negative: -1 is the miss sentinel and -2
+        the TOMBSTONE (§12) — a negative payload entering the write path
+        would silently act as a miss/delete while the identity
+        bookkeeping (``n_keys``/``contains_batch``) counts it live."""
+        if pv.shape[0] and int(pv.min()) < 0:
+            raise ValueError(
+                "payloads must be >= 0 (-1/-2 are reserved sentinels); "
+                f"got min={int(pv.min())}")
 
     # -------------------------------------------------------------- build
     def build(self, pkeys: np.ndarray, payloads: np.ndarray,
@@ -767,6 +795,7 @@ class FlatAFLI:
         pk64 = np.asarray(pkeys, dtype=np.float64)
         ik64 = pk64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
         pv = np.asarray(payloads, dtype=np.int64)
+        self._check_payloads(pv)
         order = np.argsort(pk64, kind="stable")
         pk64, ik64, pv = pk64[order], ik64[order], pv[order]
         pk32 = pk64.astype(np.float32)
@@ -795,6 +824,9 @@ class FlatAFLI:
                                dense_window=self.dense_window)
         self._reset_tiers()
         self._preallocate_tiers(pk32.shape[0])
+        # the rank-ordered scan pool mirrors the built structure (§12):
+        # the build input is already the sorted snapshot
+        self._set_scan_mirror(pk32, hi, lo, pv.astype(np.int32))
         self._id_set = set(_ids64(hi, lo).tolist())
         self.n_keys = len(self._id_set)
         self._self_verify(pk32, hi, lo, pv.astype(np.int32))
@@ -809,6 +841,11 @@ class FlatAFLI:
         self._serving.preallocate(
             delta_floor=8 * self.cfg.delta_cap + 1,
             run_floor=int(self.cfg.rebuild_frac * max(n, 1))
+            + 8 * self.cfg.delta_cap + 1,
+            # the scan pool tracks the live key count: n now, plus the
+            # same fold-absorption headroom, so in-window folds refresh
+            # a prefix instead of repacking (§12)
+            scan_floor=int((1.0 + self.cfg.rebuild_frac) * max(n, 1))
             + 8 * self.cfg.delta_cap + 1)
 
     def _reset_tiers(self) -> None:
@@ -822,6 +859,25 @@ class FlatAFLI:
         self._run_pv = np.empty(0, np.int32)
         self._serving.reset_tiers()
         self._fold = None
+
+    def _reset_scan_mirror(self) -> None:
+        self._scan_pk = np.empty(0, np.float32)
+        self._scan_hi = np.empty(0, np.uint32)
+        self._scan_lo = np.empty(0, np.uint32)
+        self._scan_pv = np.empty(0, np.int32)
+
+    def _set_scan_mirror(self, pk, hi, lo, pv) -> None:
+        """Adopt the (re)built structure's sorted snapshot as the range
+        path's scan pool (§12) and ship it to the persistent device
+        buffer eagerly — build/fold-swap time, off the serve path."""
+        self._scan_pk, self._scan_hi = pk, hi
+        self._scan_lo, self._scan_pv = lo, pv
+        self._serving.set_scan(pk, hi, lo, pv, _tier_window(pk))
+
+    def _scan_pack(self):
+        """ScanPack thunk for ``ops.fused_range_scan`` — always resident
+        (an index served before its first build scans an empty pool)."""
+        return self._serving.scan_pack()
 
     def set_serve_flow(self, normalizer, flow_cfg, packed_w, shapes) -> None:
         """Register the fused serve-path flow context so every fold can
@@ -990,8 +1046,12 @@ class FlatAFLI:
         dl_pay = _probe_sorted_pool(self._delta_pk, self._delta_hi,
                                     self._delta_lo, self._delta_pv,
                                     q32, qhi, qlo)
-        return np.where(dl_pay >= 0, dl_pay,
-                        np.where(run_pay >= 0, run_pay, res)).astype(res.dtype)
+        # identity match in a newer tier wins even when it is a
+        # TOMBSTONE — the tombstone masks every older copy below, then
+        # surfaces as a miss (same precedence as the kernel, §12)
+        out = np.where(dl_pay != -1, dl_pay,
+                       np.where(run_pay != -1, run_pay, res))
+        return np.where(out == TOMBSTONE, -1, out).astype(res.dtype)
 
     def lookup_batch(self, keys: np.ndarray,
                      ikeys: np.ndarray | None = None) -> np.ndarray:
@@ -1075,6 +1135,164 @@ class FlatAFLI:
                              np.asarray(payloads)[wrong].astype(np.int32))
         return int(wrong.sum())
 
+    # -------------------------------------------------------- range scan
+    def scan_batch(self, lo_keys: np.ndarray, hi_keys: np.ndarray,
+                   cap: int | None = None):
+        """Batched ``[lo, hi)`` range scans over positioning-key order
+        (§12).  Returns ``(payloads i32[n, cap] (-1 padded), counts
+        i32[n], totals i32[n])``: per query the first ``counts[i]``
+        payload lanes are the live entries in range, in key order;
+        ``totals[i] > cap`` flags truncation (``cap`` bounds the
+        candidates examined).  Without a flow the positioning order is
+        the key order itself (the f32 cast is monotone)."""
+        lo32 = np.asarray(lo_keys, dtype=np.float64).astype(np.float32)
+        hi32 = np.asarray(hi_keys, dtype=np.float64).astype(np.float32)
+        return self._device_scan(lo32.reshape(-1, 1), hi32.reshape(-1, 1),
+                                 flow=None, cap=cap)
+
+    def scan_batch_flow(self, feats_lo: np.ndarray, feats_hi: np.ndarray,
+                        packed_w, shapes, cap: int | None = None):
+        """Range scans for flow-positioned indexes: ONE pallas_call runs
+        the NF forward on both endpoints, the lower-bound location, and
+        the tier-merged emission (§12).  feats_lo/feats_hi are the
+        ``expand_features`` of the raw endpoint keys."""
+        return self._device_scan(feats_lo, feats_hi,
+                                 flow=(packed_w, shapes), cap=cap)
+
+    def _device_scan(self, feats_lo: np.ndarray, feats_hi: np.ndarray, *,
+                     flow, cap: int | None):
+        """Range dispatch: pad the query batch to a power-of-two bucket,
+        route through ``ops.fused_range_scan`` (kernel when the pools fit
+        the budget, bit-identical host oracle otherwise).  Zero-padded
+        lanes have equal endpoints -> empty ranges, sliced off."""
+        from repro.kernels import ops
+
+        cap = int(cap if cap is not None else self.cfg.scan_cap)
+        n = feats_lo.shape[0]
+        n_pad = max(1 << max(n - 1, 0).bit_length(), 64)
+        if n_pad != n:
+            feats_lo = np.pad(feats_lo, ((0, n_pad - n), (0, 0)))
+            feats_hi = np.pad(feats_hi, ((0, n_pad - n), (0, 0)))
+
+        def host_fallback():
+            if flow is not None:
+                from repro.kernels.nf_forward import nf_forward_pallas
+
+                packed_w, shapes = flow
+                dim = feats_lo.shape[1]
+                zlo = np.asarray(nf_forward_pallas(
+                    jnp.asarray(feats_lo, jnp.float32), packed_w, shapes,
+                    dim))
+                zhi = np.asarray(nf_forward_pallas(
+                    jnp.asarray(feats_hi, jnp.float32), packed_w, shapes,
+                    dim))
+            else:
+                zlo = np.asarray(feats_lo[:, 0], np.float32)
+                zhi = np.asarray(feats_hi[:, 0], np.float32)
+            self.n_host_scans += 1
+            return self._range_scan_host(zlo, zhi, cap)
+
+        self._sync_tiers()
+        pv, cnt, tot, self.last_scan_dispatch = ops.fused_range_scan(
+            self._scan_pack, self._tier_pack,
+            jnp.asarray(feats_lo, jnp.float32),
+            jnp.asarray(feats_hi, jnp.float32),
+            flow=flow, scan_cap=cap, host_fallback=host_fallback,
+            vmem_budget=self.cfg.vmem_budget
+            if self.cfg.use_fused_kernel else 0,
+        )
+        return pv[:n], cnt[:n], tot[:n]
+
+    def _range_scan_host(self, zlo: np.ndarray, zhi: np.ndarray,
+                         cap: int, chunk: int = 512):
+        """Host oracle twin of ``kernels/range_scan``: same candidate
+        order (pk-major, newest tier first on ties, in-tier index last),
+        same per-candidate identity probes into the newer tiers, same
+        tombstone filtering, same ``cap``-candidate truncation — results
+        are bit-identical to the kernel by construction (the parity
+        tests hold both to it).
+
+        Vectorized across the query batch: candidates of ``chunk``
+        queries at a time are flattened into one (qid, pk, prio)-sorted
+        array, capped by rank-within-query, probed in two batched
+        ``_probe_sorted_pool`` rounds, and scattered into the output
+        lanes — no per-query Python loop on the fallback path."""
+        n = zlo.shape[0]
+        tiers = [  # priority order: newest first
+            (self._delta_pk, self._delta_hi, self._delta_lo,
+             self._delta_pv),
+            (self._run_pk, self._run_hi, self._run_lo, self._run_pv),
+            (self._scan_pk, self._scan_hi, self._scan_lo, self._scan_pv),
+        ]
+        bounds = [(np.searchsorted(pk, zlo, side="left"),
+                   np.searchsorted(pk, zhi, side="left"))
+                  for pk, _h, _l, _v in tiers]
+        out = np.full((n, cap), -1, np.int32)
+        cnt = np.zeros(n, np.int32)
+        tot = np.zeros(n, np.int64)
+        for (a, b) in bounds:
+            tot += np.maximum(b - a, 0)
+
+        def flat_ranges(a, b):
+            """Concatenated [a_i, b_i) ranges -> (qid, pool index)."""
+            lens = np.maximum(b - a, 0)
+            total = int(lens.sum())
+            qid = np.repeat(np.arange(lens.shape[0], dtype=np.int64),
+                            lens)
+            excl = np.concatenate([[0], np.cumsum(lens)[:-1]])
+            intra = np.arange(total) - np.repeat(excl, lens)
+            return qid, np.repeat(a, lens) + intra
+
+        for c0 in range(0, n, chunk):
+            c1 = min(c0 + chunk, n)
+            qids, pks, his, los, pvs, prios = [], [], [], [], [], []
+            # tier-major concatenation: within one (query, tier) group
+            # the pool indices ascend, so the stable lexsort below keeps
+            # in-tier insertion order on full ties
+            for prio, ((pk, hi, lo, pv), (a, b)) in enumerate(
+                    zip(tiers, bounds)):
+                qid, idx = flat_ranges(a[c0:c1], b[c0:c1])
+                qids.append(qid)
+                pks.append(pk[idx])
+                his.append(hi[idx])
+                los.append(lo[idx])
+                pvs.append(pv[idx])
+                prios.append(np.full(idx.shape[0], prio, np.int32))
+            qid = np.concatenate(qids)
+            if not qid.shape[0]:
+                continue
+            cpk = np.concatenate(pks)
+            cprio = np.concatenate(prios)
+            # per-query pk-major merge order, newest tier first on ties
+            # — exactly the kernel's cursor order, all queries at once
+            order = np.lexsort((cprio, cpk, qid))
+            qid, cpk, cprio = qid[order], cpk[order], cprio[order]
+            chi = np.concatenate(his)[order]
+            clo = np.concatenate(los)[order]
+            cpv = np.concatenate(pvs)[order]
+            # cap by rank within query (qid is the sort major)
+            first = np.searchsorted(qid, np.arange(c1 - c0))
+            rank = np.arange(qid.shape[0]) - first[qid]
+            keep = rank < cap
+            qid, cpk, cprio = qid[keep], cpk[keep], cprio[keep]
+            chi, clo, cpv = chi[keep], clo[keep], cpv[keep]
+            dl = _probe_sorted_pool(self._delta_pk, self._delta_hi,
+                                    self._delta_lo, self._delta_pv,
+                                    cpk, chi, clo)
+            rn = _probe_sorted_pool(self._run_pk, self._run_hi,
+                                    self._run_lo, self._run_pv,
+                                    cpk, chi, clo)
+            superseded = (((cprio == 2) & ((dl != -1) | (rn != -1)))
+                          | ((cprio == 1) & (dl != -1)))
+            valid = ~superseded & (cpv != TOMBSTONE)
+            # compact valid payloads into per-query output lanes
+            vex = np.concatenate([[0], np.cumsum(valid)[:-1]])  # exclusive
+            first = np.searchsorted(qid, np.arange(c1 - c0))
+            pos = vex - np.concatenate([vex, [0]])[first][qid]
+            out[c0 + qid[valid], pos[valid]] = cpv[valid]
+            cnt[c0:c1] = np.bincount(qid[valid], minlength=c1 - c0)
+        return out, cnt, tot.astype(np.int32)
+
     # ------------------------------------------------------------- insert
     def insert_batch(self, keys: np.ndarray, payloads: np.ndarray,
                      ikeys: np.ndarray | None = None) -> None:
@@ -1086,6 +1304,7 @@ class FlatAFLI:
         k64 = np.asarray(keys, dtype=np.float64)
         ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
         pv = np.asarray(payloads, dtype=np.int32)
+        self._check_payloads(pv)
         pk = k64.astype(np.float32)
         hi, lo = split_key_bits(ik64)
         self._append_delta(pk, hi, lo, pv)
@@ -1097,8 +1316,43 @@ class FlatAFLI:
                 ids.add(u)
                 fresh += 1
         self.n_keys += fresh
+        self._advance_write_path(pk.shape[0])
+
+    def delete_batch(self, keys: np.ndarray,
+                     ikeys: np.ndarray | None = None) -> np.ndarray:
+        """Tombstone deletes (§12): each present key appends a TOMBSTONE
+        entry to the active delta — the newest copy of its identity, so
+        it masks every older copy (delta dedup, run, static tree) on both
+        the point and range paths — and the next fold drops the identity
+        physically.  Returns per-key success (False = key absent; the
+        second delete of a duplicate within one batch fails, matching the
+        sequential per-key semantics of the afli backend)."""
+        k64 = np.asarray(keys, dtype=np.float64)
+        ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
+        pk = k64.astype(np.float32)
+        hi, lo = split_key_bits(ik64)
+        ids = _ids64(hi, lo)
+        ok = np.zeros(ids.shape[0], dtype=bool)
+        id_set = self._id_set
+        for i, u in enumerate(ids.tolist()):
+            if u in id_set:
+                id_set.remove(u)
+                ok[i] = True
+        if ok.any():
+            n_del = int(ok.sum())
+            self.n_keys -= n_del
+            self._append_delta(pk[ok], hi[ok], lo[ok],
+                               np.full(n_del, TOMBSTONE, np.int32))
+            self._advance_write_path(n_del)
+        return ok
+
+    def _advance_write_path(self, n_batch: int) -> None:
+        """Shared write-path bookkeeping for inserts and deletes: advance
+        an in-flight fold by the per-call budget, retire a full delta
+        into the run, and trigger a fold when the run outgrows its
+        bound."""
         budget = max(int(self.cfg.fold_step_keys),
-                     int(self.cfg.fold_work_factor * pk.shape[0]))
+                     int(self.cfg.fold_work_factor * max(n_batch, 1)))
         if self._fold is not None:
             self._fold_tick(budget)
         if self._fold is None:
@@ -1110,7 +1364,8 @@ class FlatAFLI:
                     and self._run_pk.shape[0]
                     > self.cfg.rebuild_frac * max(self.n_keys, 1)):
                 self._fold_start()
-                self._fold_tick(budget)
+                if self._fold is not None:
+                    self._fold_tick(budget)
 
     def _fold_start(self) -> None:
         """Begin an incremental fold: freeze the write tiers into a
@@ -1136,8 +1391,20 @@ class FlatAFLI:
         pv = np.concatenate([pv, np.asarray(self.arrays.bpayload)[bmask],
                              self._run_pv])
         # dedup by 64-bit identity, newest copy wins (run entries and
-        # placement shadows come last)
+        # placement shadows come last), then physically drop tombstoned
+        # identities (§12): a delete whose tombstone is the newest copy
+        # leaves the snapshot — and therefore the rebuilt structure and
+        # its scan pool — entirely
         pk, hi, lo, pv = _dedup_newest(pk, hi, lo, pv)
+        live = pv != TOMBSTONE
+        if not live.all():
+            pk, hi, lo, pv = pk[live], hi[live], lo[live], pv[live]
+        if not pk.shape[0]:
+            # everything tombstoned: nothing to fold into — the old
+            # structure keeps serving with the tombstones masking it;
+            # the run keeps the tombstones so older tree copies stay
+            # invisible on every dispatch route
+            return
         self._fold = _IncrementalFold(self, pk, hi, lo,
                                       pv.astype(np.int64))
 
@@ -1174,5 +1441,7 @@ class FlatAFLI:
             "fold_active": self._fold is not None,
             "n_rebuilds": self.n_rebuilds,
             "n_host_tier_probes": self.n_host_tier_probes,
+            "n_host_scans": self.n_host_scans,
+            "scan_pool_len": int(self._scan_pk.shape[0]),
             "serving": self._serving.stats(),
         }

@@ -20,7 +20,9 @@ Two serving backends (DESIGN.md §9):
   §9/§10).  Bulk-load positioning keys come from the *kernel* NF path so
   build-time and serve-time placement is bit-identical.  Reads +
   log-structured tiered inserts with last-write-wins identity semantics
-  (so update == insert of an existing key); delete is not supported.
+  (so update == insert of an existing key), tombstone deletes, and fused
+  tier-merged range scans (``scan_batch`` / ``lookup_range``, DESIGN.md
+  §12) — a batch of [lo, hi) ranges is one ``pallas_call`` end to end.
 """
 
 from __future__ import annotations
@@ -214,16 +216,55 @@ class NFL:
         return ok
 
     def delete_batch(self, keys: np.ndarray) -> np.ndarray:
-        if self.cfg.backend == "flat":
-            raise NotImplementedError(
-                "flat backend is read/insert/update (last-write-wins "
-                "tiers); use backend='afli' for deletes")
+        """Batched deletes; per-key success (False = key absent).
+
+        Flat backend: tombstone appends to the active delta (DESIGN.md
+        §12) — deleted keys vanish from point AND range results
+        immediately and are physically dropped by the next fold.  AFLI
+        backend: the paper tree's per-key delete, with the pkey
+        transform batched up front and a tightened loop body."""
         keys = np.asarray(keys, dtype=np.float64)
         pkeys = self._pkeys(keys)
-        ok = np.zeros(keys.shape[0], dtype=bool)
-        for i in range(keys.shape[0]):
-            ok[i] = self.index.delete(float(pkeys[i]), float(keys[i]))
-        return ok
+        if self.cfg.backend == "flat":
+            return self.index.delete_batch(
+                pkeys, ikeys=keys if self.use_flow else None)
+        delete = self.index.delete
+        return np.fromiter(
+            (delete(p, k) for p, k in zip(pkeys.tolist(), keys.tolist())),
+            dtype=bool, count=keys.shape[0])
+
+    # -------------------------------------------------------- range scans
+    def scan_batch(self, lo_keys: np.ndarray, hi_keys: np.ndarray,
+                   cap: int | None = None):
+        """Batched ``[lo, hi)`` range scans (flat backend, DESIGN.md §12).
+
+        Returns ``(payloads i32[n, cap] (-1 padded), counts i32[n],
+        totals i32[n])``: per query the first ``counts[i]`` lanes hold
+        the live payloads in range, in positioning-key order;
+        ``totals[i] > cap`` flags truncation.  Range semantics follow
+        the index's positioning order: the key order itself when the
+        flow is off, the NF-transformed order when it is on (both
+        endpoints ride the same transform as every stored key)."""
+        if self.cfg.backend != "flat":
+            raise NotImplementedError(
+                "range scans are served by the flat backend's fused "
+                "range-scan kernel; use backend='flat'")
+        lo_keys = np.asarray(lo_keys, dtype=np.float64)
+        hi_keys = np.asarray(hi_keys, dtype=np.float64)
+        if not self.use_flow:
+            return self.index.scan_batch(lo_keys, hi_keys, cap=cap)
+        feats_lo = expand_features(lo_keys, self.normalizer,
+                                   self.cfg.flow.dim, self.cfg.flow.theta,
+                                   dtype=np.float32)
+        feats_hi = expand_features(hi_keys, self.normalizer,
+                                   self.cfg.flow.dim, self.cfg.flow.theta,
+                                   dtype=np.float32)
+        return self.index.scan_batch_flow(feats_lo, feats_hi,
+                                          self._packed_w, self._shapes,
+                                          cap=cap)
+
+    # established range-query spelling alongside the batched name
+    lookup_range = scan_batch
 
     # ---------------------------------------------------------------- misc
     def stats(self):
@@ -231,14 +272,17 @@ class NFL:
 
     def dispatch_stats(self):
         """Serving-path telemetry for benchmarks and ops dashboards
-        (DESIGN.md §11): the fused-dispatch counters (fallbacks, tier
-        routing, ``retrace_count``) plus, on the flat backend, the
-        persistent serving-state counters (pack reuse, tier prefix
-        uploads, full repacks) and the host tier-probe count."""
+        (DESIGN.md §11/§12): the fused-dispatch counters (fallbacks,
+        tier routing, ``retrace_count``) and the range-scan counters
+        (scan dispatches, oracle fallbacks, ``scan_cap`` truncations)
+        plus, on the flat backend, the persistent serving-state counters
+        (pack reuse, tier prefix uploads, full repacks) and the host
+        tier-probe / host-scan fallback counts."""
         from repro.kernels.ops import fused_lookup_stats
 
         out = {"dispatch": fused_lookup_stats()}
         if self.cfg.backend == "flat":
             out["serving"] = self.index._serving.stats()
             out["host_tier_probes"] = self.index.n_host_tier_probes
+            out["host_scans"] = self.index.n_host_scans
         return out

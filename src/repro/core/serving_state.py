@@ -176,11 +176,18 @@ class ServingState:
         self.tree_pools = None          # KernelPools, packed once per swap
         self.run = DeviceTier(bucketed)
         self.delta = DeviceTier(bucketed)
+        # rank-ordered scan pool (DESIGN.md §12): the static structure's
+        # keys in sorted order, refreshed only at build / fold swap —
+        # the fused range-scan kernel's tree-side merge input.  Same
+        # persistent bucketed buffer discipline as the write tiers, so
+        # steady-state range traffic cannot repack or retrace.
+        self.scan = DeviceTier(bucketed)
         # ratcheted statics (upward-only; see module docstring)
         self.max_depth = 4
         self.dense_window = 4
         self.tree_packs = 0             # full tree pool packings
         self.tier_reuses = 0            # tier_pack calls with warm buffers
+        self.scan_reuses = 0            # scan_pack calls with warm buffers
         self._run_dirty = True
         self._delta_dirty = True
 
@@ -204,8 +211,32 @@ class ServingState:
             self.max_depth = _depth_round(max_depth)
             self.dense_window = _window_round(dense_window)
 
+    def set_scan(self, pk, hi, lo, pv, window: int) -> None:
+        """Adopt the (re)built structure's rank-ordered scan pool.
+        Called only at build / fold swap — off the serve path — so range
+        serving finds the pool resident and pays nothing."""
+        self.scan.refresh(pk, hi, lo, pv, window)
+
+    def scan_pack(self):
+        """The resident ``ScanPack``.  Always materializes: before the
+        first build the pool rides along empty (lower bounds collapse,
+        every range resolves from the write tiers alone)."""
+        from repro.kernels.range_scan import ScanPack, ScanPool
+
+        if self.scan.pk is None:
+            self.scan.refresh(np.empty(0, np.float32),
+                              np.empty(0, np.uint32),
+                              np.empty(0, np.uint32),
+                              np.empty(0, np.int32), self.scan.window)
+        self.scan_reuses += 1
+        s = self.scan
+        return ScanPack(
+            pool=ScanPool(pk=s.pk, hi=s.hi, lo=s.lo, pv=s.pv, plen=s.plen),
+            iters=s.iters)
+
     # ------------------------------------------------------------ tiers
-    def preallocate(self, *, delta_floor: int, run_floor: int) -> None:
+    def preallocate(self, *, delta_floor: int, run_floor: int,
+                    scan_floor: int = 0) -> None:
         """Pin tier capacity buckets from the workload's configured
         bounds (delta cap, fold trigger) with headroom, and allocate the
         buffers now.  With capacities fixed up front, the kernel's tier
@@ -218,9 +249,12 @@ class ServingState:
                                       pow2_bucket(delta_floor))
         self.run.min_capacity = max(self.run.min_capacity,
                                     pow2_bucket(run_floor))
+        if scan_floor:
+            self.scan.min_capacity = max(self.scan.min_capacity,
+                                         pow2_bucket(scan_floor))
         empty = (np.empty(0, np.float32), np.empty(0, np.uint32),
                  np.empty(0, np.uint32), np.empty(0, np.int32))
-        for t in (self.run, self.delta):
+        for t in (self.run, self.delta, self.scan):
             if t.capacity < t.min_capacity:
                 live = None
                 if t.pk is not None and t.length:
@@ -296,18 +330,23 @@ class ServingState:
         return {
             "tree_packs": self.tree_packs,
             "tier_reuses": self.tier_reuses,
+            "scan_reuses": self.scan_reuses,
             "tier_uploads": self.run.uploads + self.delta.uploads,
             "tier_upload_bytes": (self.run.upload_bytes
                                   + self.delta.upload_bytes),
-            "tier_repacks": self.run.repacks + self.delta.repacks,
+            "tier_repacks": (self.run.repacks + self.delta.repacks
+                             + self.scan.repacks),
+            "scan_uploads": self.scan.uploads,
             "run_capacity": self.run.capacity,
             "delta_capacity": self.delta.capacity,
+            "scan_capacity": self.scan.capacity,
             "static_max_depth": self.max_depth,
             "static_dense_window": self.dense_window,
         }
 
     def reset_stats(self) -> None:
-        for t in (self.run, self.delta):
+        for t in (self.run, self.delta, self.scan):
             t.uploads = t.upload_bytes = t.repacks = 0
         self.tree_packs = 0
         self.tier_reuses = 0
+        self.scan_reuses = 0

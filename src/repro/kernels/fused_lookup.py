@@ -55,7 +55,8 @@ from repro.kernels.nf_forward import DEFAULT_TILE as NF_TILE
 from repro.kernels.nf_forward import apply_flow_tile
 
 __all__ = ["fused_lookup_pallas", "KernelPools", "TierPools", "TierPack",
-           "DEFAULT_TILE", "INTERPRET_TILE", "NF_TILE"]
+           "DEFAULT_TILE", "INTERPRET_TILE", "NF_TILE", "TOMBSTONE",
+           "nf_forward_lanes", "lower_bound", "probe_pool"]
 
 DEFAULT_TILE = 512       # lane-aligned query tile for compiled TPU runs
 INTERPRET_TILE = 2048    # CPU validation: per-step query tile of the
@@ -65,6 +66,77 @@ INTERPRET_TILE = 2048    # CPU validation: per-step query tile of the
 # entry / node codes — schema owned by repro.core.flat_afli
 EMPTY, DATA, BUCKET, CHILD = 0, 1, 2, 3
 KIND_MODEL, KIND_DENSE = 0, 1
+
+# payload sentinels (DESIGN.md §12): -1 is a miss everywhere; -2 marks a
+# tombstoned identity riding the write tiers — a tier probe returning it
+# must MASK any older copy below (run / static tree), then surface a miss
+TOMBSTONE = -2
+
+
+# ---------------------------------------------------------------- shared
+# traversal helpers, used by this kernel AND kernels/range_scan.py (the
+# fused range-scan path reuses the same tiled-grid machinery: NF sub-tile
+# discipline, bounded lower-bound search, identity-window probes).
+
+def nf_forward_lanes(feat_ref, w_ref, dim: int, shapes) -> jnp.ndarray:
+    """NF forward over one [tile] lane batch of expanded features.
+
+    Evaluated in fixed NF_TILE-wide sub-tiles no matter the query tile:
+    XLA elementwise codegen (tanh) is 1-ulp shape-dependent, and precise
+    placement needs serve-time keys bit-equal to the build transform's
+    (which runs the same [NF_TILE] blocks in nf_forward_pallas).  The
+    optimization barrier fences each sub-tile from downstream consumers —
+    without it XLA horizontally re-fuses the sub-chains into one wide
+    (shape-divergent) loop.  Callers must still pin ONE evaluation by
+    round-tripping the result through an output ref (see _kernel)."""
+    tile_b = feat_ref.shape[0]
+    parts = []
+    for s in range(0, tile_b, NF_TILE):
+        cols = [feat_ref[s:s + NF_TILE, k] for k in range(dim)]
+        parts.append(jax.lax.optimization_barrier(
+            apply_flow_tile(cols, w_ref, dim, shapes)))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+def lower_bound(ppk, n_pool, qkey, iters: int) -> jnp.ndarray:
+    """Leftmost index with ``ppk[i] >= qkey`` in a sorted +inf-padded
+    pool (== ``np.searchsorted(..., side='left')``), as a fixed
+    ``iters``-round binary search (2^iters must cover the pool)."""
+    def bs_body(_, lh):
+        l, h = lh
+        mid = (l + h) // 2
+        go_right = ppk[mid] < qkey
+        return (jnp.where(go_right, mid + 1, l),
+                jnp.where(go_right, h, mid))
+
+    l0 = jnp.zeros(qkey.shape, jnp.int32)
+    h0 = jnp.full(qkey.shape, n_pool, jnp.int32)
+    l_fin, _ = jax.lax.fori_loop(0, iters, bs_body, (l0, h0))
+    return l_fin
+
+
+def probe_pool(phi, plo, ppv, n_pool, l_fin, nmax, window: int,
+               qhi, qlo) -> jnp.ndarray:
+    """Newest matching payload per lane from one sorted pool (-1 = miss;
+    a matched TOMBSTONE payload passes through for the caller to mask).
+
+    Scans ``[l_fin - window, l_fin + 3*window)`` around the lower-bound
+    landing: backward reach for a high landing (a query key 1 ulp above
+    the stored key skips its whole equal run), forward reach for a low
+    landing plus the equal run itself (each bounded by ``window``, the
+    pow2-rounded max equal-key run length of the pool).  Matching is by
+    exact (hi, lo) identity ONLY — the positioning key is the locator,
+    never the matcher (XLA's per-consumer-shape NF re-materialization is
+    1-ulp divergent, so f32 key equality is not codegen-stable)."""
+    widx = (l_fin - window)[:, None] + jax.lax.broadcasted_iota(
+        jnp.int32, (l_fin.shape[0], 4 * window), 1)
+    wc = jnp.clip(widx, 0, nmax - 1)
+    ok = ((widx >= 0) & (widx < n_pool)
+          & (phi[wc] == qhi[:, None])
+          & (plo[wc] == qlo[:, None]))
+    last = jnp.max(jnp.where(ok, widx, -1), axis=1)
+    pay = ppv[jnp.clip(last, 0, nmax - 1)]
+    return jnp.where(last >= 0, pay, -1)
 
 
 class KernelPools(NamedTuple):
@@ -163,13 +235,7 @@ def _kernel(feat_ref, qhi_ref, qlo_ref, w_ref,
     # consumers — without it XLA horizontally re-fuses the sub-chains into
     # one wide (shape-divergent) loop.
     if use_flow:
-        tile_b = feat_ref.shape[0]
-        parts = []
-        for s in range(0, tile_b, NF_TILE):
-            cols = [feat_ref[s:s + NF_TILE, k] for k in range(dim)]
-            parts.append(jax.lax.optimization_barrier(
-                apply_flow_tile(cols, w_ref, dim, shapes)))
-        qkey = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        qkey = nf_forward_lanes(feat_ref, w_ref, dim, shapes)
     else:
         qkey = feat_ref[:, 0]
     # materialize the positioning keys through the output ref: the VMEM
@@ -332,43 +398,14 @@ def _kernel(feat_ref, qhi_ref, qlo_ref, w_ref,
     # active delta > compacted run > static tree.  Mirrors the host
     # ``FlatAFLI._probe_delta`` oracle; parity must stay exact.
     if probe_tiers:
-        def probe_tier(phi, plo, ppv, n_pool, l_fin, nmax, window):
-            # scan [l_fin - window, l_fin + 3*window): backward reach for
-            # a high landing (qkey 1 ulp above the stored key skips its
-            # whole equal run), forward reach for a low landing plus the
-            # equal run itself (each bounded by `window`, the pow2-rounded
-            # max equal-key run length of the pool)
-            widx = (l_fin - window)[:, None] + jax.lax.broadcasted_iota(
-                jnp.int32, (l_fin.shape[0], 4 * window), 1)
-            wc = jnp.clip(widx, 0, nmax - 1)
-            ok = ((widx >= 0) & (widx < n_pool)
-                  & (phi[wc] == qhi[:, None])
-                  & (plo[wc] == qlo[:, None]))
-            last = jnp.max(jnp.where(ok, widx, -1), axis=1)
-            pay = ppv[jnp.clip(last, 0, nmax - 1)]
-            return jnp.where(last >= 0, pay, -1)
-
-        def tier_search(ppk, n_pool, iters):
-            def bs_body(_, lh):
-                l, h = lh
-                mid = (l + h) // 2
-                go_right = ppk[mid] < qkey
-                return (jnp.where(go_right, mid + 1, l),
-                        jnp.where(go_right, h, mid))
-
-            l0 = jnp.zeros(qkey.shape, jnp.int32)
-            h0 = jnp.full(qkey.shape, n_pool, jnp.int32)
-            l_fin, _ = jax.lax.fori_loop(0, iters, bs_body, (l0, h0))
-            return l_fin
-
         def tier_stage(phi, plo, ppv, ppk, n_pool, iters, window, nmax):
             # length-gated: a tier that is empty right now (e.g. the run
             # between a fold swap and the first shadow) skips its whole
             # search+scan; misses are the only possible outcome anyway
             def live(_):
-                return probe_tier(phi, plo, ppv, n_pool,
-                                  tier_search(ppk, n_pool, iters),
-                                  nmax, window)
+                return probe_pool(phi, plo, ppv, n_pool,
+                                  lower_bound(ppk, n_pool, qkey, iters),
+                                  nmax, window, qhi, qlo)
 
             def empty(_):
                 return jnp.full(qkey.shape, -1, jnp.int32)
@@ -381,8 +418,13 @@ def _kernel(feat_ref, qhi_ref, qlo_ref, w_ref,
         dl_pay = tier_stage(dhi_ref[...], dlo_ref[...], dpv_ref[...],
                             dpk_ref[...], dlen_ref[...][0], delta_iters,
                             delta_window, dpk_ref.shape[0])
-        result = jnp.where(dl_pay >= 0, dl_pay,
-                           jnp.where(run_pay >= 0, run_pay, result))
+        # an identity MATCH in a newer tier always wins — including a
+        # TOMBSTONE (-2) match, which must mask any older copy below
+        # rather than fall through to it; the final mapping surfaces
+        # tombstones as misses
+        result = jnp.where(dl_pay != -1, dl_pay,
+                           jnp.where(run_pay != -1, run_pay, result))
+        result = jnp.where(result == TOMBSTONE, -1, result)
 
     pay_ref[...] = result
 

@@ -25,10 +25,12 @@ __all__ = [
     "nf_transform_keys",
     "index_probe",
     "fused_lookup",
+    "fused_range_scan",
     "fused_lookup_stats",
     "reset_fused_lookup_stats",
     "pool_nbytes",
     "kernel_block_bytes",
+    "scan_block_bytes",
     "serving_cache_size",
     "flash_decode",
 ]
@@ -81,6 +83,17 @@ def kernel_block_bytes(pools, tier_bytes: int, tile: int, dim: int) -> int:
     return pool_nbytes(pools) + int(tier_bytes) + q_bytes
 
 
+def scan_block_bytes(scan_pack, tier_bytes: int, tile: int, dim: int,
+                     scan_cap: int) -> int:
+    """VMEM bill for one fused-range-scan grid step: the scan pool at
+    its bucketed padded capacity, the write tiers, and the per-step
+    query/output blocks (two endpoint feature blocks f32[tile, dim],
+    zlo/zhi f32[tile], counts/totals i32[tile], payload lanes
+    i32[tile, scan_cap])."""
+    q_bytes = tile * (2 * dim + 4 + scan_cap) * 4
+    return scan_pack.nbytes() + int(tier_bytes) + q_bytes
+
+
 # ------------------------------------------------------- serving telemetry
 # Cumulative fused-lookup dispatch counters (reset via
 # ``reset_fused_lookup_stats``).  ``retrace_count`` counts calls that
@@ -94,6 +107,11 @@ _FUSED_STATS = {
     "tier_kernel_count": 0,  # calls that probed the tiers in-kernel
     "host_probe_count": 0,   # calls whose tiers fell to the host oracle
     "retrace_count": 0,    # calls that paid a fresh XLA trace
+    # range-scan path (DESIGN.md §12)
+    "scan_dispatch_count": 0,  # fused_range_scan shim calls
+    "scan_fused_count": 0,     # single-dispatch range kernel taken
+    "scan_fallback_count": 0,  # host-oracle fallback taken
+    "scan_trunc_count": 0,     # queries whose candidate span > scan_cap
 }
 
 
@@ -111,9 +129,11 @@ def serving_cache_size() -> int:
     """Total jit-cache entries across the serving dispatch routes."""
     from repro.core.flat_afli import flat_lookup
     from repro.kernels.fused_lookup import fused_lookup_pallas
+    from repro.kernels.range_scan import fused_range_scan_pallas
 
     total = 0
-    for fn in (fused_lookup_pallas, flat_lookup, nf_forward_pallas):
+    for fn in (fused_lookup_pallas, fused_range_scan_pallas, flat_lookup,
+               nf_forward_pallas):
         try:
             total += fn._cache_size()
         except AttributeError:  # not a jit wrapper (e.g. monkeypatched)
@@ -242,6 +262,96 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
             "tier_path": "host" if have_tiers else "none",
             "host_probe": have_tiers}
     return np.asarray(res), np.asarray(z), info
+
+
+def fused_range_scan(scan_pack, tiers, feats_lo, feats_hi, *, flow=None,
+                     scan_cap: int, host_fallback, vmem_budget=None,
+                     tile=None, interpret=None):
+    """Dispatch shim for the fused tier-merged range scan (DESIGN.md §12).
+
+    When the scan pool AND the write tiers fit the VMEM budget, the whole
+    range path — endpoint NF forward + lower-bound location + three-way
+    tier merge with identity dedup and tombstone filtering — runs as ONE
+    ``pallas_call`` (``kernels/range_scan``).  Anything oversized falls
+    back to the bit-identical host oracle (``host_fallback``, a zero-arg
+    callable returning ``(payloads, counts, totals)`` numpy): unlike the
+    point path there is no partial route — merging host-resident tier
+    entries into kernel-emitted runs would itself be an ordered merge, so
+    the fallback is all-host by construction.
+
+    scan_pack: ``ScanPack`` or a zero-arg thunk producing it (the thunk
+    form skips the pack when the kernel path is disabled); tiers:
+    ``TierPack`` / thunk / ``None`` (both write tiers empty); feats_lo /
+    feats_hi: [n, d] endpoint features ([n, 1] keys when ``flow`` is
+    None); flow: optional ``(packed_w, shapes)``.
+
+    Returns ``(payloads i32[n, scan_cap], counts i32[n], totals i32[n],
+    info)`` as numpy.  Every call updates the scan counters in
+    ``fused_lookup_stats`` (dispatches, fallbacks, per-query
+    truncations) plus the shared ``retrace_count``.
+    """
+    from repro.kernels.fused_lookup import select_tile
+
+    interpret = resolve_interpret(interpret)
+    _FUSED_STATS["scan_dispatch_count"] += 1
+    cache_before = serving_cache_size()
+    if vmem_budget is None:
+        vmem_budget = (DEFAULT_INTERPRET_BUDGET if interpret
+                       else DEFAULT_VMEM_BUDGET)
+    use_flow = flow is not None
+    dim = int(feats_lo.shape[1])
+    q_tile = select_tile(int(feats_lo.shape[0]), use_flow, tile, interpret)
+
+    nbytes = None
+    if vmem_budget > 0:
+        if callable(scan_pack):
+            scan_pack = scan_pack()
+        if callable(tiers):
+            tiers = tiers()
+        tier_bytes = tiers.nbytes() if tiers is not None else 0
+        nbytes = scan_block_bytes(scan_pack, tier_bytes, q_tile, dim,
+                                  scan_cap)
+    if use_flow:
+        packed_w, shapes = flow
+    else:
+        packed_w, shapes = jnp.zeros((1, 1), jnp.float32), ()
+
+    if nbytes is not None and nbytes <= vmem_budget:
+        from repro.kernels.range_scan import fused_range_scan_pallas
+
+        have_tiers = tiers is not None
+        pv, cnt, tot, _zlo, _zhi = fused_range_scan_pallas(
+            feats_lo, feats_hi, packed_w, scan_pack.pool,
+            tiers.pools if have_tiers else None,
+            dim=dim, shapes=shapes, scan_cap=scan_cap,
+            scan_iters=scan_pack.iters, use_flow=use_flow, tile=tile,
+            interpret=interpret, probe_tiers=have_tiers,
+            run_iters=tiers.run_iters if have_tiers else 1,
+            run_window=tiers.run_window if have_tiers else 4,
+            delta_iters=tiers.delta_iters if have_tiers else 1,
+            delta_window=tiers.delta_window if have_tiers else 4,
+        )
+        pv, cnt, tot = np.asarray(pv), np.asarray(cnt), np.asarray(tot)
+        retraced = serving_cache_size() > cache_before
+        n_trunc = int((tot > scan_cap).sum())
+        _FUSED_STATS["scan_fused_count"] += 1
+        _FUSED_STATS["retrace_count"] += int(retraced)
+        _FUSED_STATS["scan_trunc_count"] += n_trunc
+        info = {"path": "fused", "n_dispatch": 1, "pool_bytes": nbytes,
+                "retraced": retraced, "truncated": n_trunc,
+                "tier_path": "kernel" if have_tiers else "none"}
+        return pv, cnt, tot, info
+
+    pv, cnt, tot = host_fallback()
+    retraced = serving_cache_size() > cache_before
+    n_trunc = int((np.asarray(tot) > scan_cap).sum())
+    _FUSED_STATS["scan_fallback_count"] += 1
+    _FUSED_STATS["retrace_count"] += int(retraced)
+    _FUSED_STATS["scan_trunc_count"] += n_trunc
+    info = {"path": "host", "n_dispatch": 0, "pool_bytes": nbytes,
+            "retraced": retraced, "truncated": n_trunc,
+            "tier_path": "host"}
+    return np.asarray(pv), np.asarray(cnt), np.asarray(tot), info
 
 
 def index_probe(qkey, qhi, qlo, slope, intercept, etype, ehi, elo,

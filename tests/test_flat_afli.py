@@ -207,8 +207,13 @@ def test_update_batch_flat_backend():
     assert not missing.any()
     assert np.array_equal(nfl.lookup_batch(keys[:100]), pv[:100] + 1_000_000)
     assert (nfl.lookup_batch(keys[:50] + 0.5) == -1).all()
-    with pytest.raises(NotImplementedError):
-        nfl.delete_batch(keys[:10])
+    # deletes are tombstones on the flat backend (DESIGN.md §12): the
+    # key vanishes, a subsequent update refuses to resurrect it
+    ok = nfl.delete_batch(keys[:10])
+    assert ok.all()
+    assert (nfl.lookup_batch(keys[:10]) == -1).all()
+    assert not nfl.update_batch(keys[:10], pv[:10]).any()
+    assert not nfl.delete_batch(keys[:10]).any()  # already gone
 
 
 @settings(max_examples=15, deadline=None)

@@ -22,11 +22,12 @@ _TIGHT = dict(rebuild_frac=0.1, delta_cap=24, fold_step_keys=48,
 
 
 def _run_interleaving(index, rng, key_pool, payload_gen, n_ops,
-                      lookup=None, insert=None):
+                      lookup=None, insert=None, delete=None):
     """Drive random op batches against ``index``, checking a dict oracle
     after every step.  Returns the op trace for failure reporting."""
     lookup = lookup or index.lookup_batch
     insert = insert or index.insert_batch
+    delete = delete or index.delete_batch
     oracle = {}
     # seed: bulk-build half the pool
     n0 = len(key_pool) // 2
@@ -39,8 +40,9 @@ def _run_interleaving(index, rng, key_pool, payload_gen, n_ops,
     oracle.update(zip(build_keys, build_pv))
     trace = []
     for step in range(n_ops):
-        op = rng.choice(["insert", "insert_dup", "lookup", "rebuild"],
-                        p=[0.35, 0.2, 0.4, 0.05])
+        op = rng.choice(["insert", "insert_dup", "lookup", "delete",
+                         "rebuild"],
+                        p=[0.3, 0.18, 0.35, 0.12, 0.05])
         if op == "rebuild":
             (index.index if hasattr(index, "index") else index).rebuild()
             trace.append(("rebuild",))
@@ -51,6 +53,17 @@ def _run_interleaving(index, rng, key_pool, payload_gen, n_ops,
         elif op == "insert_dup":  # re-inserts of live identities
             live = np.array(sorted(oracle))
             k = rng.choice(live, min(size, len(live)), replace=False)
+        elif op == "delete":  # tombstones (§12), some definite misses
+            live = np.array(sorted(oracle))
+            k = rng.choice(live, min(size, len(live)), replace=False)
+            if rng.random() < 0.4:
+                k = np.concatenate([k, k + 0.123])
+            ok = delete(k)
+            for kk, o in zip(k, ok):
+                assert o == (kk in oracle), f"step {step}: delete ok"
+                oracle.pop(kk, None)
+            trace.append(("delete", len(k)))
+            continue
         else:
             k = rng.choice(key_pool, size, replace=False)
             if rng.random() < 0.5:  # definite misses

@@ -1,0 +1,364 @@
+"""Fused tier-merged range scans + tombstone deletes (DESIGN.md §12).
+
+Range semantics are over positioning-key order: without a flow that is
+the key order itself (the f32 cast is monotone), with a flow it is the
+NF-transformed order.  Every oracle here is therefore built in z-space —
+live identities filtered by ``zlo <= z(k) < zhi`` — which holds across
+flow on/off, mid-fold, tombstoned, and tier-resident states.
+"""
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep: seeded-random fallback
+    from _hyp_fallback import given, settings, st
+
+from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig, split_key_bits
+
+_TIGHT = dict(rebuild_frac=0.1, delta_cap=24, fold_step_keys=48,
+              fold_work_factor=4.0)
+
+
+def _expect(oracle_kz, zlo, zhi):
+    """Sorted payloads of live entries with z in [zlo, zhi)."""
+    return np.sort(np.array([p for (z, p) in oracle_kz.values()
+                             if zlo <= z < zhi], dtype=np.int64))
+
+
+def _check_scan(idx_or_nfl, oracle_kz, lo_keys, hi_keys, zfn, cap):
+    """scan_batch vs the z-space dict oracle (multiset equality; counts
+    and totals consistent).  Skips truncated queries (asserted on
+    separately)."""
+    pv, cnt, tot = idx_or_nfl.scan_batch(np.asarray(lo_keys, np.float64),
+                                         np.asarray(hi_keys, np.float64),
+                                         cap=cap)
+    zlo = zfn(np.asarray(lo_keys, np.float64))
+    zhi = zfn(np.asarray(hi_keys, np.float64))
+    for i in range(len(lo_keys)):
+        if tot[i] > cap:
+            continue
+        exp = _expect(oracle_kz, zlo[i], zhi[i])
+        got = np.sort(pv[i, :cnt[i]])
+        assert np.array_equal(got, exp), (
+            f"range {i}: [{lo_keys[i]}, {hi_keys[i]}) -> {got} != {exp}")
+        assert (pv[i, cnt[i]:] == -1).all()
+    return pv, cnt, tot
+
+
+def _z32(keys):
+    return np.asarray(keys, np.float64).astype(np.float32)
+
+
+def test_scan_basic_and_empty_ranges():
+    rng = np.random.default_rng(0)
+    keys = np.unique(rng.uniform(0, 1e9, 3000))
+    pv = np.arange(len(keys), dtype=np.int64)
+    idx = FlatAFLI()
+    idx.build(keys, pv)
+    oracle = {k: (z, p) for k, z, p in zip(keys, _z32(keys), pv)}
+
+    los = rng.choice(keys, 40)
+    his = los + rng.uniform(1e4, 1e7, 40)
+    _check_scan(idx, oracle, los, his, _z32, cap=128)
+
+    # empty ranges: lo == hi, inverted, and a gap between two keys
+    gap_lo = (keys[10] + keys[11]) / 2
+    pv_e, cnt_e, tot_e = idx.scan_batch(
+        np.array([keys[5], keys[99], gap_lo]),
+        np.array([keys[5], keys[50], np.nextafter(keys[11], 0)]), cap=64)
+    assert (cnt_e == 0).all() and (tot_e == 0).all()
+    assert (pv_e == -1).all()
+
+
+def test_scan_spans_node_boundaries():
+    """Ranges covering large key stretches cross model/dense node
+    boundaries of the flattened tree; the rank-ordered scan pool must
+    emit one contiguous run regardless."""
+    rng = np.random.default_rng(1)
+    keys = np.unique(np.floor(rng.lognormal(0, 2, 4000) * 1e9))
+    pv = np.arange(len(keys), dtype=np.int64)
+    idx = FlatAFLI()
+    idx.build(keys, pv)
+    oracle = {k: (z, p) for k, z, p in zip(keys, _z32(keys), pv)}
+    # spans of hundreds of keys at several tree regions
+    starts = np.array([0, len(keys) // 3, 2 * len(keys) // 3,
+                       len(keys) - 600])
+    los = keys[starts]
+    his = keys[starts + 500]
+    pv_r, cnt_r, _ = _check_scan(idx, oracle, los, his, _z32, cap=1024)
+    assert (cnt_r == 500).all()
+    # in-range results arrive in positioning-key (== key) order
+    for i in range(len(los)):
+        row = pv_r[i, :cnt_r[i]]
+        assert np.array_equal(row, np.sort(row))
+
+
+def test_scan_duplicate_pkeys():
+    """Distinct f64 identities colliding to one f32 positioning key must
+    all be emitted by a range covering the collision run."""
+    base = 1.0e9  # f32 ulp at 1e9 is 64: consecutive ints collide
+    keys = base + np.arange(48, dtype=np.float64)
+    pv = np.arange(len(keys), dtype=np.int64)
+    assert len(np.unique(_z32(keys))) < len(keys)  # real collisions
+    idx = FlatAFLI()
+    idx.build(keys, pv)
+    oracle = {k: (z, p) for k, z, p in zip(keys, _z32(keys), pv)}
+    _check_scan(idx, oracle, [base - 1e3], [base + 1e3], _z32, cap=128)
+
+
+def test_scan_cap_truncation():
+    rng = np.random.default_rng(2)
+    keys = np.unique(rng.uniform(0, 1e9, 2000))
+    pv = np.arange(len(keys), dtype=np.int64)
+    idx = FlatAFLI()
+    idx.build(keys, pv)
+    cap = 16
+    lo, hi = keys[100], keys[400]  # 300 members >> cap
+    pv_r, cnt_r, tot_r = idx.scan_batch([lo], [hi], cap=cap)
+    assert tot_r[0] == 300 and tot_r[0] > cap
+    assert cnt_r[0] == cap  # no tiers -> every candidate is live
+    # truncation keeps the FIRST cap candidates in key order
+    assert np.array_equal(pv_r[0], pv[100:100 + cap])
+    # the dispatch counters saw the truncation
+    from repro.kernels import ops
+
+    assert ops.fused_lookup_stats()["scan_trunc_count"] >= 1
+
+
+def test_scan_kernel_vs_host_oracle_bit_parity():
+    """The fused kernel and the host fallback must agree bit-for-bit
+    with every tier live: static tree + compacted run + active delta +
+    tombstones, mid-fold included."""
+    rng = np.random.default_rng(3)
+    keys = np.unique(rng.uniform(0, 1e9, 1500))
+    pv = np.arange(len(keys), dtype=np.int64)
+    idx = FlatAFLI(FlatAFLIConfig(**_TIGHT))
+    idx.build(keys[::2], pv[::2])
+    idx.insert_batch(keys[1::2][:300], pv[1::2][:300] + 1_000_000)
+    idx.delete_batch(keys[::2][:150])
+    assert idx._delta_pk.shape[0] or idx._run_pk.shape[0]
+
+    los = rng.choice(keys, 64)
+    his = los + rng.uniform(1e5, 1e8, 64)
+    got = idx.scan_batch(los, his, cap=96)
+    assert idx.last_scan_dispatch["path"] == "fused"
+    exp = idx._range_scan_host(_z32(los), _z32(his), 96)
+    for g, e in zip(got, exp):
+        assert np.array_equal(g, e)
+
+
+def test_tombstone_point_and_range_through_fold():
+    """Deleted keys are invisible to point and range reads before and
+    after folds; re-insert after delete resurrects with the new
+    payload."""
+    rng = np.random.default_rng(4)
+    keys = np.unique(rng.uniform(0, 1e9, 1200))
+    pv = np.arange(len(keys), dtype=np.int64)
+    idx = FlatAFLI(FlatAFLIConfig(**_TIGHT))
+    idx.build(keys, pv)
+    n0 = idx.n_keys
+
+    dk = keys[200:260]
+    ok = idx.delete_batch(dk)
+    assert ok.all() and idx.n_keys == n0 - 60
+    assert (idx.lookup_batch(dk) == -1).all()
+    assert not idx.contains_batch(dk).any()
+    oracle = {k: (z, p) for k, z, p in zip(keys, _z32(keys), pv)
+              if k not in set(dk.tolist())}
+    _check_scan(idx, oracle, [keys[150]], [keys[300]], _z32, cap=256)
+
+    # fold: tombstoned identities are physically dropped
+    idx.rebuild()
+    assert (idx.lookup_batch(dk) == -1).all()
+    _check_scan(idx, oracle, [keys[150]], [keys[300]], _z32, cap=256)
+    assert idx.stats()["scan_pool_len"] == n0 - 60
+
+    # resurrect a deleted key with a new payload
+    idx.insert_batch(dk[:10], np.arange(10) + 5_000_000)
+    assert np.array_equal(idx.lookup_batch(dk[:10]),
+                          np.arange(10) + 5_000_000)
+    for k, p in zip(dk[:10], np.arange(10) + 5_000_000):
+        oracle[k] = (np.float32(k), p)
+    _check_scan(idx, oracle, [keys[150]], [keys[300]], _z32, cap=256)
+
+
+def _drive_scan_interleaving(obj, rng, pool, n_ops, zfn, cap,
+                             exact_endpoints=True):
+    """Random insert/delete/lookup/scan/rebuild interleavings vs the
+    z-space dict oracle at every step (the §12 analog of the mixed
+    property harness): crosses delta merges, incremental folds, and
+    tombstone drops.
+
+    ``exact_endpoints=False`` perturbs scan endpoints off the stored
+    keys — required under a flow, where a fold re-keys serve-path-
+    divergent identities at their in-kernel z (§8 shadows, 1 ulp from
+    the build z the oracle knows), making an endpoint exactly equal to
+    a stored key's build z ambiguous by construction."""
+    oracle = {}
+    n0 = len(pool) // 2
+    build_keys, build_pv = pool[:n0], np.arange(n0, dtype=np.int64)
+    if isinstance(obj, FlatAFLI):
+        obj.build(build_keys, build_pv)
+    else:
+        obj.bulkload(build_keys, build_pv)
+    zb = zfn(build_keys)
+    for k, z, p in zip(build_keys, zb, build_pv):
+        oracle[k] = (z, p)
+    for step in range(n_ops):
+        op = rng.choice(["insert", "delete", "lookup", "scan", "rebuild"],
+                        p=[0.3, 0.15, 0.2, 0.3, 0.05])
+        if op == "rebuild":
+            (obj.index if hasattr(obj, "index") else obj).rebuild()
+            continue
+        size = int(rng.integers(1, 20))
+        if op == "insert":
+            k = rng.choice(pool, size, replace=False)
+            v = np.arange(size, dtype=np.int64) + (step + 1) * 10_000
+            obj.insert_batch(k, v)
+            for kk, zz, vv in zip(k, zfn(k), v):
+                oracle[kk] = (zz, vv)
+        elif op == "delete":
+            live = np.array(sorted(oracle))
+            k = rng.choice(live, min(size, len(live)), replace=False)
+            if rng.random() < 0.3:  # definite misses must report False
+                k = np.concatenate([k, k + 0.123])
+            ok = obj.delete_batch(k)
+            for kk, o in zip(k, ok):
+                assert o == (kk in oracle)
+                oracle.pop(kk, None)
+        elif op == "lookup":
+            k = rng.choice(pool, size, replace=False)
+            res = obj.lookup_batch(k)
+            exp = np.array([oracle[x][1] if x in oracle else -1
+                            for x in k])
+            assert np.array_equal(res, exp), f"step {step} point lookup"
+        else:  # scan
+            lo = rng.choice(pool, 3)
+            if not exact_endpoints:
+                lo = lo * (1 + rng.uniform(1e-7, 1e-5, 3))
+            hi = np.where(rng.random(3) < 0.15, lo,  # some empties
+                          lo * (1 + rng.uniform(0.001, 0.3, 3)))
+            _check_scan(obj, oracle, lo, hi, zfn, cap)
+    # closing sweep: a wide scan checked against the z-space oracle (a
+    # key-space "whole domain" range does NOT cover all of z-space when
+    # the flow is non-monotone — membership is always by z)
+    live = np.array(sorted(oracle))
+    if len(live):
+        lo = live[:1] if exact_endpoints else live[:1] * (1 + 1e-7)
+        _check_scan(obj, oracle, lo, live[-1:] * 1.01, zfn, cap)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_scan_interleaving_flat_direct(seed):
+    """FlatAFLI alone (no flow): tight tiers, many boundary crossings."""
+    rng = np.random.default_rng(seed)
+    pool = np.unique(rng.uniform(1.0, 1e9, 360))
+    idx = FlatAFLI(FlatAFLIConfig(**_TIGHT))
+    _drive_scan_interleaving(idx, rng, pool, n_ops=12, zfn=_z32, cap=1024)
+    assert idx.stats()["n_keys"] == len(idx._id_set)  # delete bookkeeping
+
+
+@pytest.mark.parametrize("force_flow", [False, True])
+def test_scan_interleaving_nfl(force_flow):
+    """NFL(backend='flat'), flow forced on/off: the full serving stack
+    (kernel NF on endpoints + scan-pool merge + tier probes) against the
+    z-space dict oracle, deletes included."""
+    from repro.core.nfl import NFL, NFLConfig
+    from repro.core.train_flow import FlowTrainConfig
+
+    rng = np.random.default_rng(53 + int(force_flow))
+    pool = np.unique(np.floor(rng.lognormal(0, 2, 500) * 1e9))
+    nfl = NFL(NFLConfig(flow_train=FlowTrainConfig(epochs=1),
+                        backend="flat", force_flow=force_flow,
+                        flat_index=FlatAFLIConfig(**_TIGHT)))
+
+    def zfn(keys):
+        keys = np.asarray(keys, np.float64)
+        if not nfl.use_flow:
+            return keys.astype(np.float32)
+        return nfl._transform(nfl.flow_params, nfl.normalizer,
+                              keys).astype(np.float32)
+
+    _drive_scan_interleaving(nfl, rng, pool, n_ops=10, zfn=zfn, cap=1024,
+                             exact_endpoints=not force_flow)
+    assert nfl.use_flow == force_flow
+    # lookup_range is the same entry point
+    lo = np.array([pool[0]])
+    hi = np.array([pool[-1] * 1.01])
+    a = nfl.scan_batch(lo, hi, cap=1024)
+    b = nfl.lookup_range(lo, hi, cap=1024)
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+
+
+def test_scan_before_build_serves_from_tiers():
+    """Insert-before-build: ranges resolve from the write tiers alone
+    over an empty scan pool."""
+    idx = FlatAFLI(FlatAFLIConfig(**_TIGHT))
+    keys = np.array([10.0, 20.0, 30.0, 40.0])
+    idx.insert_batch(keys, np.array([1, 2, 3, 4]))
+    pv_r, cnt_r, tot_r = idx.scan_batch([15.0], [45.0], cap=16)
+    assert cnt_r[0] == 3 and tot_r[0] == 3
+    assert np.array_equal(np.sort(pv_r[0, :3]), np.array([2, 3, 4]))
+    idx.delete_batch(np.array([30.0]))
+    pv_r, cnt_r, _ = idx.scan_batch([15.0], [45.0], cap=16)
+    assert np.array_equal(np.sort(pv_r[0, :cnt_r[0]]), np.array([2, 4]))
+
+
+def test_scan_zero_retrace_steady_state():
+    """Steady-state range traffic reuses one traced kernel: after the
+    first scan warmed the shape, further scans (including across a fold
+    swap) must not grow any serving jit cache or repack a pool."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(6)
+    keys = np.unique(rng.uniform(0, 1e9, 6000))
+    pv = np.arange(len(keys), dtype=np.int64)
+    idx = FlatAFLI(FlatAFLIConfig(rebuild_frac=0.05, delta_cap=128,
+                                  fold_step_keys=2048))
+    idx.build(keys[::2], pv[::2])
+    # warm every route: scans with tiers empty AND live, plus folds
+    idx.insert_batch(keys[1::2][:200], pv[1::2][:200])
+    los = rng.choice(keys, 64)
+    idx.scan_batch(los, los + 1e6)
+    idx.delete_batch(keys[::2][:50])
+    idx.scan_batch(los, los + 1e6)
+    while idx._fold is not None:
+        idx.insert_batch(keys[1::2][200:210], pv[1::2][200:210])
+    idx.scan_batch(los, los + 1e6)
+
+    ops.reset_fused_lookup_stats()
+    idx._serving.reset_stats()
+    for i in range(6):
+        q = rng.choice(keys, 64)
+        idx.scan_batch(q, q + rng.uniform(1e4, 1e7))
+        idx.insert_batch(keys[1::2][220 + 10 * i:230 + 10 * i],
+                         np.arange(10) + i)
+        idx.delete_batch(rng.choice(keys[::2][100:], 5, replace=False))
+    stats = ops.fused_lookup_stats()
+    assert stats["scan_fused_count"] == stats["scan_dispatch_count"] > 0
+    assert stats["scan_fallback_count"] == 0
+    assert stats["retrace_count"] == 0, "steady-state scan retraced"
+    assert idx._serving.stats()["tier_repacks"] == 0
+    assert idx.n_host_scans == 0
+
+
+def test_afli_delete_batch_vectorized_semantics():
+    """NFL afli-backend delete_batch keeps per-key ok semantics after
+    the loop tightening: present -> True (and gone), absent -> False."""
+    from repro.core.nfl import NFL, NFLConfig
+    from repro.core.train_flow import FlowTrainConfig
+
+    rng = np.random.default_rng(8)
+    keys = np.unique(rng.uniform(0, 1e9, 2500))
+    pv = np.arange(len(keys), dtype=np.int64)
+    nfl = NFL(NFLConfig(flow_train=FlowTrainConfig(epochs=1),
+                        backend="afli"))
+    nfl.bulkload(keys, pv)
+    mixed = np.concatenate([keys[:40], keys[:20] + 0.5])
+    ok = nfl.delete_batch(mixed)
+    assert ok[:40].all() and not ok[40:].any()
+    assert (nfl.lookup_batch(keys[:40]) == -1).all()
+    assert not nfl.delete_batch(keys[:40]).any()
