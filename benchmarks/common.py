@@ -88,6 +88,32 @@ class FlatNFLAdapter:
         return self.nfl.index.stats()
 
 
+class ShardedNFLAdapter(FlatNFLAdapter):
+    """Key-space-sharded flat serving (DESIGN.md §13): P FlatAFLI
+    shards, one device each, behind the same batched API — the router
+    bins each batch by flow-CDF boundaries, fans out to the per-shard
+    fused kernels, and gathers back to input order."""
+
+    def __init__(self, shards: int = 2, dim: int = 3,
+                 force_flow=None):
+        from repro.core.flow import FlowConfig
+
+        self.nfl = NFL(NFLConfig(flow=FlowConfig(dim=dim),
+                                 flow_train=FlowTrainConfig(epochs=1),
+                                 backend="flat", shards=shards,
+                                 force_flow=force_flow))
+
+    def size_bytes(self):
+        # shards=1 degrades to a plain FlatAFLI inside NFL
+        shards = getattr(self.nfl.index, "shards", [self.nfl.index])
+        total = 0
+        for shard in shards:
+            if shard.arrays is not None:
+                total += int(sum(x.size * x.dtype.itemsize
+                                 for x in shard.arrays))
+        return total
+
+
 class AFLIAdapter:
     """Standalone AFLI (no flow) behind the batched benchmark API."""
 
@@ -150,6 +176,10 @@ def make_bench_index(name: str):
                              flow_train=FlowTrainConfig(epochs=1)))
     if name == "nfl_flat":
         return FlatNFLAdapter()
+    if name.startswith("nfl_sharded"):
+        # "nfl_sharded" -> 2 shards; "nfl_shardedP" -> P shards
+        suffix = name[len("nfl_sharded"):]
+        return ShardedNFLAdapter(shards=int(suffix) if suffix else 2)
     if name == "afli":
         return AFLIAdapter()
     return BaselineAdapter(name)

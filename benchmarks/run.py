@@ -39,7 +39,7 @@ def _walk_numeric(obj, path=""):
             yield from _walk_numeric(v, f"{path}[{i}]")
 
 
-def _compare_rerun(name: str, base: dict):
+def _compare_rerun(name: str, base: dict, path: str):
     """Re-run the bench behind a baseline JSON at its recorded workload
     (no artifact emitted — the committed baseline stays untouched)."""
     w = base.get("workload", {})
@@ -79,6 +79,23 @@ def _compare_rerun(name: str, base: dict):
             n_keys=n_keys, n_ops=int(w.get("n_ops", 8_192)),
             n_warmup=int(w.get("n_warmup", 6_144)),
             batch_size=int(w.get("batch_size", 256)), out_json=None)
+    if name.startswith("BENCH_sharded"):
+        # the sharded bench needs the baseline's forced device topology,
+        # and XLA_FLAGS must land before jax initializes — jax is already
+        # up in this process, so rerun in a subprocess and read its JSON
+        import subprocess
+        import tempfile
+
+        with tempfile.NamedTemporaryFile(suffix=".json") as tmp:
+            rc = subprocess.call(
+                [sys.executable, "-m", "benchmarks.bench_sharded",
+                 "--compare-rerun", path, "--out", tmp.name],
+                env=dict(os.environ))
+            if rc:
+                raise AssertionError(
+                    f"sharded compare rerun failed (exit {rc})")
+            with open(tmp.name) as f:
+                return json.load(f)
     raise SystemExit(f"--compare: no runner known for {name}")
 
 
@@ -90,7 +107,7 @@ def compare(paths) -> int:
         with open(path) as f:
             base = json.load(f)
         try:
-            fresh = _compare_rerun(os.path.basename(path), base)
+            fresh = _compare_rerun(os.path.basename(path), base, path)
         except AssertionError as e:
             # the benches self-assert correctness (wrong>0, oracle
             # divergence) and raise before returning — count it as a
@@ -107,9 +124,11 @@ def compare(paths) -> int:
                 print(f"COMPARE FAIL {path}{p}: wrong={v:g}")
                 failures += 1
                 continue
-            if p not in base_vals:
-                continue
-            bv = base_vals[p][1]
+            # baselines predating newly added counter fields simply
+            # lack those paths: a missing key reads as 0 (ungated for
+            # the ratio metrics below), never a KeyError — old
+            # committed BENCH_*.json stay comparable as benches grow
+            bv = base_vals.get(p, (k, 0.0))[1]
             if k == "throughput_mops" and v < bv * (1 - REGRESSION_FRAC):
                 print(f"COMPARE FAIL {path}{p}: {v:.4g} Mops/s vs "
                       f"baseline {bv:.4g} (>{REGRESSION_FRAC:.0%} slower)")
@@ -134,7 +153,7 @@ def main() -> None:
     ap.add_argument("--only", action="append", default=None,
                     help="tag filter, repeatable and/or comma-separated: "
                          "fig7,fig8,fig10,fig11,table1,table2,table3,"
-                         "roofline,fused,mixed,serving,range")
+                         "roofline,fused,mixed,serving,range,sharded")
     ap.add_argument("--n-keys", type=int, default=None)
     ap.add_argument("--repeats", type=int, default=None,
                     help="timed repeats per variant in the repeat-based "
@@ -235,6 +254,27 @@ def main() -> None:
             rows += bench_range_scan.rows(bench_range_scan.run(
                 n_keys=max(n_keys, 65_536) if args.full else 65_536,
                 **({"repeats": args.repeats} if args.repeats else {})))
+    if want("sharded"):
+        # §13 sharded serving at P=1 vs P=4: needs a forced multi-device
+        # host, and XLA_FLAGS must land before jax initializes — jax is
+        # already up in this process, so the bench runs as a subprocess
+        # (it prints its own rows and emits BENCH_sharded.json)
+        import subprocess
+
+        env = dict(os.environ)
+        flags = env.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            env["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count=4"
+            ).strip()
+        cmd = [sys.executable, "-m", "benchmarks.bench_sharded"]
+        if args.smoke:
+            cmd.append("--smoke")
+        if args.n_keys is not None:
+            cmd += ["--n-keys", str(args.n_keys)]
+        rc = subprocess.call(cmd, env=env)
+        if rc:
+            raise SystemExit(rc)
     if want("roofline"):
         rows += bench_roofline.rows(bench_roofline.run())
 

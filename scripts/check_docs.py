@@ -1,0 +1,142 @@
+#!/usr/bin/env python
+"""Docs CI check (run from scripts/verify.sh).
+
+Three gates, all fast enough for every pre-merge run:
+
+1. **Snippet execution** — every fenced ```python block in README.md
+   and docs/API.md runs top to bottom (one shared namespace per file,
+   blocks in document order, so later snippets may build on earlier
+   ones).  A fence info-string containing ``no-run`` skips a block.
+   Docs that drift from the API fail the merge gate instead of rotting.
+
+2. **DESIGN.md section references** — every ``§N`` citation in the
+   Python sources and the markdown docs (the repo convention for
+   pointing at DESIGN.md) must name a section that actually exists.
+   Dotted references (``§3.2.2``) and ``paper §...`` forms cite the
+   NFL paper, not DESIGN.md, and are ignored.
+
+3. **Relative links** — ``[text](path)`` links in README.md and
+   docs/API.md must point at files that exist (external URLs and
+   in-page anchors are ignored).
+
+Exit status is nonzero on any failure; failures are listed per gate.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+import traceback
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ["README.md", os.path.join("docs", "API.md")]
+
+FENCE_RE = re.compile(r"^```(\S*)[^\n]*\n(.*?)^```", re.M | re.S)
+# a DESIGN ref is an undotted §<int> not preceded by "paper "
+SECTION_RE = re.compile(r"(paper\s+|Paper\s+)?§(\d+)(\.\d)?")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)\s]*)?\)")
+
+
+def design_sections() -> set:
+    path = os.path.join(ROOT, "DESIGN.md")
+    with open(path) as f:
+        text = f.read()
+    return {int(m.group(1)) for m in re.finditer(r"^## §(\d+)\b", text,
+                                                 re.M)}
+
+
+def check_snippets() -> list:
+    failures = []
+    for doc in DOCS:
+        path = os.path.join(ROOT, doc)
+        with open(path) as f:
+            text = f.read()
+        namespace: dict = {"__name__": f"docs_snippet:{doc}"}
+        n = 0
+        for m in FENCE_RE.finditer(text):
+            info, body = m.group(1), m.group(2)
+            if info != "python" or "no-run" in m.group(0).split("\n")[0]:
+                continue
+            n += 1
+            line = text[:m.start()].count("\n") + 2
+            try:
+                code = compile(body, f"{doc}:snippet@L{line}", "exec")
+                exec(code, namespace)
+            except Exception:
+                tb = traceback.format_exc(limit=3)
+                failures.append(f"{doc} snippet at line {line} failed:\n"
+                                f"{tb}")
+        print(f"  {doc}: {n} python snippet(s) executed")
+    return failures
+
+
+def check_section_refs() -> list:
+    sections = design_sections()
+    failures = []
+    py_files = []
+    for sub in ("src", "benchmarks", "tests", "examples", "scripts"):
+        for dirpath, _dirs, files in os.walk(os.path.join(ROOT, sub)):
+            py_files += [os.path.join(dirpath, f) for f in files
+                         if f.endswith(".py")]
+    targets = py_files + [os.path.join(ROOT, d) for d in DOCS]
+    n_refs = 0
+    for path in targets:
+        with open(path) as f:
+            text = f.read()
+        for m in SECTION_RE.finditer(text):
+            if m.group(1) or m.group(3):  # "paper §..." or dotted
+                continue
+            n_refs += 1
+            num = int(m.group(2))
+            if num not in sections:
+                line = text[:m.start()].count("\n") + 1
+                rel = os.path.relpath(path, ROOT)
+                failures.append(
+                    f"{rel}:{line}: cites DESIGN.md §{num}, which does "
+                    f"not exist (sections: {sorted(sections)})")
+    print(f"  {n_refs} DESIGN.md § references checked against "
+          f"{len(sections)} sections")
+    return failures
+
+
+def check_links() -> list:
+    failures = []
+    n = 0
+    for doc in DOCS:
+        path = os.path.join(ROOT, doc)
+        base = os.path.dirname(path)
+        with open(path) as f:
+            text = f.read()
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if "://" in target or target.startswith("mailto:"):
+                continue
+            n += 1
+            if not os.path.exists(os.path.join(base, target)):
+                line = text[:m.start()].count("\n") + 1
+                failures.append(f"{doc}:{line}: broken link -> {target}")
+    print(f"  {n} relative link(s) checked")
+    return failures
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    failures = []
+    print("== docs check: snippet execution ==")
+    failures += check_snippets()
+    print("== docs check: DESIGN.md section references ==")
+    failures += check_section_refs()
+    print("== docs check: relative links ==")
+    failures += check_links()
+    if failures:
+        print(f"\ncheck_docs: {len(failures)} failure(s)")
+        for f in failures:
+            print("  " + f.replace("\n", "\n    "))
+        return 1
+    print("check_docs: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

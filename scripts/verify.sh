@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
-# Pre-merge verification: tier-1 test suite + a seconds-scale smoke of
-# the serving-path benchmarks (fused read path, mixed write path, §11
-# serving state), so a perf-path regression in any dispatch route is
-# caught before it lands.  Any "wrong" count > 0 in an emitted BENCH
-# JSON fails the run.
+# Pre-merge verification: docs checks (README/API snippets execute,
+# DESIGN.md § references + relative links resolve), the tier-1 test
+# suite, and a seconds-scale smoke of the serving-path benchmarks
+# (fused read path, mixed write path, §11 serving state), so a doc or
+# perf-path regression in any dispatch route is caught before it lands.
+# Any "wrong" count > 0 in an emitted BENCH JSON fails the run.
 #
 # Usage:
 #   scripts/verify.sh [extra pytest args]          # full tier
@@ -28,6 +29,9 @@ run_phase() {
     "$@"
   fi
 }
+
+echo "== docs check (snippets + DESIGN.md refs + links) =="
+run_phase python scripts/check_docs.py
 
 echo "== tier-1 test suite =="
 run_phase python -m pytest -x -q "$@"

@@ -585,10 +585,20 @@ class _IncrementalFold:
         return max(self.n // 4, 1)
 
     def _lookup_kwargs(self):
+        """Dispatch overrides for the candidate structure.  The depth /
+        window statics ratchet against the serving cache (§11): a fold
+        whose tree is shallower or narrower than anything served so far
+        reuses the warm verify shapes instead of minting a fresh trace —
+        scanning or looping further than the new tree needs is
+        semantically free, exactly as on the serve path."""
+        sv = self.idx._serving
+        depth = _depth_round(self.max_depth_new)
+        window = _window_round(self.dense_window_new)
+        if sv.bucketed:
+            depth = max(sv.max_depth, depth)
+            window = max(sv.dense_window, window)
         return dict(arrays=self.arrays_new, pools=self.pools_new,
-                    max_depth=_depth_round(self.max_depth_new),
-                    dense_window=_window_round(self.dense_window_new),
-                    tiers=False)
+                    max_depth=depth, dense_window=window, tiers=False)
 
     def _verify_chunk(self, k_lo, k_hi) -> None:
         """§8 device-verified placement, tree-only: tiers are excluded so
@@ -666,7 +676,17 @@ class _IncrementalFold:
 def flat_lookup(arrays: FlatArrays, qkey: jnp.ndarray, qhi: jnp.ndarray,
                 qlo: jnp.ndarray, max_depth: int, dense_iters: int,
                 bucket_cap: int, dense_window: int = 8) -> jnp.ndarray:
-    """Batched lookup. Returns payload (i32) or -1. Pure jnp (kernel oracle)."""
+    """Batched traversal over the flattened pools, pure jnp (DESIGN.md
+    §3).  Returns payload (i32) or -1.
+
+    This is the executable specification for the fused kernel's
+    traversal stage (§9): ``kernels/fused_lookup`` must stay
+    bit-identical to it on every input, and ``ops.fused_lookup`` falls
+    back to it when the pools exceed the VMEM budget.  One
+    ``lax.while_loop`` round resolves one tree level for the whole
+    query batch (model-node FMA slot prediction, dense-node
+    fixed-iteration binary search, conflict-bucket scan), early-exiting
+    once every query is done."""
 
     nq = qkey.shape[0]
 
@@ -792,6 +812,16 @@ class FlatAFLI:
     # -------------------------------------------------------------- build
     def build(self, pkeys: np.ndarray, payloads: np.ndarray,
               ikeys: np.ndarray | None = None) -> None:
+        """Bulk build from *positioning* keys (DESIGN.md §3/§8): sort,
+        fit the conflict-aware flattened tree with f32 placement
+        arithmetic, pack the pools once into the serving cache (§11),
+        adopt the sorted snapshot as the range path's scan pool (§12),
+        preallocate the write-tier capacity buckets, and device-verify
+        every key's placement (§8 — divergent keys are shadowed).
+
+        ``ikeys`` carries the raw 64-bit identity keys when ``pkeys``
+        are flow-transformed; identity defaults to the positioning key
+        bits otherwise."""
         pk64 = np.asarray(pkeys, dtype=np.float64)
         ik64 = pk64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
         pv = np.asarray(payloads, dtype=np.int64)
@@ -887,7 +917,9 @@ class FlatAFLI:
         self._serve_flow = (normalizer, flow_cfg, packed_w, shapes)
 
     def contains_batch(self, ikeys: np.ndarray) -> np.ndarray:
-        """Exact membership by 64-bit identity (tree + write tiers)."""
+        """Exact membership by 64-bit identity (tree + write tiers,
+        DESIGN.md §12: tracks the *live* identity set — a tombstoned key
+        is absent until re-inserted)."""
         hi, lo = split_key_bits(np.asarray(ikeys, dtype=np.float64))
         ids = self._id_set
         return np.fromiter((int(u) in ids for u in _ids64(hi, lo)),
@@ -933,19 +965,35 @@ class FlatAFLI:
         self._sync_tiers()
         return self._serving.tier_pack()
 
-    def _device_lookup(self, pk32: np.ndarray, hi: np.ndarray,
-                       lo: np.ndarray, *, arrays=None, pools=None,
-                       max_depth=None, dense_window=None,
-                       tiers: bool = True) -> np.ndarray:
-        """Non-flow kernel dispatch.  The keyword overrides let the
-        incremental fold verify a *candidate* structure (new arrays/pools,
-        tiers excluded) while the old one keeps serving."""
+    def _device_lookup_async(self, pk32: np.ndarray, hi: np.ndarray,
+                             lo: np.ndarray, *, arrays=None, pools=None,
+                             max_depth=None, dense_window=None,
+                             tiers: bool = True):
+        """Non-flow kernel dispatch, left on device: returns ``(res
+        device array, n)`` WITHOUT forcing a host transfer, so a caller
+        fanning one batch out across shard devices (DESIGN.md §13) can
+        dispatch every shard before blocking on any result.  The keyword
+        overrides let the incremental fold verify a *candidate*
+        structure (new arrays/pools, tiers excluded) while the old one
+        keeps serving."""
         from repro.kernels import ops
+
+        if arrays is None and self.arrays is None:
+            # not built yet (insert-before-build, or an empty shard of a
+            # sharded index, DESIGN.md §13): there is no static
+            # structure to probe — every query resolves from the write
+            # tiers alone via the host probe the finisher runs
+            self.last_dispatch = {"path": "unbuilt", "n_dispatch": 0,
+                                  "tier_path": "host", "host_probe": True,
+                                  "retraced": False}
+            return np.full(pk32.shape[0], -1, np.int32), pk32.shape[0]
 
         # pad to power-of-two buckets: ragged request batches would
         # recompile the kernel / traversal loop per distinct size
+        from repro.kernels.backend import pow2_batch
+
         n = pk32.shape[0]
-        n_pad = max(1 << max(n - 1, 0).bit_length(), 64)
+        n_pad = pow2_batch(n)
         if n_pad != n:
             pk32 = np.pad(pk32, (0, n_pad - n))
             hi = np.pad(hi, (0, n_pad - n))
@@ -963,8 +1011,16 @@ class FlatAFLI:
             tiers=self._tier_pack if tiers else None,
             vmem_budget=self.cfg.vmem_budget
             if self.cfg.use_fused_kernel else 0,
+            sync=False,
         )
-        return np.array(res)[:n]
+        return res, n
+
+    def _device_lookup(self, pk32: np.ndarray, hi: np.ndarray,
+                       lo: np.ndarray, **kw) -> np.ndarray:
+        """Non-flow kernel dispatch (DESIGN.md §9/§10), synchronous form
+        of ``_device_lookup_async``."""
+        res, n = self._device_lookup_async(pk32, hi, lo, **kw)
+        return np.asarray(res)[:n]
 
     def _self_verify(self, pk32, hi, lo, pv) -> None:
         """Device-verified placement (DESIGN.md §8).
@@ -1053,18 +1109,40 @@ class FlatAFLI:
                        np.where(run_pay != -1, run_pay, res))
         return np.where(out == TOMBSTONE, -1, out).astype(res.dtype)
 
-    def lookup_batch(self, keys: np.ndarray,
-                     ikeys: np.ndarray | None = None) -> np.ndarray:
-        """keys: positioning keys (must match build-time pkeys); ikeys:
-        identity keys when positioning keys are flow-transformed."""
+    def lookup_batch_async(self, keys: np.ndarray,
+                           ikeys: np.ndarray | None = None):
+        """Dispatch a batched lookup and return a zero-arg *finisher*
+        instead of blocking on the result.
+
+        The kernel call is in flight when this returns; calling the
+        finisher transfers the device result (and runs the host tier
+        probe if the kernel could not take the tiers).  The sharded
+        serving layer (DESIGN.md §13) dispatches one of these per shard
+        before finishing any, so per-shard kernels on distinct devices
+        overlap instead of serializing on each host transfer."""
         k64 = np.asarray(keys, dtype=np.float64)
         ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
         hi, lo = split_key_bits(ik64)
         q32 = k64.astype(np.float32)
-        res = self._device_lookup(q32, hi, lo)
-        if self.last_dispatch.get("host_probe", True):
-            res = self._probe_delta(res, q32, hi, lo)
-        return res
+        res_dev, n = self._device_lookup_async(q32, hi, lo)
+        host_probe = self.last_dispatch.get("host_probe", True)
+
+        def finish() -> np.ndarray:
+            res = np.asarray(res_dev)[:n]
+            if host_probe:
+                return self._probe_delta(res, q32, hi, lo)
+            return res
+
+        return finish
+
+    def lookup_batch(self, keys: np.ndarray,
+                     ikeys: np.ndarray | None = None) -> np.ndarray:
+        """Batched point lookups on the fused serve path (DESIGN.md
+        §9/§10): one kernel dispatch resolves traversal AND write tiers;
+        -1 marks not-found.  keys: positioning keys (must match
+        build-time pkeys); ikeys: identity keys when positioning keys
+        are flow-transformed."""
+        return self.lookup_batch_async(keys, ikeys)()
 
     def _flow_device_lookup(self, feats: np.ndarray, hi: np.ndarray,
                             lo: np.ndarray, packed_w, shapes, *,
@@ -1073,9 +1151,10 @@ class FlatAFLI:
         """Fused NF + traversal dispatch; returns (payloads, serve pkeys).
         Keyword overrides as in ``_device_lookup`` (fold verification)."""
         from repro.kernels import ops
+        from repro.kernels.backend import pow2_batch
 
         n = feats.shape[0]
-        n_pad = max(1 << max(n - 1, 0).bit_length(), 64)
+        n_pad = pow2_batch(n)
         if n_pad != n:
             feats = np.pad(feats, ((0, n_pad - n), (0, 0)))
             hi = np.pad(hi, (0, n_pad - n))
@@ -1166,10 +1245,11 @@ class FlatAFLI:
         the budget, bit-identical host oracle otherwise).  Zero-padded
         lanes have equal endpoints -> empty ranges, sliced off."""
         from repro.kernels import ops
+        from repro.kernels.backend import pow2_batch
 
         cap = int(cap if cap is not None else self.cfg.scan_cap)
         n = feats_lo.shape[0]
-        n_pad = max(1 << max(n - 1, 0).bit_length(), 64)
+        n_pad = pow2_batch(n)
         if n_pad != n:
             feats_lo = np.pad(feats_lo, ((0, n_pad - n), (0, 0)))
             feats_hi = np.pad(feats_hi, ((0, n_pad - n), (0, 0)))
@@ -1416,8 +1496,9 @@ class FlatAFLI:
 
     def rebuild(self) -> None:
         """Fold every write tier into the static structure synchronously
-        (the incremental fold run to completion in one call — the batched
-        Modelling).  ``insert_batch`` amortizes the same work instead."""
+        (DESIGN.md §10: the incremental fold run to completion in one
+        call — the batched Modelling).  ``insert_batch`` amortizes the
+        same work instead; this is the maintenance/test hook."""
         if self.arrays is None:
             return
         # a fold already in flight consumed a snapshot that excludes any
@@ -1428,7 +1509,20 @@ class FlatAFLI:
         while self._fold is not None:
             self._fold_tick(1 << 62)
 
+    def serving_telemetry(self) -> dict:
+        """The serving-side slice of ``NFL.dispatch_stats()`` (DESIGN.md
+        §11): the persistent ``ServingState`` counters plus the host
+        fallback counts for the point and range routes."""
+        return {
+            "serving": self._serving.stats(),
+            "host_tier_probes": self.n_host_tier_probes,
+            "host_scans": self.n_host_scans,
+        }
+
     def stats(self):
+        """Structure + write-path counters (DESIGN.md §10–§12): pool
+        sizes, tier lengths, fold state, rebuild/host-fallback counts,
+        and the nested ``ServingState`` counters."""
         a = self.arrays
         return {
             "n_nodes": int(a.node_kind.shape[0]) if a is not None else 0,

@@ -23,6 +23,11 @@ Two serving backends (DESIGN.md §9):
   (so update == insert of an existing key), tombstone deletes, and fused
   tier-merged range scans (``scan_batch`` / ``lookup_range``, DESIGN.md
   §12) — a batch of [lo, hi) ranges is one ``pallas_call`` end to end.
+* ``backend="flat", shards=P`` — the flat pipeline partitioned across P
+  devices at flow-CDF boundaries (DESIGN.md §13): a jit-fused router
+  bins each batch, the per-shard fused kernels fan out concurrently,
+  and results gather back to input order; every shard runs its own
+  write tiers and incremental folds.
 """
 
 from __future__ import annotations
@@ -52,6 +57,8 @@ class NFLConfig:
     gamma: float = 0.99
     force_flow: Optional[bool] = None  # None -> paper's switching mechanism
     backend: str = "afli"              # "afli" (paper tree) | "flat" (fused)
+    shards: int = 1                    # flat backend: key-space shards, one
+                                       # device each (DESIGN.md §13)
 
 
 class NFL:
@@ -60,7 +67,13 @@ class NFL:
     def __init__(self, config: NFLConfig | None = None):
         self.cfg = config or NFLConfig()
         if self.cfg.backend == "flat":
-            self.index = FlatAFLI(self.cfg.flat_index)
+            if self.cfg.shards > 1:
+                from repro.core.sharded_nfl import ShardedFlatAFLI
+
+                self.index = ShardedFlatAFLI(self.cfg.flat_index,
+                                             n_shards=self.cfg.shards)
+            else:
+                self.index = FlatAFLI(self.cfg.flat_index)
         elif self.cfg.backend == "afli":
             self.index = AFLI(self.cfg.index)
         else:
@@ -272,17 +285,18 @@ class NFL:
 
     def dispatch_stats(self):
         """Serving-path telemetry for benchmarks and ops dashboards
-        (DESIGN.md §11/§12): the fused-dispatch counters (fallbacks,
+        (DESIGN.md §11/§12/§13): the fused-dispatch counters (fallbacks,
         tier routing, ``retrace_count``) and the range-scan counters
         (scan dispatches, oracle fallbacks, ``scan_cap`` truncations)
         plus, on the flat backend, the persistent serving-state counters
         (pack reuse, tier prefix uploads, full repacks) and the host
-        tier-probe / host-scan fallback counts."""
+        tier-probe / host-scan fallback counts.  With ``shards > 1`` the
+        serving block is the cross-shard aggregate, and ``shards`` /
+        ``router`` break out the per-shard counters and the fan-out
+        accounting."""
         from repro.kernels.ops import fused_lookup_stats
 
         out = {"dispatch": fused_lookup_stats()}
         if self.cfg.backend == "flat":
-            out["serving"] = self.index._serving.stats()
-            out["host_tier_probes"] = self.index.n_host_tier_probes
-            out["host_scans"] = self.index.n_host_scans
+            out.update(self.index.serving_telemetry())
         return out

@@ -53,8 +53,12 @@ def pow2_bucket(n: int, floor: int = _LANE) -> int:
 
 
 # ------------------------------------------------------------------ jitted
-# device-side prefix writes: one cache entry per (capacity, prefix) shape
-# pair — a bounded ladder (log2 x log2), warmed once per bucket.
+# device-side prefix writes: ONE cache entry per (capacity, dtype) pair
+# per device — refreshes always ship the full capacity bucket, so there
+# is no pow2 rung ladder to warm.  (Shipping the live prefix rounded to
+# a smaller pow2 saved bytes but minted a fresh ~40ms XLA compile per
+# rung crossing — multiplied by P devices on a sharded index (§13), the
+# ladder put steady-state writes back on the compile path.)
 @jax.jit
 def _write_prefix(buf: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.dynamic_update_slice(buf, vals, (0,))
@@ -66,7 +70,8 @@ def _write_len(buf: jnp.ndarray, n) -> jnp.ndarray:
 
 
 class DeviceTier:
-    """One sorted write tier in a persistent bucketed device buffer.
+    """One sorted write tier in a persistent bucketed device buffer
+    (DESIGN.md §11 bucket ladder; also backs the §12 scan pool).
 
     Layout matches ``_pack_tier``: pk f32 / hi u32 / lo u32 / pv i32 at
     bucket capacity, plus an i32[128] length lane with the live length
@@ -134,14 +139,15 @@ class DeviceTier:
             self._alloc(max(need, self.capacity), pk, hi, lo, pv, n)
             self.length = n
             return
-        # in-bucket: ship the padded live prefix, leave the rest
-        # resident.  n+1, not n: the row at index n must be rewritten to
-        # +inf even when n is an exact power of two — the fixed-round
-        # tier binary search reads ppk[n] once converged at l=h=n, and a
-        # stale finite key there would push the landing (and its scan
-        # window) one slot high.  capacity >= pow2(n+1) is guaranteed on
-        # this branch by the `need` check above.
-        m = min(pow2_bucket(n + 1, floor=64), self.capacity)
+        # in-bucket: overwrite the whole resident bucket (ONE traced
+        # shape per capacity — see the ladder note above; the extra
+        # bytes are a bounded host->device copy, off the read path).
+        # Writing the full bucket also rewrites every row past n to
+        # +inf, which the probe depends on: the fixed-round tier binary
+        # search reads ppk[n] once converged at l=h=n, and a stale
+        # finite key there would push the landing (and its scan window)
+        # one slot high.
+        m = self.capacity
         ppk = np.full(m, np.inf, np.float32)
         ppk[:n] = pk
         phi = np.zeros(m, np.uint32)
@@ -194,9 +200,10 @@ class ServingState:
     # ------------------------------------------------------------- tree
     def set_tree(self, arrays, pools=None, *, max_depth: int,
                  dense_window: int) -> None:
-        """Adopt a (re)built static structure.  ``pools`` may be packed
-        ahead of time (the incremental fold packs off the serve path);
-        statics ratchet so a shallower new tree cannot retrace."""
+        """Adopt a (re)built static structure (DESIGN.md §11
+        invalidation points 1 and 2).  ``pools`` may be packed ahead of
+        time (the incremental fold packs off the serve path); statics
+        ratchet so a shallower new tree cannot retrace."""
         from repro.core.flat_afli import _depth_round, _window_round
 
         if pools is None:
@@ -212,15 +219,17 @@ class ServingState:
             self.dense_window = _window_round(dense_window)
 
     def set_scan(self, pk, hi, lo, pv, window: int) -> None:
-        """Adopt the (re)built structure's rank-ordered scan pool.
-        Called only at build / fold swap — off the serve path — so range
-        serving finds the pool resident and pays nothing."""
+        """Adopt the (re)built structure's rank-ordered scan pool
+        (DESIGN.md §12).  Called only at build / fold swap — off the
+        serve path — so range serving finds the pool resident and pays
+        nothing."""
         self.scan.refresh(pk, hi, lo, pv, window)
 
     def scan_pack(self):
-        """The resident ``ScanPack``.  Always materializes: before the
-        first build the pool rides along empty (lower bounds collapse,
-        every range resolves from the write tiers alone)."""
+        """The resident ``ScanPack`` for ``ops.fused_range_scan``
+        (DESIGN.md §12).  Always materializes: before the first build
+        the pool rides along empty (lower bounds collapse, every range
+        resolves from the write tiers alone)."""
         from repro.kernels.range_scan import ScanPack, ScanPool
 
         if self.scan.pk is None:
@@ -303,9 +312,10 @@ class ServingState:
             self._delta_dirty = False
 
     def tier_pack(self):
-        """The resident ``TierPack`` (``None`` while both tiers are
-        empty).  Requires the tiers to be clean — ``FlatAFLI`` refreshes
-        on mutation and before dispatch."""
+        """The resident ``TierPack`` for the in-kernel tier probe
+        (DESIGN.md §10/§11; ``None`` while both tiers are empty, so the
+        probe stage compiles out).  Requires the tiers to be clean —
+        ``FlatAFLI`` refreshes on mutation and before dispatch."""
         from repro.kernels.fused_lookup import TierPack, TierPools
 
         if not (self.run.length or self.delta.length):
@@ -327,6 +337,10 @@ class ServingState:
 
     # ------------------------------------------------------------ stats
     def stats(self) -> dict:
+        """Zero-repack telemetry (DESIGN.md §11): pack reuse, prefix
+        uploads (count + bytes), full repacks, resident capacities, and
+        the ratcheted statics — the counters the serving benchmarks
+        assert on instead of inferring compiles from tail latency."""
         return {
             "tree_packs": self.tree_packs,
             "tier_reuses": self.tier_reuses,

@@ -1,0 +1,469 @@
+"""Sharded key-space serving: P FlatAFLI shards, one device each
+(DESIGN.md §13).
+
+A single ``FlatAFLI`` caps serving throughput at one chip no matter how
+fast the fused kernels get.  ``ShardedFlatAFLI`` splits the *positioning
+key domain* (z-space when the flow is on) into P contiguous shards at
+boundaries drawn from the trained flow's CDF (``kernels/shard_dispatch
+.choose_boundaries`` — equal-mass quantiles of the build snapshot, so
+shards are balanced in z-space regardless of raw-key skew), builds one
+complete ``FlatAFLI`` + ``ServingState`` per shard, and places each
+shard's device pools on its own device via the ``repro.dist.sharding``
+mesh utilities (``shard_mesh``).
+
+Serving a mixed batch is a three-step dataflow:
+
+1. **route** — one jit-fused dispatch bins the batch by boundary
+   lower-bound (``route`` / ``route_flow``; with the flow on, the NF
+   forward and the binning fuse into a single compiled call).  The
+   routed z rides the SAME ``nf_forward_pallas`` path that positioned
+   every build and insert, so routing, placement, and probing all agree
+   bit-for-bit — the sharded route has no in-kernel NF
+   re-materialization hazard and therefore needs no flow shadows (§8
+   applies per shard, through each shard's own build verification);
+2. **fan out** — the existing fused lookup / tier-probe / range-scan
+   kernels run per shard on that shard's local pools.  Point lookups
+   dispatch through ``FlatAFLI.lookup_batch_async`` for every shard
+   *before* finishing any, so kernels on distinct devices execute
+   concurrently (JAX async dispatch) and the gather pays one transfer
+   per shard;
+3. **gather** — results scatter back to input order through the inverse
+   of the stable shard-major binning permutation.  Range queries that
+   straddle a boundary split into one sub-range per touched shard
+   (``split_ranges``) and merge on the way back: sub-results concatenate
+   in shard order, which IS global positioning-key order because the
+   sub-ranges tile the query interval and each shard's pools hold only
+   in-domain keys.
+
+Writes route identically: each shard runs its own active delta,
+compacted run, and incremental fold, so a fold on one (busy) shard never
+stalls serving on the others — fold work is charged to the inserts that
+route to that shard, and the §11 zero-repack guarantees hold per shard.
+
+``NFL(backend="flat", shards=P)`` builds one of these transparently;
+``benchmarks.common.ShardedNFLAdapter`` exposes it to the harness.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.flat_afli import (
+    FlatAFLI,
+    FlatAFLIConfig,
+    _ids64,
+    split_key_bits,
+)
+from repro.dist.sharding import named_sharding, shard_mesh
+from repro.kernels.shard_dispatch import (
+    bin_by_shard,
+    choose_boundaries,
+    route,
+    route_flow,
+    split_ranges,
+)
+
+__all__ = ["ShardedFlatAFLI"]
+
+
+class ShardedFlatAFLI:
+    """P-way key-space-partitioned FlatAFLI behind the FlatAFLI serving
+    surface (DESIGN.md §13) — ``NFL`` drives it exactly like the single
+    index: ``build`` / ``lookup_batch(_flow)`` / ``insert_batch`` /
+    ``delete_batch`` / ``scan_batch(_flow)`` / ``contains_batch`` /
+    ``verify_serve_flow`` / ``rebuild`` / ``stats``."""
+
+    def __init__(self, cfg: FlatAFLIConfig | None = None,
+                 n_shards: int = 2, devices: Optional[list] = None):
+        self.cfg = cfg or FlatAFLIConfig()
+        self.n_shards = max(int(n_shards), 1)
+        if devices is None:
+            self.mesh, self.devices = shard_mesh(self.n_shards)
+        else:
+            self.mesh, self.devices = None, list(devices)
+            if len(self.devices) < self.n_shards:
+                self.devices = [self.devices[s % len(self.devices)]
+                                for s in range(self.n_shards)]
+        self.shards: List[FlatAFLI] = [FlatAFLI(self.cfg)
+                                       for _ in range(self.n_shards)]
+        self.boundaries = np.empty(0, np.float32)   # f32[P-1], host copy
+        self._boundaries_dev = None                 # replicated device copy
+        self._serve_flow = None
+        self._router = {
+            "point_batches": 0, "point_queries": 0,
+            "write_batches": 0, "write_keys": 0,
+            "range_batches": 0, "range_queries": 0,
+            "range_subqueries": 0, "straddling_ranges": 0,
+            "per_shard_points": [0] * self.n_shards,
+            "per_shard_writes": [0] * self.n_shards,
+            "per_shard_ranges": [0] * self.n_shards,
+        }
+
+    # ------------------------------------------------------------ helpers
+    @contextlib.contextmanager
+    def _on(self, s: int):
+        """Pin shard ``s``'s device as the dispatch default: pools built
+        or refreshed inside land on (and serve from) ``devices[s]``."""
+        with jax.default_device(self.devices[s]):
+            yield
+
+    def _set_boundaries(self, boundaries: np.ndarray) -> None:
+        import jax.numpy as jnp
+
+        self.boundaries = np.asarray(boundaries, np.float32)
+        if self.boundaries.shape[0] == 0:
+            self._boundaries_dev = None
+            return
+        b = jnp.asarray(self.boundaries)
+        if self.mesh is not None:
+            # tiny (P-1 floats) but serve-critical: replicate explicitly
+            # across the shard mesh so the router never waits on a
+            # cross-device fetch — the dist package's one-liner for it
+            b = jax.device_put(b, named_sharding(self.mesh))
+        self._boundaries_dev = b
+
+    def _route_points(self, z32: np.ndarray) -> np.ndarray:
+        return route(z32, self.boundaries)
+
+    # -------------------------------------------------------------- build
+    def build(self, pkeys: np.ndarray, payloads: np.ndarray,
+              ikeys: np.ndarray | None = None) -> None:
+        """Partition the bulk-load snapshot at flow-CDF quantiles and
+        build one FlatAFLI per shard on its own device.  Partitioning
+        compares the same f32 positioning keys the router compares, so
+        build placement and query routing agree exactly."""
+        pk64 = np.asarray(pkeys, dtype=np.float64)
+        ik64 = pk64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
+        pv = np.asarray(payloads, dtype=np.int64)
+        pk32 = pk64.astype(np.float32)
+        self._set_boundaries(
+            choose_boundaries(np.sort(pk32, kind="stable"), self.n_shards))
+        sids = self._route_points(pk32)
+        order, counts, _inv = bin_by_shard(sids, self.n_shards)
+        start = 0
+        for s, c in enumerate(counts):
+            seg = order[start:start + int(c)]
+            start += int(c)
+            with self._on(s):
+                if seg.shape[0]:
+                    self.shards[s].build(pk64[seg], pv[seg], ikeys=ik64[seg])
+                # an empty shard stays unbuilt: reads resolve to misses
+                # through the pre-build path, writes buffer in its tiers
+
+    def set_serve_flow(self, normalizer, flow_cfg, packed_w, shapes) -> None:
+        """Register the serve-path flow for the router.  NOT forwarded
+        to the shards: sharded serving computes z once at the router
+        (the build-path ``nf_forward_pallas`` kernel) and probes every
+        shard through the non-flow route, so there is no per-shard
+        in-kernel NF whose divergence a fold would need to re-verify —
+        each shard's §8 placement verification covers the rest."""
+        self._serve_flow = (normalizer, flow_cfg, packed_w, shapes)
+
+    def verify_serve_flow(self, feats: np.ndarray, ikeys: np.ndarray,
+                          packed_w, shapes, payloads: np.ndarray) -> int:
+        """§8 for the sharded route: re-run every built key through the
+        actual serve path (fused route -> per-shard fused lookup).  A
+        key the serve path cannot resolve is shadowed into the shard the
+        *router* targets (run-tier append keyed by serve z), and any
+        stale copy bookkept by a different shard is tombstoned there, so
+        cross-shard routing drift can never surface as a miss.  Returns
+        the number of repaired keys (0 in practice: router z and build z
+        ride the same NF kernel)."""
+        z, sids = route_flow(feats, packed_w, shapes, self._boundaries_dev)
+        res = self._fanout_points(z.astype(np.float64), ikeys, sids)
+        pv = np.asarray(payloads)
+        wrong = res != pv.astype(res.dtype)
+        if not wrong.any():
+            return 0
+        ik64 = np.asarray(ikeys, dtype=np.float64)
+        hi, lo = split_key_bits(ik64)
+        ids = _ids64(hi, lo)
+        for s in np.unique(sids[wrong]):
+            m = wrong & (sids == s)
+            idx = self.shards[int(s)]
+            with self._on(int(s)):
+                idx._append_run(z[m].astype(np.float32), hi[m], lo[m],
+                                pv[m].astype(np.int32))
+            for u in ids[m].tolist():
+                if u not in idx._id_set:
+                    idx._id_set.add(u)
+                    idx.n_keys += 1
+        # tombstone stale copies bookkept by other shards
+        for t, other in enumerate(self.shards):
+            m = wrong & (sids != t)
+            stale = m & np.fromiter(
+                (int(u) in other._id_set for u in ids),
+                bool, count=ids.shape[0])
+            if stale.any():
+                with self._on(t):
+                    other.delete_batch(z[stale].astype(np.float64),
+                                       ikeys=ik64[stale])
+        return int(wrong.sum())
+
+    def contains_batch(self, ikeys: np.ndarray) -> np.ndarray:
+        """Exact membership by 64-bit identity, across all shards —
+        the key bits are split once and tested against every shard's
+        live-id set in a single pass (set lookups short-circuit), not
+        P full per-shard passes."""
+        hi, lo = split_key_bits(np.asarray(ikeys, dtype=np.float64))
+        id_sets = [idx._id_set for idx in self.shards]
+        return np.fromiter(
+            (any(int(u) in s for s in id_sets)
+             for u in _ids64(hi, lo)),
+            bool, count=hi.shape[0])
+
+    # ------------------------------------------------------------- points
+    def _fanout_points(self, pk64: np.ndarray, ik64: np.ndarray,
+                       sids: np.ndarray) -> np.ndarray:
+        """Dispatch every shard's sub-batch before finishing any (the
+        fan-out/gather of DESIGN.md §13), then restore input order."""
+        order, counts, inv = bin_by_shard(sids, self.n_shards)
+        ik64 = np.asarray(ik64, dtype=np.float64)
+        finishers = []
+        start = 0
+        for s, c in enumerate(counts):
+            c = int(c)
+            seg = order[start:start + c]
+            start += c
+            self._router["per_shard_points"][s] += c
+            if not c:
+                finishers.append(None)
+                continue
+            with self._on(s):
+                finishers.append(self.shards[s].lookup_batch_async(
+                    pk64[seg], ikeys=ik64[seg]))
+        parts = [f() for f in finishers if f is not None]
+        if not parts:
+            return np.full(sids.shape[0], -1, np.int32)
+        return np.concatenate(parts)[inv]
+
+    def lookup_batch(self, keys: np.ndarray,
+                     ikeys: np.ndarray | None = None) -> np.ndarray:
+        """Batched point lookups; ``keys`` are positioning keys (raw
+        keys when the flow is off)."""
+        k64 = np.asarray(keys, dtype=np.float64)
+        ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
+        sids = self._route_points(k64.astype(np.float32))
+        self._router["point_batches"] += 1
+        self._router["point_queries"] += int(k64.shape[0])
+        return self._fanout_points(k64, ik64, sids)
+
+    def lookup_batch_flow(self, feats: np.ndarray, ikeys: np.ndarray,
+                          packed_w, shapes) -> np.ndarray:
+        """Flow-on point serving: ONE fused router dispatch (NF forward
+        + boundary binning), then the per-shard fused kernels probe by
+        the routed z — identity resolution and the in-kernel tier probes
+        work exactly as on the single index."""
+        z, sids = route_flow(feats, packed_w, shapes, self._boundaries_dev)
+        self._router["point_batches"] += 1
+        self._router["point_queries"] += int(z.shape[0])
+        return self._fanout_points(z.astype(np.float64), ikeys, sids)
+
+    # ------------------------------------------------------------- writes
+    def insert_batch(self, keys: np.ndarray, payloads: np.ndarray,
+                     ikeys: np.ndarray | None = None) -> None:
+        """Route the batch and append per shard: each shard's delta /
+        run / incremental fold advances independently (§10 per shard),
+        so a fold triggered on one shard is paid for only by the inserts
+        routed there."""
+        k64 = np.asarray(keys, dtype=np.float64)
+        ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
+        pv = np.asarray(payloads, dtype=np.int32)
+        sids = self._route_points(k64.astype(np.float32))
+        order, counts, _inv = bin_by_shard(sids, self.n_shards)
+        self._router["write_batches"] += 1
+        self._router["write_keys"] += int(k64.shape[0])
+        start = 0
+        for s, c in enumerate(counts):
+            c = int(c)
+            seg = order[start:start + c]
+            start += c
+            self._router["per_shard_writes"][s] += c
+            if not c:
+                continue
+            with self._on(s):
+                self.shards[s].insert_batch(k64[seg], pv[seg],
+                                            ikeys=ik64[seg])
+
+    def delete_batch(self, keys: np.ndarray,
+                     ikeys: np.ndarray | None = None) -> np.ndarray:
+        """Tombstone deletes, routed like inserts; per-key success flags
+        gather back to input order."""
+        k64 = np.asarray(keys, dtype=np.float64)
+        ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
+        sids = self._route_points(k64.astype(np.float32))
+        order, counts, inv = bin_by_shard(sids, self.n_shards)
+        self._router["write_batches"] += 1
+        self._router["write_keys"] += int(k64.shape[0])
+        parts = []
+        start = 0
+        for s, c in enumerate(counts):
+            c = int(c)
+            seg = order[start:start + c]
+            start += c
+            self._router["per_shard_writes"][s] += c
+            if not c:
+                continue
+            with self._on(s):
+                parts.append(self.shards[s].delete_batch(k64[seg],
+                                                         ikeys=ik64[seg]))
+        if not parts:
+            return np.zeros(k64.shape[0], bool)
+        return np.concatenate(parts)[inv]
+
+    # ------------------------------------------------------------- ranges
+    def scan_batch(self, lo_keys: np.ndarray, hi_keys: np.ndarray,
+                   cap: int | None = None):
+        """Batched ``[lo, hi)`` range scans across shards (§12 per
+        shard, §13 split/merge)."""
+        lo32 = np.asarray(lo_keys, dtype=np.float64).astype(np.float32)
+        hi32 = np.asarray(hi_keys, dtype=np.float64).astype(np.float32)
+        return self._fanout_scan(lo32, hi32, cap)
+
+    def scan_batch_flow(self, feats_lo: np.ndarray, feats_hi: np.ndarray,
+                        packed_w, shapes, cap: int | None = None):
+        """Flow-on ranges: BOTH endpoint batches ride one concatenated
+        router NF dispatch (splitting happens on host anyway), then
+        split/fan out/merge in z-space."""
+        n = np.asarray(feats_lo).shape[0]
+        z, _ = route_flow(np.concatenate([feats_lo, feats_hi]),
+                          packed_w, shapes, self._boundaries_dev)
+        return self._fanout_scan(z[:n], z[n:], cap)
+
+    def _fanout_scan(self, zlo32: np.ndarray, zhi32: np.ndarray,
+                     cap: int | None):
+        """Split straddling ranges at shard boundaries, scan each shard
+        locally, merge sub-results back in z order (DESIGN.md §13).
+
+        Merge semantics: sub-ranges tile ``[zlo, zhi)`` and shard order
+        is z order, so concatenating each sub-scan's live lanes in shard
+        order reproduces the single-index emission exactly while every
+        sub-scan's candidate work stays bounded by ``cap``.  ``totals``
+        sums the per-shard candidate totals (the single-index count);
+        ``counts`` re-truncates at ``cap``.  When an earlier sub-range
+        is itself truncated, later sub-ranges of that query are dropped
+        from the lanes (their candidates would leave a z-order gap) but
+        still counted in ``totals`` — exceeding ``cap`` flags truncation
+        either way."""
+        cap = int(cap if cap is not None else self.cfg.scan_cap)
+        n = int(zlo32.shape[0])
+        qid, sid, sub_lo, sub_hi = split_ranges(zlo32, zhi32,
+                                                self.boundaries)
+        m = int(qid.shape[0])
+        self._router["range_batches"] += 1
+        self._router["range_queries"] += n
+        self._router["range_subqueries"] += m
+        spans = np.bincount(qid, minlength=n)
+        self._router["straddling_ranges"] += int((spans > 1).sum())
+        out = np.full((n, cap), -1, np.int32)
+        cnt = np.zeros(n, np.int32)
+        tot = np.zeros(n, np.int64)
+        if not m:
+            return out, cnt, tot.astype(np.int32)
+        sub_pv = np.empty((m, cap), np.int32)
+        sub_cnt = np.empty(m, np.int32)
+        sub_tot = np.empty(m, np.int64)
+        order, counts, _inv = bin_by_shard(sid, self.n_shards)
+        start = 0
+        for s, c in enumerate(counts):
+            c = int(c)
+            seg = order[start:start + c]
+            start += c
+            self._router["per_shard_ranges"][s] += c
+            if not c:
+                continue
+            with self._on(s):
+                pv_s, cnt_s, tot_s = self.shards[s].scan_batch(
+                    sub_lo[seg].astype(np.float64),
+                    sub_hi[seg].astype(np.float64), cap=cap)
+            sub_pv[seg] = pv_s[:, :cap]
+            sub_cnt[seg] = cnt_s
+            sub_tot[seg] = tot_s
+        # ---- merge: sub-queries are qid-major, shard ascending == z
+        # ascending.  Lane offset of sub-query j = lanes emitted by the
+        # earlier sub-queries of the same query.
+        first = np.searchsorted(qid, np.arange(n))  # first sub of each q
+        trunc = sub_tot > cap
+        a = np.cumsum(trunc) - trunc               # exclusive cumsum
+        dropped = (a - a[np.clip(first[qid], 0, max(m - 1, 0))]) > 0
+        eff_cnt = np.where(dropped, 0, sub_cnt)
+        csum = np.cumsum(eff_cnt) - eff_cnt        # exclusive cumsum
+        offset = csum - csum[np.clip(first[qid], 0, max(m - 1, 0))]
+        lane = np.arange(cap)[None, :]
+        dest = offset[:, None] + lane
+        keep = (lane < eff_cnt[:, None]) & (dest < cap)
+        rows = np.broadcast_to(qid[:, None], (m, cap))
+        out[rows[keep], dest[keep]] = sub_pv[keep]
+        cnt = np.minimum(
+            np.bincount(qid, weights=eff_cnt, minlength=n), cap
+        ).astype(np.int32)
+        tot = np.bincount(qid, weights=sub_tot, minlength=n).astype(np.int64)
+        return out, cnt, np.clip(tot, 0, np.iinfo(np.int32).max
+                                 ).astype(np.int32)
+
+    # ---------------------------------------------------------------- misc
+    def rebuild(self) -> None:
+        """Fold every shard's write tiers synchronously (maintenance /
+        test hook; production serving relies on per-shard incremental
+        folds instead)."""
+        for s, idx in enumerate(self.shards):
+            with self._on(s):
+                idx.rebuild()
+
+    @property
+    def n_keys(self) -> int:
+        return int(sum(idx.n_keys for idx in self.shards))
+
+    @property
+    def n_host_tier_probes(self) -> int:
+        return int(sum(idx.n_host_tier_probes for idx in self.shards))
+
+    @property
+    def n_host_scans(self) -> int:
+        return int(sum(idx.n_host_scans for idx in self.shards))
+
+    def serving_telemetry(self) -> dict:
+        """Aggregated ``NFL.dispatch_stats()`` slice (§11/§13): summed
+        ServingState counters, per-shard breakdowns, and the router's
+        fan-out accounting."""
+        per_shard = [idx.serving_telemetry() for idx in self.shards]
+        # counters sum across shards; gauges (resident capacities,
+        # ratcheted statics) take the max — a summed depth bound would
+        # describe no kernel anywhere
+        gauges = {"static_max_depth", "static_dense_window",
+                  "run_capacity", "delta_capacity", "scan_capacity"}
+        agg: dict = {}
+        for t in per_shard:
+            for k, v in t["serving"].items():
+                agg[k] = max(agg.get(k, 0), v) if k in gauges \
+                    else agg.get(k, 0) + v
+        return {
+            "serving": agg,
+            "host_tier_probes": self.n_host_tier_probes,
+            "host_scans": self.n_host_scans,
+            "shards": per_shard,
+            "router": {k: (list(v) if isinstance(v, list) else v)
+                       for k, v in self._router.items()},
+        }
+
+    def stats(self) -> dict:
+        shard_stats = [idx.stats() for idx in self.shards]
+        return {
+            "n_shards": self.n_shards,
+            "n_keys": self.n_keys,
+            "boundaries": self.boundaries.tolist(),
+            "devices": [str(d) for d in self.devices],
+            "fold_active": any(s["fold_active"] for s in shard_stats),
+            "n_rebuilds": sum(s["n_rebuilds"] for s in shard_stats),
+            "max_depth": max((s["max_depth"] for s in shard_stats),
+                             default=1),
+            "n_host_tier_probes": self.n_host_tier_probes,
+            "n_host_scans": self.n_host_scans,
+            "router": {k: (list(v) if isinstance(v, list) else v)
+                       for k, v in self._router.items()},
+            "shards": shard_stats,
+        }

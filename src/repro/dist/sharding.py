@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 __all__ = [
     "LOGICAL_RULES", "logical_to_spec", "guarded_spec", "constrain",
     "mesh_scope", "current_mesh", "named_sharding", "param_sharding",
+    "shard_mesh",
 ]
 
 # logical axis -> ordered candidate mesh axes (filtered by mesh presence)
@@ -45,6 +46,8 @@ LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
     "d_inner": ("model",),
     # pipeline stages
     "stage": ("pipe",),
+    # key-space shard of the learned-index serving layer (DESIGN.md §13)
+    "shard": ("shard",),
     # replicated-by-default dims (named for documentation value)
     "embed": (),
     "seq": (),
@@ -98,6 +101,29 @@ def guarded_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
                  mesh) -> P:
     """``logical_to_spec`` that also drops axes ``shape`` cannot divide."""
     return _lower(axes, mesh, shape=shape)
+
+
+def shard_mesh(n_shards: int, axis: str = "shard"):
+    """1-D device mesh for key-space-sharded index serving (DESIGN.md
+    §13): shard ``s`` of the partitioned key domain lives on
+    ``devices[s]``.
+
+    Returns ``(mesh, devices)`` where ``devices`` has exactly
+    ``n_shards`` entries — when the host exposes fewer physical devices
+    than shards (the CPU validation platform without
+    ``--xla_force_host_platform_device_count``), shards wrap round-robin
+    onto the available devices and the mesh covers the distinct devices
+    actually used.  ``mesh`` is ``None`` for the degenerate single-
+    device case so callers can treat it as the usual no-mesh scope."""
+    avail = jax.devices()
+    devices = [avail[s % len(avail)] for s in range(max(int(n_shards), 1))]
+    distinct = list(dict.fromkeys(devices))
+    if len(distinct) < 2:
+        return None, devices
+    import numpy as _np
+
+    mesh = jax.sharding.Mesh(_np.asarray(distinct), (axis,))
+    return mesh, devices
 
 
 # --------------------------------------------------------------- mesh scope

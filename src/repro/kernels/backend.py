@@ -13,7 +13,16 @@ from typing import Optional
 
 import jax
 
-__all__ = ["should_interpret", "resolve_interpret"]
+__all__ = ["should_interpret", "resolve_interpret", "pow2_batch"]
+
+
+def pow2_batch(n: int, floor: int = 64) -> int:
+    """Serve-path request-batch bucket: the power-of-two pad size every
+    dispatch route uses for ragged query batches (DESIGN.md §11 — one
+    traced kernel shape per bucket instead of one per distinct batch
+    size).  Shared so the routes' trace buckets can never silently
+    diverge."""
+    return max(1 << max(int(n) - 1, 0).bit_length(), floor)
 
 
 def should_interpret() -> bool:

@@ -144,7 +144,7 @@ def serving_cache_size() -> int:
 def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
                  max_depth: int, dense_iters: int, bucket_cap: int,
                  dense_window: int = 8, tiers=None, vmem_budget=None,
-                 tile=None, interpret=None):
+                 tile=None, interpret=None, sync: bool = True):
     """Dispatch shim for the fused single-dispatch lookup (DESIGN.md §9).
 
     When the packed pools fit the VMEM budget, the whole read path — NF
@@ -164,7 +164,10 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
     tiers are probed *in-kernel* (DESIGN.md §10) and no host-side delta
     probe is needed.
 
-    Returns ``(payload i32[n], positioning_key f32[n], info)`` as numpy.
+    Returns ``(payload i32[n], positioning_key f32[n], info)`` as numpy
+    — or as device arrays when ``sync=False``, which dispatches without
+    blocking on the result so a sharded caller (DESIGN.md §13) can fan a
+    batch out across devices and gather once all shards are in flight.
     ``info`` records the chosen path, dispatch count, and the tier
     routing: ``tier_path`` is ``"kernel"`` (tiers resolved on device),
     ``"host"`` (caller must run the host ``_probe_delta`` oracle), or
@@ -239,6 +242,8 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
                 "tier_path": ("kernel" if kernel_tiers
                               else "host" if have_tiers else "none"),
                 "host_probe": have_tiers and not kernel_tiers}
+        if not sync:
+            return pay, z, info
         return np.asarray(pay), np.asarray(z), info
 
     # oracle fallback: pools exceed the budget -> keep them in HBM and use
@@ -261,6 +266,8 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
             "tier_bytes": tier_bytes, "retraced": retraced,
             "tier_path": "host" if have_tiers else "none",
             "host_probe": have_tiers}
+    if not sync:
+        return res, z, info
     return np.asarray(res), np.asarray(z), info
 
 
