@@ -40,7 +40,6 @@ from repro.core.flow import FlowConfig
 from repro.core.nfl import NFL, NFLConfig
 from repro.core.train_flow import FlowTrainConfig
 from repro.data.datasets import make_dataset
-from repro.kernels import ops
 
 DEFAULT_OUT = "BENCH_serving_state.json"
 WRITE_FRAC = 0.20  # the ISSUE-3 acceptance mix (80/20)
@@ -161,9 +160,7 @@ def _run_variant(keys, insert_pool, *, bucketed: bool, n_warmup: int,
     # ---- warmup: prime every shape bucket and the fold machinery,
     # then zero the telemetry so the measured window is steady state
     warm = driver.run(n_warmup, batch_size)
-    ops.reset_fused_lookup_stats()
-    nfl.index._serving.reset_stats()
-    nfl.index.n_host_tier_probes = 0
+    nfl.dispatch_stats(reset=True)
     warm["compiles"] = None  # counters were live during bulkload too;
     #                          per-phase counts start at the measure window
     meas = driver.run(n_ops, batch_size)

@@ -79,6 +79,14 @@ def _compare_rerun(name: str, base: dict, path: str):
             n_keys=n_keys, n_ops=int(w.get("n_ops", 8_192)),
             n_warmup=int(w.get("n_warmup", 6_144)),
             batch_size=int(w.get("batch_size", 256)), out_json=None)
+    if name.startswith("BENCH_drift"):
+        from benchmarks import bench_drift
+
+        return bench_drift.run(
+            n_keys=n_keys, n_drift=int(w.get("n_drift", 12_288)),
+            n_settle=int(w.get("n_settle", 6_144)),
+            n_steady=int(w.get("n_steady", 16_384)),
+            batch_size=int(w.get("batch_size", 256)), out_json=None)
     if name.startswith("BENCH_sharded"):
         # the sharded bench needs the baseline's forced device topology,
         # and XLA_FLAGS must land before jax initializes — jax is already
@@ -153,7 +161,8 @@ def main() -> None:
     ap.add_argument("--only", action="append", default=None,
                     help="tag filter, repeatable and/or comma-separated: "
                          "fig7,fig8,fig10,fig11,table1,table2,table3,"
-                         "roofline,fused,mixed,serving,range,sharded")
+                         "roofline,fused,mixed,serving,range,sharded,"
+                         "drift")
     ap.add_argument("--n-keys", type=int, default=None)
     ap.add_argument("--repeats", type=int, default=None,
                     help="timed repeats per variant in the repeat-based "
@@ -254,6 +263,21 @@ def main() -> None:
             rows += bench_range_scan.rows(bench_range_scan.run(
                 n_keys=max(n_keys, 65_536) if args.full else 65_536,
                 **({"repeats": args.repeats} if args.repeats else {})))
+    if want("drift"):
+        # §14 drift-robust serving: re-flow on/off/forced-failure under a
+        # drifting insert storm; emits BENCH_drift.json (smoke: a
+        # .smoke.json artifact so the verify.sh correctness gate sees the
+        # wrong counts without clobbering the committed baseline)
+        from benchmarks import bench_drift
+
+        if args.smoke:
+            rows += bench_drift.rows(bench_drift.run(
+                n_keys=n_keys, n_drift=4_096, n_settle=2_048,
+                n_steady=4_096, batch_size=128,
+                out_json="BENCH_drift.smoke.json"))
+        else:
+            rows += bench_drift.rows(bench_drift.run(
+                n_keys=max(n_keys, 32_768) if args.full else 32_768))
     if want("sharded"):
         # §13 sharded serving at P=1 vs P=4: needs a forced multi-device
         # host, and XLA_FLAGS must land before jax initializes — jax is

@@ -2,8 +2,9 @@
 # Pre-merge verification: docs checks (README/API snippets execute,
 # DESIGN.md § references + relative links resolve), the tier-1 test
 # suite, and a seconds-scale smoke of the serving-path benchmarks
-# (fused read path, mixed write path, §11 serving state), so a doc or
-# perf-path regression in any dispatch route is caught before it lands.
+# (fused read path, mixed write path, §11 serving state, §12 range
+# scans, §14 drift re-flow), so a doc or perf-path regression in any
+# dispatch route is caught before it lands.
 # Any "wrong" count > 0 in an emitted BENCH JSON fails the run.
 #
 # Usage:
@@ -39,11 +40,14 @@ run_phase python -m pytest -x -q "$@"
 echo "== serving-path smoke (fused + mixed + serving state + range) =="
 run_phase python -m benchmarks.run --smoke --only fused --only mixed \
   --only serving
-# the range smoke emits BENCH_range_scan.smoke.json so the correctness
-# gate below sees its wrong counts; the EXIT trap removes it on every
-# outcome — only the committed full-size BENCH_range_scan.json persists
-trap 'rm -f BENCH_range_scan.smoke.json' EXIT
+# the range and drift smokes emit BENCH_*.smoke.json so the correctness
+# gate below sees their wrong counts; the EXIT trap removes them on
+# every outcome — only the committed full-size baselines persist
+trap 'rm -f BENCH_range_scan.smoke.json BENCH_drift.smoke.json' EXIT
 run_phase python -m benchmarks.run --smoke --only range
+
+echo "== drift smoke (§14 re-flow on/off/forced-failure) =="
+run_phase python -m benchmarks.run --smoke --only drift
 
 echo "== bench JSON correctness gate (wrong > 0 fails) =="
 python - <<'PY'

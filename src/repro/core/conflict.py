@@ -21,6 +21,7 @@ __all__ = [
     "conflict_degrees",
     "tail_conflict_degree",
     "should_use_flow",
+    "accept_candidate",
 ]
 
 
@@ -116,3 +117,16 @@ def should_use_flow(
     tail_orig = dataset_tail_conflict(original_keys, gamma)
     tail_flow = dataset_tail_conflict(transformed_keys, gamma)
     return tail_flow < tail_orig, tail_orig, tail_flow
+
+
+def accept_candidate(tail_serving: int, tail_candidate: int,
+                     decay: float = 0.1) -> bool:
+    """Online analogue of the reference AutoSwitch's ``kConflictsDecay``
+    margin: a candidate transform may replace the serving one only when
+    its tail conflict degree beats the serving tail *strictly* AND by at
+    least ``decay * tail_serving`` — marginal wins are noise (the tails
+    are measured on a drifting sample) and a re-key fold is not free, so
+    ties and near-ties keep serving untouched (DESIGN.md §14)."""
+    ts = int(tail_serving)
+    tc = int(tail_candidate)
+    return tc < ts and (ts - tc) >= ts * float(decay)

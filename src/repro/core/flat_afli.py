@@ -476,11 +476,21 @@ class _IncrementalFold:
     over untouched.
     """
 
-    def __init__(self, idx: "FlatAFLI", pk, hi, lo, pv):
+    def __init__(self, idx: "FlatAFLI", pk, hi, lo, pv, reflow=None):
         self.idx = idx
         self.pk, self.hi, self.lo, self.pv = pk, hi, lo, pv
         self.n = int(pk.shape[0])
         self.step = max(int(idx.cfg.fold_step_keys), 1)
+        # re-flow fold (DESIGN.md §14): ``reflow = (transform_fn,
+        # serve_flow, on_swap)`` — the snapshot arrives already re-keyed
+        # under the CANDIDATE transform, so the candidate structure must
+        # be verified against the candidate's serve context, not the
+        # (still live) old one, and the swap installs the new transform
+        # atomically with the new arrays.
+        self.reflow = reflow
+        self.autoswitch_new = None  # §14: fresh verdict installed at swap
+        self.serve_flow_target = (reflow[1] if reflow is not None
+                                  else idx._serve_flow)
         self.builder = _Builder(idx.cfg, idx.d_tail)
         self.build_items = collections.deque()
         self.post_items = collections.deque()
@@ -571,7 +581,7 @@ class _IncrementalFold:
         self.max_depth_new = self.builder.max_depth + 1
         self.dense_window_new = _max_equal_run(self.pk) + 2
         for kind in (("verify",)
-                     + (("verify_flow",) if self.idx._serve_flow is not None
+                     + (("verify_flow",) if self.serve_flow_target is not None
                         else ())):
             for s in range(0, self.n, self.step):
                 # uniform chunk shapes: the final ragged chunk is slid
@@ -619,7 +629,7 @@ class _IncrementalFold:
         serve-path transform keep their shadow across folds."""
         from repro.core.feature import expand_features
 
-        normalizer, flow_cfg, packed_w, shapes = self.idx._serve_flow
+        normalizer, flow_cfg, packed_w, shapes = self.serve_flow_target
         hi, lo = self.hi[k_lo:k_hi], self.lo[k_lo:k_hi]
         pv = self.pv[k_lo:k_hi]
         ik64 = _ids64(hi, lo).view(np.float64)
@@ -637,6 +647,26 @@ class _IncrementalFold:
         idx.arrays = self.arrays_new
         idx.max_depth = self.max_depth_new
         idx.dense_window = self.dense_window_new
+        if self.reflow is not None:
+            transform_fn, serve_flow, _on_swap = self.reflow
+            # drop the upward-only ratchets to the candidate's geometry
+            # FIRST (§14): the drifted windows were the reason to
+            # re-flow, and the new transform was accepted because it
+            # does not need them — one retrace per shape is the price of
+            # adoption.  Every refresh below re-ratchets from this base
+            # to whatever the re-keyed data actually requires.
+            idx._serving.release_ratchets(max_depth=self.max_depth_new,
+                                          dense_window=self.dense_window_new)
+            # inserts that landed while the fold ran carry OLD-transform
+            # positioning keys; re-key them by identity so delta, run,
+            # and tree all speak the new z-space from the same instant
+            idx._rekey_delta(transform_fn)
+            idx._serve_flow = serve_flow
+            if self.autoswitch_new is not None:
+                # the build-time verdict describes the OLD transform;
+                # replace it with the candidate's (computed over the
+                # re-keyed snapshot in start_reflow)
+                idx.autoswitch = dict(self.autoswitch_new)
         # atomic serving swap: the pools were packed off the serve path
         # at finalize; statics ratchet inside the serving cache so the
         # warm jit entries survive the swap (§11)
@@ -669,6 +699,9 @@ class _IncrementalFold:
         idx._preallocate_tiers(self.n)  # n grew: ratchet capacity floors
         idx.n_rebuilds += 1
         idx._fold = None
+        if self.reflow is not None:
+            idx.n_reflows += 1
+            self.reflow[2]()  # on_swap: owner bookkeeping, strictly last
 
 
 @partial(jax.jit, static_argnames=("max_depth", "dense_iters", "bucket_cap",
@@ -793,6 +826,16 @@ class FlatAFLI:
         self._id_set = set()           # u64 identities currently indexed
         self._serve_flow = None        # (normalizer, flow_cfg, packed_w, shapes)
         self.n_rebuilds = 0
+        self.n_reflows = 0             # re-key folds completed (§14)
+        # sharded re-flow freeze (§14): while the parent coordinates a
+        # cross-shard re-key, this shard's writes must stay buffered in
+        # the tiers — starting a local fold would consume entries the
+        # parent snapshotted (double-apply at swap)
+        self._tier_hold = False
+        # build-time switching decision for THIS index's keyset (§13
+        # parity: each shard's sub-distribution judges the flow itself)
+        self.autoswitch = {"use_flow": None, "tail_original": 0,
+                           "tail_transformed": 0}
         self.n_host_tier_probes = 0    # host _probe_delta fallbacks taken
         self.n_host_scans = 0          # host _range_scan_host fallbacks
         self.last_scan_dispatch = {}   # ops.fused_range_scan info
@@ -841,6 +884,19 @@ class FlatAFLI:
                                      self.cfg.gamma)
         else:
             d = self.cfg.max_bucket
+        # per-index AutoSwitch verdict (§13/§14): would THIS keyset keep
+        # the transform its positioning keys came through?  With ikeys
+        # given (flow on upstream), compare the identity-key tail to the
+        # positioning-key tail; identity positioning trivially ties.
+        if ikeys is not None:
+            from repro.core.conflict import should_use_flow
+            use, t_orig, t_flow = should_use_flow(ik64, pk32, self.cfg.gamma)
+            self.autoswitch = {"use_flow": bool(use),
+                               "tail_original": int(t_orig),
+                               "tail_transformed": int(t_flow)}
+        else:
+            self.autoswitch = {"use_flow": False, "tail_original": int(d),
+                               "tail_transformed": int(d)}
         self.d_tail = int(np.clip(d, self.cfg.min_bucket, self.cfg.max_bucket))
 
         builder = _Builder(self.cfg, self.d_tail)
@@ -1433,6 +1489,10 @@ class FlatAFLI:
         bound."""
         budget = max(int(self.cfg.fold_step_keys),
                      int(self.cfg.fold_work_factor * max(n_batch, 1)))
+        if self._tier_hold:
+            # parent-coordinated re-flow in flight (§14): writes buffer
+            # in the tiers; fold/merge decisions resume after the swap
+            return
         if self._fold is not None:
             self._fold_tick(budget)
         if self._fold is None:
@@ -1447,38 +1507,48 @@ class FlatAFLI:
                 if self._fold is not None:
                     self._fold_tick(budget)
 
+    def _snapshot_live(self):
+        """Freeze the live keyset: merge the delta into the run, gather
+        static entries (oldest) + bucket entries + run (newest), dedup
+        by 64-bit identity with the newest copy winning, and physically
+        drop tombstoned identities (§12).  Returns sorted-by-age-rank
+        ``(pk, hi, lo, pv)`` — the fold snapshot, and the §14 re-flow's
+        complete picture of what must survive a re-key."""
+        self._merge_delta_into_run()
+        if self.arrays is not None:
+            et = np.asarray(self.arrays.etype)
+            data_mask = et == DATA
+            pk = np.asarray(self.arrays.ekey)[data_mask]
+            hi = np.asarray(self.arrays.ehi)[data_mask]
+            lo = np.asarray(self.arrays.elo)[data_mask]
+            pv = np.asarray(self.arrays.epayload)[data_mask]
+            blen = np.asarray(self.arrays.blen)
+            cap = self.cfg.max_bucket
+            bmask = np.arange(cap)[None, :] < blen[:, None]
+            pk = np.concatenate([pk, np.asarray(self.arrays.bkey)[bmask],
+                                 self._run_pk])
+            hi = np.concatenate([hi, np.asarray(self.arrays.bhi)[bmask],
+                                 self._run_hi])
+            lo = np.concatenate([lo, np.asarray(self.arrays.blo)[bmask],
+                                 self._run_lo])
+            pv = np.concatenate([pv, np.asarray(self.arrays.bpayload)[bmask],
+                                 self._run_pv])
+        else:  # unbuilt: the tiers hold everything
+            pk, hi, lo = self._run_pk, self._run_hi, self._run_lo
+            pv = self._run_pv
+        pk, hi, lo, pv = _dedup_newest(pk, hi, lo,
+                                       np.asarray(pv, np.int64))
+        live = pv != TOMBSTONE
+        if not live.all():
+            pk, hi, lo, pv = pk[live], hi[live], lo[live], pv[live]
+        return pk, hi, lo, pv
+
     def _fold_start(self) -> None:
         """Begin an incremental fold: freeze the write tiers into a
         snapshot (static entries oldest, run newest; last-write-wins dedup
         by identity) and seed the work queue.  Serving continues against
         the old structure + frozen tiers until the fold swaps in."""
-        self._merge_delta_into_run()
-        et = np.asarray(self.arrays.etype)
-        data_mask = et == DATA
-        pk = np.asarray(self.arrays.ekey)[data_mask]
-        hi = np.asarray(self.arrays.ehi)[data_mask]
-        lo = np.asarray(self.arrays.elo)[data_mask]
-        pv = np.asarray(self.arrays.epayload)[data_mask]
-        blen = np.asarray(self.arrays.blen)
-        cap = self.cfg.max_bucket
-        bmask = np.arange(cap)[None, :] < blen[:, None]
-        pk = np.concatenate([pk, np.asarray(self.arrays.bkey)[bmask],
-                             self._run_pk])
-        hi = np.concatenate([hi, np.asarray(self.arrays.bhi)[bmask],
-                             self._run_hi])
-        lo = np.concatenate([lo, np.asarray(self.arrays.blo)[bmask],
-                             self._run_lo])
-        pv = np.concatenate([pv, np.asarray(self.arrays.bpayload)[bmask],
-                             self._run_pv])
-        # dedup by 64-bit identity, newest copy wins (run entries and
-        # placement shadows come last), then physically drop tombstoned
-        # identities (§12): a delete whose tombstone is the newest copy
-        # leaves the snapshot — and therefore the rebuilt structure and
-        # its scan pool — entirely
-        pk, hi, lo, pv = _dedup_newest(pk, hi, lo, pv)
-        live = pv != TOMBSTONE
-        if not live.all():
-            pk, hi, lo, pv = pk[live], hi[live], lo[live], pv[live]
+        pk, hi, lo, pv = self._snapshot_live()
         if not pk.shape[0]:
             # everything tombstoned: nothing to fold into — the old
             # structure keeps serving with the tombstones masking it;
@@ -1487,6 +1557,87 @@ class FlatAFLI:
             return
         self._fold = _IncrementalFold(self, pk, hi, lo,
                                       pv.astype(np.int64))
+
+    # ------------------------------------------------------------ re-flow
+    def _rekey_delta(self, transform_fn) -> None:
+        """Recompute the active delta's positioning keys under a new
+        transform (§14 swap point).  Identities and payloads (including
+        tombstones — they keep masking by identity) are untouched;
+        entries re-sort stably by the new z.  Only marks the device twin
+        dirty: the caller refreshes via ``_sync_tiers`` AFTER the
+        ratchets settle, so the tier window is ratcheted by the re-keyed
+        data, not the drifted history."""
+        n = int(self._delta_pk.shape[0])
+        if not n:
+            return
+        ik64 = _ids64(self._delta_hi, self._delta_lo).view(np.float64)
+        pk = np.asarray(transform_fn(ik64), np.float64).astype(np.float32)
+        order = np.argsort(pk, kind="stable")
+        self._delta_pk = pk[order]
+        self._delta_hi = self._delta_hi[order]
+        self._delta_lo = self._delta_lo[order]
+        self._delta_pv = self._delta_pv[order]
+        self._serving.mark_delta_dirty()
+
+    def _rekey_tiers(self, transform_fn) -> None:
+        """Re-key BOTH write tiers in place (§14, unbuilt-index path:
+        there is no static structure to fold, so adopting a new
+        transform is a pure tier re-key)."""
+        self._rekey_delta(transform_fn)
+        n = int(self._run_pk.shape[0])
+        if n:
+            ik64 = _ids64(self._run_hi, self._run_lo).view(np.float64)
+            pk = np.asarray(transform_fn(ik64), np.float64).astype(np.float32)
+            order = np.argsort(pk, kind="stable")
+            self._run_pk = pk[order]
+            self._run_hi = self._run_hi[order]
+            self._run_lo = self._run_lo[order]
+            self._run_pv = self._run_pv[order]
+            self._serving.mark_run_dirty()
+        self._sync_tiers()
+
+    def start_reflow(self, transform_fn, serve_flow, on_swap) -> bool:
+        """Begin an atomic re-key of the whole index under a new
+        positioning transform (DESIGN.md §14).
+
+        ``transform_fn(ik64) -> z`` maps raw identity keys to the new
+        positioning keys (the candidate flow's forward, or identity);
+        ``serve_flow`` is the new serve context 4-tuple (or ``None`` for
+        identity); ``on_swap()`` runs exactly once, after the swap, so
+        the owner can install its own flow state at the same instant the
+        structure adopts it.  Returns False (caller retries later) when
+        a fold is already in flight — the §10 machinery supports one
+        snapshot at a time.  The re-key itself IS an incremental fold
+        over the re-transformed snapshot: serving continues against the
+        old structure + frozen tiers, bounded work per write batch, and
+        the verified swap is the adoption point."""
+        if self._fold is not None or self._tier_hold:
+            return False
+        pk, hi, lo, pv = self._snapshot_live()
+        if not pk.shape[0]:
+            # nothing indexed beyond tombstones: re-key the tiers in
+            # place and adopt the transform immediately
+            self._rekey_tiers(transform_fn)
+            self._serve_flow = serve_flow
+            self.n_reflows += 1
+            on_swap()
+            return True
+        ik64 = _ids64(hi, lo).view(np.float64)
+        new_pk = np.asarray(transform_fn(ik64), np.float64).astype(np.float32)
+        order = np.argsort(new_pk, kind="stable")
+        self._fold = _IncrementalFold(
+            self, new_pk[order], hi[order], lo[order],
+            pv[order].astype(np.int64),
+            reflow=(transform_fn, serve_flow, on_swap))
+        # the AutoSwitch verdict over the re-keyed snapshot (§13/§14):
+        # identity candidates tie and report use_flow=False
+        from repro.core.conflict import should_use_flow
+
+        use, t_orig, t_new = should_use_flow(ik64, new_pk, self.cfg.gamma)
+        self._fold.autoswitch_new = {"use_flow": bool(use),
+                                     "tail_original": int(t_orig),
+                                     "tail_transformed": int(t_new)}
+        return True
 
     def _fold_tick(self, budget: int) -> None:
         if self._fold is not None and self._fold.tick(budget):
@@ -1517,7 +1668,42 @@ class FlatAFLI:
             "serving": self._serving.stats(),
             "host_tier_probes": self.n_host_tier_probes,
             "host_scans": self.n_host_scans,
+            "autoswitch": dict(self.autoswitch),
         }
+
+    def drift_signals(self) -> dict:
+        """The structural drift indicators (DESIGN.md §14): everything
+        that ratchets or grows when the positioning transform stops
+        fitting the keys — probe geometry, tier pressure, fold cadence —
+        alongside the build-time AutoSwitch verdict.  The drift monitor's
+        score is the trigger; these are the corroborating symptoms."""
+        s = self._serving
+        return {
+            "max_depth": int(self.max_depth),
+            "static_max_depth": int(s.max_depth),
+            "static_dense_window": int(s.dense_window),
+            "run_window": int(s.run.window),
+            "delta_window": int(s.delta.window),
+            "delta_len": int(self._delta_pk.shape[0]),
+            "run_len": int(self._run_pk.shape[0]),
+            "run_ratio": float(self._run_pk.shape[0]
+                               / max(self.n_keys, 1)),
+            "fold_active": self._fold is not None,
+            "reflow_active": (self._fold is not None
+                              and self._fold.reflow is not None),
+            "n_rebuilds": int(self.n_rebuilds),
+            "n_reflows": int(self.n_reflows),
+            "autoswitch": dict(self.autoswitch),
+        }
+
+    def reset_telemetry(self) -> None:
+        """Zero the host fallback counters and the ServingState's
+        upload/repack accounting (gauges and ratchets are state, not
+        counters — they stay).  Pairs with ``fused_lookup_stats(reset=
+        True)`` so multi-phase benches read per-phase counts."""
+        self.n_host_tier_probes = 0
+        self.n_host_scans = 0
+        self._serving.reset_stats()
 
     def stats(self):
         """Structure + write-path counters (DESIGN.md §10–§12): pool
@@ -1534,6 +1720,7 @@ class FlatAFLI:
             "run_len": int(self._run_pk.shape[0]),
             "fold_active": self._fold is not None,
             "n_rebuilds": self.n_rebuilds,
+            "n_reflows": self.n_reflows,
             "n_host_tier_probes": self.n_host_tier_probes,
             "n_host_scans": self.n_host_scans,
             "scan_pool_len": int(self._scan_pk.shape[0]),

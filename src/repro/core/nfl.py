@@ -39,11 +39,12 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.afli import AFLI, AFLIConfig
-from repro.core.conflict import should_use_flow
+from repro.core.conflict import dataset_tail_conflict, should_use_flow
+from repro.core.drift import DriftConfig, DriftMonitor, ReflowManager
 from repro.core.feature import expand_features
 from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig
 from repro.core.flow import FlowConfig, transform_keys
-from repro.core.train_flow import FlowTrainConfig, train_flow
+from repro.core.train_flow import FlowTrainConfig, FlowTrainer, train_flow
 
 __all__ = ["NFL", "NFLConfig"]
 
@@ -59,6 +60,9 @@ class NFLConfig:
     backend: str = "afli"              # "afli" (paper tree) | "flat" (fused)
     shards: int = 1                    # flat backend: key-space shards, one
                                        # device each (DESIGN.md §13)
+    drift: DriftConfig = dataclasses.field(default_factory=DriftConfig)
+                                       # drift telemetry + background
+                                       # re-flow (flat backend, §14)
 
 
 class NFL:
@@ -84,6 +88,20 @@ class NFL:
         self.metrics: Dict[str, float] = {}
         self._packed_w = None   # pack_flow_weights block (flat backend)
         self._shapes = ()
+        # drift telemetry + background re-flow (DESIGN.md §14)
+        if self.cfg.drift.reflow and self.cfg.backend != "flat":
+            raise ValueError("drift.reflow requires backend='flat' (the "
+                             "re-key rides the incremental-fold machinery)")
+        self._drift: Optional[DriftMonitor] = None
+        self._reflow: Optional[ReflowManager] = None
+        if self.cfg.backend == "flat" and self.cfg.drift.enabled:
+            self._drift = DriftMonitor(self.cfg.drift)
+            self._reflow = ReflowManager(
+                self.cfg.drift, self._drift,
+                serving_tail=self._drift_serving_tail,
+                train_factory=self._drift_train_factory,
+                evaluate=self._drift_evaluate,
+                apply=self._drift_apply)
 
     # ------------------------------------------------------------ bulkload
     def bulkload(self, keys: np.ndarray, payloads: np.ndarray) -> None:
@@ -133,6 +151,13 @@ class NFL:
             self.index.bulkload(keys, payloads)
         t_build = time.perf_counter() - t0
 
+        if self._drift is not None:
+            # prime the reservoir with the build distribution and anchor
+            # the drift score at the accepted transform's tail (§14)
+            self._drift.seed(keys)
+            self._reflow.set_baseline(tail_flow if self.use_flow
+                                      else tail_orig)
+
         self.metrics = {
             **{f"flow_{k}": v for k, v in train_metrics.items()},
             "flow_train_s": t_train,
@@ -173,6 +198,88 @@ class NFL:
     def _pack_weights(self, params):
         return self._pack_weights_for(params, self.cfg.flow)
 
+    # ----------------------------------------------- drift callbacks (§14)
+    def _drift_serving_tail(self, sample: np.ndarray) -> int:
+        """Tail conflict degree of the reservoir sample under the
+        transform that is CURRENTLY serving — the drift monitor's
+        measured quantity.  Rides the host flow path (not the serving
+        kernels), so measuring drift never touches the serve-path jit
+        caches or counters."""
+        sample = np.asarray(sample, dtype=np.float64)
+        if self.use_flow:
+            z = np.asarray(transform_keys(self.flow_params, self.normalizer,
+                                          sample, self.cfg.flow), np.float64)
+            if not np.all(np.isfinite(z)):
+                raise ValueError("serving flow produced non-finite z on "
+                                 "the drift sample")
+            return dataset_tail_conflict(z, self.cfg.drift.gamma)
+        return dataset_tail_conflict(sample, self.cfg.drift.gamma)
+
+    def _drift_train_factory(self, sample: np.ndarray, attempt: int):
+        """Incremental retrainer over the (small) reservoir sample; the
+        attempt index perturbs the seed so a failed episode does not
+        deterministically repeat itself."""
+        d = self.cfg.drift
+        tcfg = FlowTrainConfig(
+            sample_frac=1.0,
+            epochs=max(int(d.train_epochs), 1),
+            batch_size=max(min(int(d.train_batch), len(sample)), 1),
+            lr=self.cfg.flow_train.lr,
+            seed=int(d.seed) + int(attempt),
+            feature_standardize=self.cfg.flow_train.feature_standardize)
+        return FlowTrainer(np.asarray(sample, np.float64),
+                           self.cfg.flow, tcfg)
+
+    def _drift_evaluate(self, trainer, sample: np.ndarray):
+        """Finish the retrained flow into a candidate and measure its
+        tail on the drift sample.  Raises on non-finite z — an unusable
+        candidate is a failed episode, never a served transform."""
+        params, normalizer, _metrics = trainer.result()
+        z = np.asarray(transform_keys(params, normalizer,
+                                      np.asarray(sample, np.float64),
+                                      self.cfg.flow), np.float64)
+        if not np.all(np.isfinite(z)):
+            raise ValueError("candidate flow produced non-finite z")
+        return (dataset_tail_conflict(z, self.cfg.drift.gamma),
+                (params, normalizer))
+
+    def _drift_apply(self, candidate, use_flow: bool,
+                     accepted_tail: int) -> bool:
+        """Start the atomic re-key under the accepted candidate (flow or
+        identity).  The index's ``start_reflow`` owns atomicity; the
+        ``on_swap`` callback installs the NFL-level flow state at the
+        same instant the structure adopts the new positioning keys, then
+        closes the manager's episode."""
+        if use_flow:
+            params, normalizer = candidate
+            packed_w, shapes = self._pack_weights(params)
+            flow_cfg = self.cfg.flow
+
+            def transform_fn(k64):
+                from repro.kernels.ops import nf_transform_keys
+
+                return nf_transform_keys(params, normalizer, k64, flow_cfg)
+
+            serve_ctx = (normalizer, flow_cfg, packed_w, shapes)
+
+            def on_swap():
+                self.use_flow = True
+                self.flow_params = params
+                self.normalizer = normalizer
+                self._packed_w, self._shapes = packed_w, shapes
+                self._reflow.note_swap()
+        else:  # flow -> identity: position by the raw keys again
+            def transform_fn(k64):
+                return np.asarray(k64, np.float64)
+
+            serve_ctx = None
+
+            def on_swap():
+                self.use_flow = False
+                self._reflow.note_swap()
+
+        return self.index.start_reflow(transform_fn, serve_ctx, on_swap)
+
     def _pkeys(self, keys: np.ndarray) -> np.ndarray:
         """Positioning keys for a batch of query keys (online NF inference)."""
         keys = np.asarray(keys, dtype=np.float64)
@@ -207,6 +314,9 @@ class NFL:
         if self.cfg.backend == "flat":
             self.index.insert_batch(
                 pkeys, payloads, ikeys=keys if self.use_flow else None)
+            if self._drift is not None:
+                self._drift.observe(keys)
+                self._reflow.tick()
             return
         insert = self.index.insert
         for i in range(keys.shape[0]):
@@ -283,7 +393,7 @@ class NFL:
     def stats(self):
         return self.index.stats()
 
-    def dispatch_stats(self):
+    def dispatch_stats(self, reset: bool = False):
         """Serving-path telemetry for benchmarks and ops dashboards
         (DESIGN.md §11/§12/§13): the fused-dispatch counters (fallbacks,
         tier routing, ``retrace_count``) and the range-scan counters
@@ -293,10 +403,25 @@ class NFL:
         tier-probe / host-scan fallback counts.  With ``shards > 1`` the
         serving block is the cross-shard aggregate, and ``shards`` /
         ``router`` break out the per-shard counters and the fan-out
-        accounting."""
+        accounting.  ``out["drift"]`` (flat backend) carries the §14
+        drift score, re-flow state-machine counters, and the structural
+        drift signals (per shard with ``shards > 1``).
+
+        ``reset=True`` zeroes the dispatch and serving *counters* after
+        snapshotting (gauges, ratchets, and the drift episode counters
+        are state and survive), so multi-phase benches and drift windows
+        read per-phase counts."""
         from repro.kernels.ops import fused_lookup_stats
 
-        out = {"dispatch": fused_lookup_stats()}
+        out = {"dispatch": fused_lookup_stats(reset=reset)}
         if self.cfg.backend == "flat":
             out.update(self.index.serving_telemetry())
+            if self._reflow is not None:
+                out["drift"] = {"enabled": True, "use_flow": self.use_flow,
+                                **self._reflow.stats(),
+                                "signals": self.index.drift_signals()}
+            else:
+                out["drift"] = {"enabled": False}
+            if reset:
+                self.index.reset_telemetry()
         return out

@@ -218,6 +218,24 @@ class ServingState:
             self.max_depth = _depth_round(max_depth)
             self.dense_window = _window_round(dense_window)
 
+    def release_ratchets(self, *, max_depth: int, dense_window: int) -> None:
+        """Drop the upward-only ratchets to a fresh geometry (DESIGN.md
+        §14).  Ratcheting exists because the *distribution is assumed
+        stationary* — a deeper probe window is assumed to come back.  A
+        re-flow swap breaks that assumption by construction: the new
+        transform was accepted precisely because its conflict tail is
+        smaller, so carrying the drifted geometry (huge dense windows,
+        wide tier scans) forward would spend the win on inert scanning
+        forever.  Called ONLY at a re-flow swap, before ``set_tree``;
+        the next dispatch per shape pays one retrace, which is the
+        documented, bounded price of adopting the new transform."""
+        from repro.core.flat_afli import _depth_round, _window_round
+
+        self.max_depth = _depth_round(max_depth)
+        self.dense_window = _window_round(dense_window)
+        for t in (self.run, self.delta, self.scan):
+            t.window = 4
+
     def set_scan(self, pk, hi, lo, pv, window: int) -> None:
         """Adopt the (re)built structure's rank-ordered scan pool
         (DESIGN.md §12).  Called only at build / fold swap — off the
@@ -356,6 +374,9 @@ class ServingState:
             "scan_capacity": self.scan.capacity,
             "static_max_depth": self.max_depth,
             "static_dense_window": self.dense_window,
+            "run_window": self.run.window,
+            "delta_window": self.delta.window,
+            "scan_window": self.scan.window,
         }
 
     def reset_stats(self) -> None:

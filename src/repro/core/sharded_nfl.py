@@ -53,21 +53,196 @@ import jax
 import numpy as np
 
 from repro.core.flat_afli import (
+    TOMBSTONE,
     FlatAFLI,
     FlatAFLIConfig,
+    _IncrementalFold,
     _ids64,
     split_key_bits,
 )
 from repro.dist.sharding import named_sharding, shard_mesh
 from repro.kernels.shard_dispatch import (
-    bin_by_shard,
     choose_boundaries,
+    fanout_plan,
     route,
     route_flow,
     split_ranges,
 )
 
 __all__ = ["ShardedFlatAFLI"]
+
+
+class _ShardedReflow:
+    """Cross-shard atomic re-key (DESIGN.md §14, sharded form).
+
+    A per-shard ``start_reflow`` would re-key each shard's keys in
+    place — but under a new transform the keys' z values move across
+    the OLD shard boundaries, so per-shard re-keys and the router would
+    permanently disagree.  Instead the re-key is coordinated globally:
+
+    1. **freeze** — snapshot every shard's live keyset
+       (``_snapshot_live``: tree + tiers, tombstones dropped) and put
+       the old shards on ``_tier_hold`` — their deltas keep absorbing
+       writes, but no local fold may consume entries this snapshot
+       already owns (double-apply at swap);
+    2. **re-partition** — transform all identities under the candidate,
+       re-derive the boundaries from the NEW flow's CDF
+       (``choose_boundaries`` over the re-keyed snapshot), and route
+       every key to its new shard;
+    3. **rebuild incrementally** — each non-empty shard gets a fresh
+       candidate ``FlatAFLI`` built by a standard ``_IncrementalFold``
+       on its own device, advanced by the bounded per-write budget
+       (serving continues against the OLD shards + boundaries
+       throughout);
+    4. **swap atomically** — when every candidate fold has verified and
+       swapped internally, the held deltas are re-keyed and routed by
+       the NEW boundaries into the candidates, then shards, boundaries,
+       and serve-flow context flip in one assignment block: route and
+       pools can never disagree, because no query observes new
+       boundaries with old pools or vice versa.
+    """
+
+    def __init__(self, parent: "ShardedFlatAFLI", transform_fn,
+                 serve_flow, on_swap):
+        from repro.core.conflict import (
+            conflict_degrees, fit_linear_model, should_use_flow,
+            tail_conflict_degree,
+        )
+
+        self.parent = parent
+        self.transform_fn = transform_fn
+        self.serve_flow = serve_flow
+        self.on_swap = on_swap
+        P = parent.n_shards
+        # 1. freeze: complete live keyset, one pass per shard
+        his, los, pvs = [], [], []
+        for s, idx in enumerate(parent.shards):
+            _pk, hi, lo, pv = idx._snapshot_live()
+            his.append(hi)
+            los.append(lo)
+            pvs.append(pv)
+            # the local fold (if any) duplicated part of this snapshot;
+            # the candidate structure supersedes it — kill it, and hold
+            # the tiers so post-snapshot writes stay in the delta until
+            # the swap re-keys them
+            idx._fold = None
+            idx._tier_hold = True
+        hi = np.concatenate(his) if his else np.empty(0, np.uint32)
+        lo = np.concatenate(los) if los else np.empty(0, np.uint32)
+        pv = np.concatenate(pvs) if pvs else np.empty(0, np.int64)
+        # 2. re-partition under the candidate transform
+        ik64 = _ids64(hi, lo).view(np.float64)
+        pk = np.asarray(transform_fn(ik64), np.float64).astype(np.float32)
+        order = np.argsort(pk, kind="stable")
+        pk, hi, lo = pk[order], hi[order], lo[order]
+        pv = np.asarray(pv, np.int64)[order]
+        self.boundaries_new = (choose_boundaries(pk, P) if pk.shape[0]
+                               else np.empty(0, np.float32))
+        sids = route(pk, self.boundaries_new)
+        segs, _inv = fanout_plan(sids, P)
+        # 3. fresh candidate per shard, built incrementally on-device
+        self.candidates = [FlatAFLI(parent.cfg) for _ in range(P)]
+        self.folds: List[Optional[_IncrementalFold]] = []
+        for s, seg in enumerate(segs):
+            if not seg.shape[0]:
+                self.folds.append(None)
+                continue
+            cand = self.candidates[s]
+            spk = pk[seg]
+            # the candidate's bucket tail mirrors FlatAFLI.build's
+            # conflict fit over ITS OWN sub-distribution
+            model = fit_linear_model(spk.astype(np.float64))
+            if spk.shape[0] >= 2 and model.slope > 0:
+                d = tail_conflict_degree(
+                    conflict_degrees(spk.astype(np.float64), model),
+                    parent.cfg.gamma)
+            else:
+                d = parent.cfg.max_bucket
+            cand.d_tail = int(np.clip(d, parent.cfg.min_bucket,
+                                      parent.cfg.max_bucket))
+            # per-shard AutoSwitch verdict over the candidate's own
+            # sub-distribution (§13/§14) — a fold-built candidate never
+            # runs build(), which is where the verdict normally lands
+            sik64 = _ids64(hi[seg], lo[seg]).view(np.float64)
+            use, t_orig, t_new = should_use_flow(sik64, spk,
+                                                 parent.cfg.gamma)
+            cand.autoswitch = {"use_flow": bool(use),
+                               "tail_original": int(t_orig),
+                               "tail_transformed": int(t_new)}
+            with parent._on(s):
+                self.folds.append(_IncrementalFold(
+                    cand, spk, hi[seg], lo[seg], pv[seg].astype(np.int64)))
+
+    def tick(self, budget: int) -> bool:
+        """Advance pending candidate folds round-robin under the
+        caller's budget; returns True once the swap has happened."""
+        pending = [(s, f) for s, f in enumerate(self.folds) if f is not None]
+        if pending:
+            share = max(budget // len(pending), 1)
+            for s, f in pending:
+                with self.parent._on(s):
+                    if f.tick(share):
+                        self.folds[s] = None
+        if any(f is not None for f in self.folds):
+            return False
+        self._swap_all()
+        return True
+
+    def _swap_all(self) -> None:
+        """4. the atomic flip: re-key the held deltas into the
+        candidates, then publish shards + boundaries + serve flow in one
+        block."""
+        parent = self.parent
+        P = parent.n_shards
+        # candidate id sets from their swapped scan mirrors (== their
+        # snapshot segments, tombstones already dropped)
+        id_sets = []
+        for cand in self.candidates:
+            ids = set(_ids64(cand._scan_hi, cand._scan_lo).tolist())
+            id_sets.append(ids)
+        # held deltas: writes that landed during the re-key, one copy
+        # per identity per old shard (append-time dedup), and each
+        # identity routes to exactly one old shard — so the concat holds
+        # at most one copy per identity
+        dhi, dlo, dpv = [], [], []
+        for idx in parent.shards:
+            if idx._delta_pk.shape[0]:
+                dhi.append(idx._delta_hi)
+                dlo.append(idx._delta_lo)
+                dpv.append(idx._delta_pv)
+        if dhi:
+            hi = np.concatenate(dhi)
+            lo = np.concatenate(dlo)
+            pv = np.concatenate(dpv)
+            ik64 = _ids64(hi, lo).view(np.float64)
+            pk = np.asarray(self.transform_fn(ik64),
+                            np.float64).astype(np.float32)
+            sids = route(pk, self.boundaries_new)
+            segs, _inv = fanout_plan(sids, P)
+            for s, seg in enumerate(segs):
+                if not seg.shape[0]:
+                    continue
+                cand = self.candidates[s]
+                with parent._on(s):
+                    cand._append_delta(pk[seg], hi[seg], lo[seg],
+                                       pv[seg].astype(np.int32))
+                for u, p in zip(_ids64(hi[seg], lo[seg]).tolist(),
+                                pv[seg].tolist()):
+                    if p == TOMBSTONE:
+                        id_sets[s].discard(u)
+                    else:
+                        id_sets[s].add(u)
+        for s, cand in enumerate(self.candidates):
+            cand._id_set = id_sets[s]
+            cand.n_keys = len(id_sets[s])
+            with parent._on(s):
+                cand._sync_tiers()
+        # ---- the flip: one assignment block, no query in between
+        parent.shards = self.candidates
+        parent._set_boundaries(self.boundaries_new)
+        parent._serve_flow = self.serve_flow
+        parent.n_reflows += 1
+        self.on_swap()
 
 
 class ShardedFlatAFLI:
@@ -93,6 +268,8 @@ class ShardedFlatAFLI:
         self.boundaries = np.empty(0, np.float32)   # f32[P-1], host copy
         self._boundaries_dev = None                 # replicated device copy
         self._serve_flow = None
+        self._reflow: Optional[_ShardedReflow] = None   # §14 coordinator
+        self.n_reflows = 0
         self._router = {
             "point_batches": 0, "point_queries": 0,
             "write_batches": 0, "write_keys": 0,
@@ -129,6 +306,32 @@ class ShardedFlatAFLI:
     def _route_points(self, z32: np.ndarray) -> np.ndarray:
         return route(z32, self.boundaries)
 
+    def _reflow_tick(self, n_batch: int) -> None:
+        """Advance an in-flight cross-shard re-key by the same bounded
+        budget a local fold would get — re-key progress is charged to
+        the writes, never to reads (§10/§14)."""
+        if self._reflow is None:
+            return
+        budget = max(int(self.cfg.fold_step_keys),
+                     int(self.cfg.fold_work_factor * max(n_batch, 1)))
+        if self._reflow.tick(budget):
+            self._reflow = None
+
+    def start_reflow(self, transform_fn, serve_flow, on_swap) -> bool:
+        """Begin the coordinated cross-shard re-key (DESIGN.md §14):
+        freeze + re-partition now, then candidate shards build
+        incrementally under the per-write budget while the old shards
+        and boundaries keep serving; the final swap flips shards,
+        boundaries, and the serve-flow context atomically.  Returns
+        False while a previous re-key is still in flight."""
+        if self._reflow is not None:
+            return False
+        self._reflow = _ShardedReflow(self, transform_fn, serve_flow,
+                                      on_swap)
+        # degenerate case (nothing indexed): all folds empty — swap now
+        self._reflow_tick(1)
+        return True
+
     # -------------------------------------------------------------- build
     def build(self, pkeys: np.ndarray, payloads: np.ndarray,
               ikeys: np.ndarray | None = None) -> None:
@@ -143,11 +346,8 @@ class ShardedFlatAFLI:
         self._set_boundaries(
             choose_boundaries(np.sort(pk32, kind="stable"), self.n_shards))
         sids = self._route_points(pk32)
-        order, counts, _inv = bin_by_shard(sids, self.n_shards)
-        start = 0
-        for s, c in enumerate(counts):
-            seg = order[start:start + int(c)]
-            start += int(c)
+        segs, _inv = fanout_plan(sids, self.n_shards)
+        for s, seg in enumerate(segs):
             with self._on(s):
                 if seg.shape[0]:
                     self.shards[s].build(pk64[seg], pv[seg], ikeys=ik64[seg])
@@ -221,14 +421,11 @@ class ShardedFlatAFLI:
                        sids: np.ndarray) -> np.ndarray:
         """Dispatch every shard's sub-batch before finishing any (the
         fan-out/gather of DESIGN.md §13), then restore input order."""
-        order, counts, inv = bin_by_shard(sids, self.n_shards)
+        segs, inv = fanout_plan(sids, self.n_shards)
         ik64 = np.asarray(ik64, dtype=np.float64)
         finishers = []
-        start = 0
-        for s, c in enumerate(counts):
-            c = int(c)
-            seg = order[start:start + c]
-            start += c
+        for s, seg in enumerate(segs):
+            c = int(seg.shape[0])
             self._router["per_shard_points"][s] += c
             if not c:
                 finishers.append(None)
@@ -274,20 +471,18 @@ class ShardedFlatAFLI:
         ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
         pv = np.asarray(payloads, dtype=np.int32)
         sids = self._route_points(k64.astype(np.float32))
-        order, counts, _inv = bin_by_shard(sids, self.n_shards)
+        segs, _inv = fanout_plan(sids, self.n_shards)
         self._router["write_batches"] += 1
         self._router["write_keys"] += int(k64.shape[0])
-        start = 0
-        for s, c in enumerate(counts):
-            c = int(c)
-            seg = order[start:start + c]
-            start += c
+        for s, seg in enumerate(segs):
+            c = int(seg.shape[0])
             self._router["per_shard_writes"][s] += c
             if not c:
                 continue
             with self._on(s):
                 self.shards[s].insert_batch(k64[seg], pv[seg],
                                             ikeys=ik64[seg])
+        self._reflow_tick(int(k64.shape[0]))
 
     def delete_batch(self, keys: np.ndarray,
                      ikeys: np.ndarray | None = None) -> np.ndarray:
@@ -296,21 +491,19 @@ class ShardedFlatAFLI:
         k64 = np.asarray(keys, dtype=np.float64)
         ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
         sids = self._route_points(k64.astype(np.float32))
-        order, counts, inv = bin_by_shard(sids, self.n_shards)
+        segs, inv = fanout_plan(sids, self.n_shards)
         self._router["write_batches"] += 1
         self._router["write_keys"] += int(k64.shape[0])
         parts = []
-        start = 0
-        for s, c in enumerate(counts):
-            c = int(c)
-            seg = order[start:start + c]
-            start += c
+        for s, seg in enumerate(segs):
+            c = int(seg.shape[0])
             self._router["per_shard_writes"][s] += c
             if not c:
                 continue
             with self._on(s):
                 parts.append(self.shards[s].delete_batch(k64[seg],
                                                          ikeys=ik64[seg]))
+        self._reflow_tick(int(k64.shape[0]))
         if not parts:
             return np.zeros(k64.shape[0], bool)
         return np.concatenate(parts)[inv]
@@ -367,12 +560,9 @@ class ShardedFlatAFLI:
         sub_pv = np.empty((m, cap), np.int32)
         sub_cnt = np.empty(m, np.int32)
         sub_tot = np.empty(m, np.int64)
-        order, counts, _inv = bin_by_shard(sid, self.n_shards)
-        start = 0
-        for s, c in enumerate(counts):
-            c = int(c)
-            seg = order[start:start + c]
-            start += c
+        segs, _inv = fanout_plan(sid, self.n_shards)
+        for s, seg in enumerate(segs):
+            c = int(seg.shape[0])
             self._router["per_shard_ranges"][s] += c
             if not c:
                 continue
@@ -409,7 +599,11 @@ class ShardedFlatAFLI:
     def rebuild(self) -> None:
         """Fold every shard's write tiers synchronously (maintenance /
         test hook; production serving relies on per-shard incremental
-        folds instead)."""
+        folds instead).  An in-flight cross-shard re-key is driven to
+        its swap first — rebuilding the old shards would waste the work
+        and re-freeze their tiers."""
+        while self._reflow is not None:
+            self._reflow_tick(1 << 50)
         for s, idx in enumerate(self.shards):
             with self._on(s):
                 idx.rebuild()
@@ -435,7 +629,8 @@ class ShardedFlatAFLI:
         # ratcheted statics) take the max — a summed depth bound would
         # describe no kernel anywhere
         gauges = {"static_max_depth", "static_dense_window",
-                  "run_capacity", "delta_capacity", "scan_capacity"}
+                  "run_capacity", "delta_capacity", "scan_capacity",
+                  "run_window", "delta_window", "scan_window"}
         agg: dict = {}
         for t in per_shard:
             for k, v in t["serving"].items():
@@ -450,6 +645,41 @@ class ShardedFlatAFLI:
                        for k, v in self._router.items()},
         }
 
+    def drift_signals(self) -> dict:
+        """§14 drift signals, aggregated the same way the serving
+        telemetry is: gauges take the worst shard, counters sum, and the
+        per-shard breakdown rides along so a drifting sub-distribution
+        is attributable."""
+        per = [idx.drift_signals() for idx in self.shards]
+        return {
+            "max_depth": max((p["max_depth"] for p in per), default=1),
+            "static_max_depth": max((p["static_max_depth"] for p in per),
+                                    default=4),
+            "static_dense_window": max((p["static_dense_window"]
+                                        for p in per), default=4),
+            "run_window": max((p["run_window"] for p in per), default=4),
+            "delta_window": max((p["delta_window"] for p in per), default=4),
+            "delta_len": sum(p["delta_len"] for p in per),
+            "run_len": sum(p["run_len"] for p in per),
+            "run_ratio": max((p["run_ratio"] for p in per), default=0.0),
+            "fold_active": any(p["fold_active"] for p in per),
+            "reflow_active": self._reflow is not None,
+            "n_rebuilds": sum(p["n_rebuilds"] for p in per),
+            "n_reflows": int(self.n_reflows),
+            "autoswitch": [p["autoswitch"] for p in per],
+            "shards": per,
+        }
+
+    def reset_telemetry(self) -> None:
+        """Per-shard counter reset plus the router's fan-out accounting
+        (per-shard lists reset to zeros; see ``FlatAFLI.reset_telemetry``
+        for what counts as a counter vs. state)."""
+        for idx in self.shards:
+            idx.reset_telemetry()
+        for k, v in self._router.items():
+            self._router[k] = [0] * self.n_shards if isinstance(v, list) \
+                else 0
+
     def stats(self) -> dict:
         shard_stats = [idx.stats() for idx in self.shards]
         return {
@@ -458,7 +688,9 @@ class ShardedFlatAFLI:
             "boundaries": self.boundaries.tolist(),
             "devices": [str(d) for d in self.devices],
             "fold_active": any(s["fold_active"] for s in shard_stats),
+            "reflow_active": self._reflow is not None,
             "n_rebuilds": sum(s["n_rebuilds"] for s in shard_stats),
+            "n_reflows": self.n_reflows,
             "max_depth": max((s["max_depth"] for s in shard_stats),
                              default=1),
             "n_host_tier_probes": self.n_host_tier_probes,

@@ -24,7 +24,7 @@ from repro.core.feature import KeyNormalizer, expand_features
 from repro.core.flow import FlowConfig, flow_forward_with_logdet, init_flow
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
-__all__ = ["FlowTrainConfig", "train_flow", "flow_nll"]
+__all__ = ["FlowTrainConfig", "FlowTrainer", "train_flow", "flow_nll"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +47,106 @@ def flow_nll(params, x, cfg: FlowConfig) -> jnp.ndarray:
     return -jnp.mean(logp + logdet)
 
 
+class FlowTrainer:
+    """The offline ``train_flow`` loop split into bounded ``step()``
+    units (one optimizer minibatch per call), so a *background* retrain
+    (``core/drift.py``, DESIGN.md §14) can amortize optimizer steps
+    across serving calls instead of stalling one of them for the whole
+    fit.  ``train_flow`` is a thin synchronous loop over this class, so
+    both paths produce identical parameters for identical inputs."""
+
+    def __init__(self, keys: np.ndarray, cfg: FlowConfig,
+                 tcfg: FlowTrainConfig | None = None):
+        tcfg = tcfg or FlowTrainConfig()
+        self.cfg = cfg
+        self.tcfg = tcfg
+        keys = np.asarray(keys, dtype=np.float64)
+        rng = np.random.default_rng(tcfg.seed)
+        n_sample = max(int(keys.shape[0] * tcfg.sample_frac),
+                       min(keys.shape[0], 1024))
+        sample = rng.choice(keys, size=min(n_sample, keys.shape[0]),
+                            replace=False)
+
+        self.normalizer = KeyNormalizer.fit(keys, scale=cfg.norm_scale)
+        feats = expand_features(sample, self.normalizer, cfg.dim, cfg.theta,
+                                dtype=np.float32)
+        # standardize feature columns so tanh layers see O(1) inputs; this
+        # is an affine (monotone) pre-map folded into the flow composition.
+        if tcfg.feature_standardize:
+            mu = feats.mean(axis=0)
+            sd = feats.std(axis=0) + 1e-6
+        else:
+            mu = np.zeros(cfg.dim, np.float32)
+            sd = np.ones(cfg.dim, np.float32)
+        self._mu, self._sd = mu, sd
+        feats = (feats - mu) / sd
+
+        self.params = init_flow(jax.random.PRNGKey(tcfg.seed), cfg)
+        ocfg = AdamWConfig(lr=tcfg.lr, grad_clip=1.0)
+        self._opt_state = adamw_init(self.params, ocfg)
+
+        @jax.jit
+        def step(p, s, x):
+            loss, g = jax.value_and_grad(lambda q: flow_nll(q, x, cfg))(p)
+            p2, s2, gn = adamw_update(g, s, p, ocfg)
+            return p2, s2, loss
+
+        self._step_fn = step
+        self._x_all = jnp.asarray(feats)
+        self._n = int(self._x_all.shape[0])
+        self._perm_rng = np.random.default_rng(tcfg.seed + 1)
+        self._order: np.ndarray | None = None
+        self._cursor = 0
+        self._epochs_done = 0
+        self.losses: list = []
+
+    @property
+    def done(self) -> bool:
+        return self._epochs_done >= self.tcfg.epochs
+
+    def step(self) -> bool:
+        """Run ONE optimizer minibatch; returns True once training is
+        complete.  Epoch boundaries reshuffle exactly like the offline
+        loop; a sample smaller than one batch trains zero steps per
+        epoch (``train_flow``'s behavior) and completes immediately."""
+        bs = self.tcfg.batch_size
+        if self.done:
+            return True
+        if self._order is None or self._cursor + bs > self._n:
+            if self._order is not None:
+                self._epochs_done += 1
+                if self.done:
+                    return True
+            if bs > self._n:
+                # no full batch fits: every epoch is zero steps
+                self._epochs_done = self.tcfg.epochs
+                return True
+            self._order = self._perm_rng.permutation(self._n)
+            self._cursor = 0
+        idx = self._order[self._cursor:self._cursor + bs]
+        self._cursor += bs
+        self.params, self._opt_state, loss = self._step_fn(
+            self.params, self._opt_state, self._x_all[idx])
+        self.losses.append(float(loss))
+        if self._cursor + bs > self._n:
+            self._epochs_done += 1
+            self._order = None
+        return self.done
+
+    def result(self) -> Tuple[Dict[str, Any], KeyNormalizer, Dict[str, float]]:
+        """(params, normalizer, metrics) — the ``train_flow`` return
+        contract, with feature standardization folded into the params."""
+        metrics = {
+            "final_loss": self.losses[-1] if self.losses else float("nan"),
+            "initial_loss": self.losses[0] if self.losses else float("nan"),
+            "n_steps": float(len(self.losses)),
+            "n_sample": float(self._n),
+        }
+        aux = {"feat_mu": jnp.asarray(self._mu),
+               "feat_sd": jnp.asarray(self._sd)}
+        return {**self.params, **aux}, self.normalizer, metrics
+
+
 def train_flow(
     keys: np.ndarray,
     cfg: FlowConfig,
@@ -56,53 +156,7 @@ def train_flow(
 
     Returns (params, normalizer, metrics).
     """
-    tcfg = tcfg or FlowTrainConfig()
-    keys = np.asarray(keys, dtype=np.float64)
-    rng = np.random.default_rng(tcfg.seed)
-    n_sample = max(int(keys.shape[0] * tcfg.sample_frac), min(keys.shape[0], 1024))
-    sample = rng.choice(keys, size=min(n_sample, keys.shape[0]), replace=False)
-
-    normalizer = KeyNormalizer.fit(keys, scale=cfg.norm_scale)
-    feats = expand_features(sample, normalizer, cfg.dim, cfg.theta, dtype=np.float32)
-    # standardize feature columns so tanh layers see O(1) inputs; this is an
-    # affine (monotone) pre-map folded into the flow composition.
-    if tcfg.feature_standardize:
-        mu = feats.mean(axis=0)
-        sd = feats.std(axis=0) + 1e-6
-    else:
-        mu = np.zeros(cfg.dim, np.float32)
-        sd = np.ones(cfg.dim, np.float32)
-    feats = (feats - mu) / sd
-
-    params = init_flow(jax.random.PRNGKey(tcfg.seed), cfg)
-    ocfg = AdamWConfig(lr=tcfg.lr, grad_clip=1.0)
-    opt_state = adamw_init(params, ocfg)
-
-    loss_fn = jax.jit(lambda p, x: flow_nll(p, x, cfg))
-    grad_fn = jax.jit(jax.value_and_grad(lambda p, x: flow_nll(p, x, cfg)))
-
-    @jax.jit
-    def step(p, s, x):
-        loss, g = jax.value_and_grad(lambda q: flow_nll(q, x, cfg))(p)
-        p2, s2, gn = adamw_update(g, s, p, ocfg)
-        return p2, s2, loss
-
-    x_all = jnp.asarray(feats)
-    n = x_all.shape[0]
-    losses = []
-    perm_rng = np.random.default_rng(tcfg.seed + 1)
-    for epoch in range(tcfg.epochs):
-        order = perm_rng.permutation(n)
-        for start in range(0, n - tcfg.batch_size + 1, tcfg.batch_size):
-            idx = order[start : start + tcfg.batch_size]
-            params, opt_state, loss = step(params, opt_state, x_all[idx])
-            losses.append(float(loss))
-    metrics = {
-        "final_loss": losses[-1] if losses else float("nan"),
-        "initial_loss": losses[0] if losses else float("nan"),
-        "n_steps": float(len(losses)),
-        "n_sample": float(n),
-    }
-    # fold standardization into the flow params wrapper
-    aux = {"feat_mu": jnp.asarray(mu), "feat_sd": jnp.asarray(sd)}
-    return {**params, **aux}, normalizer, metrics
+    trainer = FlowTrainer(keys, cfg, tcfg)
+    while not trainer.step():
+        pass
+    return trainer.result()

@@ -115,9 +115,16 @@ _FUSED_STATS = {
 }
 
 
-def fused_lookup_stats() -> Dict[str, int]:
-    """Snapshot of the cumulative fused-lookup dispatch counters."""
-    return dict(_FUSED_STATS)
+def fused_lookup_stats(reset: bool = False) -> Dict[str, int]:
+    """Snapshot of the cumulative fused-lookup dispatch counters.
+
+    ``reset=True`` zeroes the counters after snapshotting, so
+    multi-phase benchmarks and drift windows read per-phase counts
+    instead of totals accumulated by warmup/previous phases."""
+    out = dict(_FUSED_STATS)
+    if reset:
+        reset_fused_lookup_stats()
+    return out
 
 
 def reset_fused_lookup_stats() -> None:

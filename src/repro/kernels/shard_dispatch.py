@@ -40,6 +40,7 @@ __all__ = [
     "route",
     "route_flow",
     "bin_by_shard",
+    "fanout_plan",
     "split_ranges",
 ]
 
@@ -138,6 +139,23 @@ def bin_by_shard(sids: np.ndarray, n_shards: int
     inv = np.empty_like(order)
     inv[order] = np.arange(order.shape[0])
     return order, counts, inv
+
+
+def fanout_plan(sids: np.ndarray, n_shards: int
+                ) -> Tuple[list, np.ndarray]:
+    """``bin_by_shard`` unrolled into per-shard segments.
+
+    Returns ``(segments, inv)``: ``segments[s]`` is the stable index
+    array of the queries routed to shard ``s`` (input order preserved
+    within the shard — write batches stay age-ordered), and ``inv``
+    restores input order from the shard-major concatenation of
+    non-empty segment results.  Every fan-out call site walks this
+    exact plan, so the offset arithmetic lives in one place."""
+    order, counts, inv = bin_by_shard(sids, int(n_shards))
+    offs = np.zeros(int(n_shards) + 1, np.int64)
+    np.cumsum(counts, out=offs[1:])
+    segs = [order[offs[s]:offs[s + 1]] for s in range(int(n_shards))]
+    return segs, inv
 
 
 def split_ranges(zlo: np.ndarray, zhi: np.ndarray, boundaries

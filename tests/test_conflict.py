@@ -7,8 +7,8 @@ except ModuleNotFoundError:  # optional dep: seeded-random fallback
     from _hyp_fallback import given, settings, st
 
 from repro.core.conflict import (
-    LinearModel, conflict_degrees, dataset_tail_conflict, fit_linear_model,
-    should_use_flow, tail_conflict_degree,
+    LinearModel, accept_candidate, conflict_degrees, dataset_tail_conflict,
+    fit_linear_model, should_use_flow, tail_conflict_degree,
 )
 
 
@@ -65,3 +65,94 @@ def test_tail_conflict_bounds(degrees):
     d = np.asarray(degrees)
     t = tail_conflict_degree(d)
     assert d.min() <= t <= d.max()
+
+
+# ------------------------------------------------ brute-force oracle (§14)
+def _oracle_degrees(keys, model):
+    """Def 3.1 by dict counting: |{x : round(M(x)) == j}| per slot j."""
+    slots = {}
+    for k in keys:
+        j = int(np.rint(model.slope * float(k) + model.intercept))
+        slots[j] = slots.get(j, 0) + 1
+    return sorted(slots.values())
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6),
+                min_size=1, max_size=300))
+def test_conflict_degrees_match_oracle(raw):
+    keys = np.sort(np.asarray(raw, np.float64))
+    model = fit_linear_model(keys)
+    got = sorted(conflict_degrees(keys, model).tolist())
+    assert got == _oracle_degrees(keys, model)
+    assert sum(got) == keys.shape[0]  # every key lands in some slot
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=200),
+                min_size=1, max_size=200),
+       st.integers(min_value=0, max_value=100))
+def test_tail_conflict_matches_sorted_index_oracle(degrees, g100):
+    gamma = g100 / 100.0
+    d = np.asarray(degrees)
+    m = d.shape[0]
+    t = min(max(int(np.floor(m * gamma)), 1), m)
+    assert tail_conflict_degree(d, gamma) == int(np.sort(d)[t - 1])
+
+
+def test_tail_conflict_gamma_edges():
+    d = np.array([3, 1, 7, 7, 2])
+    # gamma -> 0: t clamps to 1, the SMALLEST occupied-slot degree
+    assert tail_conflict_degree(d, gamma=0.0) == 1
+    assert tail_conflict_degree(d, gamma=1e-9) == 1
+    # gamma = 1: t = m, the largest degree
+    assert tail_conflict_degree(d, gamma=1.0) == 7
+    # empty degree set reports the neutral degree 1
+    assert tail_conflict_degree(np.empty(0, np.int64)) == 1
+
+
+def test_dataset_tail_all_equal_keys():
+    # zero key variance -> slope-0 model -> every key in one slot
+    keys = np.full(257, 42.0)
+    assert dataset_tail_conflict(keys) == 257
+
+
+def test_dataset_tail_all_unique_uniform_grid():
+    # an exact arithmetic grid is the best case: one key per slot
+    keys = np.arange(1000, dtype=np.float64) * 11.5 + 3.0
+    assert dataset_tail_conflict(keys) == 1
+
+
+def test_should_use_flow_tie_keeps_identity():
+    # identical tails on both sides: the strict < keeps the raw keys
+    keys = np.arange(512, dtype=np.float64)
+    use, t_orig, t_new = should_use_flow(keys, keys + 100.0)
+    assert t_orig == t_new and not use
+
+
+# ------------------------------------------- re-flow margin gate (§14)
+def test_accept_candidate_margin():
+    # kConflictsDecay-style: accept only a >= 10% tail improvement
+    assert accept_candidate(100, 89)
+    assert accept_candidate(100, 90)       # exactly on the margin
+    assert not accept_candidate(100, 91)   # better, but not by enough
+    assert not accept_candidate(100, 100)  # tie is not an improvement
+    assert not accept_candidate(100, 101)  # regression
+    assert not accept_candidate(0, 0)
+    assert accept_candidate(1, 0)          # any win over a tiny tail
+    assert accept_candidate(100, 95, decay=0.05)  # margin is tunable
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=0, max_value=10_000))
+def test_accept_candidate_properties(ts, tc):
+    ok = accept_candidate(ts, tc, decay=0.1)
+    # acceptance implies a strict improvement of at least the margin
+    assert ok == (tc < ts and (ts - tc) >= ts * 0.1)
+    if ok:
+        assert tc < ts
+    # monotone: a strictly better candidate is never rejected when a
+    # worse one was accepted
+    if ok and tc > 0:
+        assert accept_candidate(ts, tc - 1, decay=0.1)

@@ -322,6 +322,39 @@ def test_empty_shard_serves():
     assert (nfl.lookup_batch(spread + 0.25) == np.arange(100) + 1000).all()
 
 
+def test_per_shard_autoswitch_divergence():
+    """AutoSwitch parity on the sharded route (§14): each shard records
+    the switching decision for ITS key sub-range, so a near-uniform
+    shard can disagree with a conflict-heavy sibling — and the per-shard
+    ``(use_flow, tail_original, tail_transformed)`` triple is exposed
+    through ``dispatch_stats()["shards"]``.
+
+    Built with the exact empirical-CDF transform (the ideal flow) so the
+    z-quantile partition is deterministic: shard 0 gets the arithmetic
+    grid (tail 1 — no transform can strictly improve it), shard 1 gets
+    the micro-clusters (transform wins by orders of magnitude)."""
+    rng = np.random.default_rng(11)
+    grid = np.arange(2000, dtype=np.float64) * 500.0
+    centers = 1e9 * (1.0 + np.arange(16) / 8.0)
+    clusters = np.unique(np.concatenate(
+        [c * (1 + rng.uniform(0, 1e-4, 125)) for c in centers]))
+    keys = np.unique(np.concatenate([grid, clusters]))
+    pv = np.arange(keys.shape[0], dtype=np.int64)
+    z = np.arange(keys.shape[0], dtype=np.float64) / keys.shape[0]
+    idx = ShardedFlatAFLI(FlatAFLIConfig(), n_shards=2)
+    idx.build(z, pv, ikeys=keys)
+    sw = [t["autoswitch"] for t in idx.serving_telemetry()["shards"]]
+    for s in sw:
+        assert set(s) == {"use_flow", "tail_original", "tail_transformed"}
+    assert [s["use_flow"] for s in sw] == [False, True]
+    assert sw[0]["tail_original"] == 1  # the grid is already perfect
+    assert sw[1]["tail_transformed"] < sw[1]["tail_original"]
+    # the same triples ride the aggregated drift signals
+    assert idx.drift_signals()["autoswitch"] == sw
+    # correctness is unaffected by the divergent verdicts
+    assert (idx.lookup_batch(z[::3], ikeys=keys[::3]) == pv[::3]).all()
+
+
 def test_dispatch_stats_aggregation():
     keys, pv = _keyset(7)
     nfl = _mk(2, keys, pv)
@@ -333,7 +366,8 @@ def test_dispatch_stats_aggregation():
     agg = ds["serving"]
     per = [t["serving"] for t in ds["shards"]]
     gauges = {"static_max_depth", "static_dense_window",
-              "run_capacity", "delta_capacity", "scan_capacity"}
+              "run_capacity", "delta_capacity", "scan_capacity",
+              "run_window", "delta_window", "scan_window"}
     for k in agg:
         if k in gauges:  # gauges aggregate with max, not sum
             assert agg[k] == max(t[k] for t in per)
