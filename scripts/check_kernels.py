@@ -1,0 +1,24 @@
+#!/usr/bin/env python
+"""CI gate for the kernel contracts (DESIGN.md §15): thin wrapper over
+``python -m repro.analysis`` so verify.sh has a stable entry point.
+
+Runs all three contract families (static jaxpr/HLO checks, the
+retrace-budget lattice drive, the VMEM proof) against the reviewed
+allowlist in ``scripts/kernel_contracts_allow.txt``, then the fixture
+self-test (every deliberately-broken kernel must still be caught).
+Exits nonzero on any unallowlisted blocking finding or missed fixture.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    rc = main(sys.argv[1:])
+    if rc == 0 and not sys.argv[1:]:
+        # default CI invocation also self-tests the checker
+        rc = main(["--fixtures"])
+    sys.exit(rc)

@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""Lint gate for the serving-path sources (DESIGN.md §15 satellite).
+
+Runs ``ruff check`` (config: ruff.toml) over
+``src/repro/{analysis,core,kernels}`` when ruff is installed.  The
+hermetic CI image may not ship it, so absent ruff this falls back to a
+built-in AST pass covering the highest-signal pyflakes subset:
+
+- **F401** — module-level import never used (``__all__`` re-exports
+  and ``_``-prefixed names excused);
+- **F811** — the same name imported twice in one scope;
+- **E722** — bare ``except:`` (swallows ``KeyboardInterrupt`` and, per
+  the §15 lock-discipline rule, would swallow ``LockDisciplineError``).
+
+Exit status is nonzero on any finding; findings are ``file:line code
+message`` so editors and CI render them alike.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import shutil
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TARGETS = [os.path.join("src", "repro", d)
+           for d in ("analysis", "core", "kernels")]
+
+
+def _iter_py_files():
+    for target in TARGETS:
+        for dirpath, _dirs, files in os.walk(os.path.join(ROOT, target)):
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    yield os.path.join(dirpath, f)
+
+
+# --------------------------------------------------- AST fallback pass
+def _import_bindings(node):
+    """(name, lineno) pairs an import statement binds in its scope."""
+    out = []
+    if isinstance(node, ast.Import):
+        for alias in node.names:
+            name = alias.asname or alias.name.split(".")[0]
+            out.append((name, node.lineno))
+    elif isinstance(node, ast.ImportFrom):
+        if node.module == "__future__":
+            return out  # future imports act by existing, never by use
+        for alias in node.names:
+            if alias.name == "*":
+                continue
+            out.append((alias.asname or alias.name, node.lineno))
+    return out
+
+
+def _used_names(tree) -> set:
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            # the root of a dotted use is a Name and is caught above;
+            # nothing extra needed, but keep the branch for clarity
+            pass
+    return used
+
+
+def _dunder_all(tree) -> set:
+    for node in tree.body:
+        if (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "__all__"
+                        for t in node.targets)):
+            try:
+                return set(ast.literal_eval(node.value))
+            except (ValueError, TypeError):
+                return set()
+    return set()
+
+
+def _check_file(path: str) -> list:
+    rel = os.path.relpath(path, ROOT)
+    with open(path) as fh:
+        src = fh.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [f"{rel}:{e.lineno or 0} E999 syntax error: {e.msg}"]
+
+    findings = []
+    exported = _dunder_all(tree)
+    used = _used_names(tree)
+    is_init = os.path.basename(path) == "__init__.py"
+
+    # E722 everywhere
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ExceptHandler) and node.type is None:
+            findings.append(f"{rel}:{node.lineno} E722 bare `except:`")
+
+    # F401 / F811 per scope (module body + each function/class body)
+    scopes = [tree.body]
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            scopes.append(node.body)
+    for scope in scopes:
+        seen: dict = {}
+        for stmt in scope:
+            for name, lineno in _import_bindings(stmt):
+                if name in seen:
+                    findings.append(
+                        f"{rel}:{lineno} F811 `{name}` reimported "
+                        f"(first import at line {seen[name]})")
+                seen[name] = lineno
+                if scope is tree.body and not name.startswith("_") \
+                        and name not in used and name not in exported \
+                        and not is_init:
+                    findings.append(
+                        f"{rel}:{lineno} F401 `{name}` imported but "
+                        "unused")
+    return findings
+
+
+def run_fallback() -> int:
+    findings = []
+    n = 0
+    for path in _iter_py_files():
+        n += 1
+        findings.extend(_check_file(path))
+    print(f"lint (builtin AST fallback): {n} file(s) checked")
+    for f in sorted(findings):
+        print("  " + f)
+    if findings:
+        print(f"lint: {len(findings)} finding(s)")
+        return 1
+    print("lint: OK")
+    return 0
+
+
+def main() -> int:
+    ruff = shutil.which("ruff")
+    if ruff:
+        cmd = [ruff, "check", "--config",
+               os.path.join(ROOT, "ruff.toml")] + \
+              [os.path.join(ROOT, t) for t in TARGETS]
+        print("lint (ruff):", " ".join(cmd[1:]))
+        return subprocess.call(cmd)
+    return run_fallback()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Pre-merge verification: docs checks (README/API snippets execute,
-# DESIGN.md § references + relative links resolve), the tier-1 test
-# suite, and a seconds-scale smoke of the serving-path benchmarks
+# DESIGN.md § references + relative links resolve), lint, the §15
+# kernel-contract checker (static analysis + fixture self-test), the
+# tier-1 test suite, and a seconds-scale smoke of the serving-path benchmarks
 # (fused read path, mixed write path, §11 serving state, §12 range
 # scans, §14 drift re-flow), so a doc or perf-path regression in any
 # dispatch route is caught before it lands.
@@ -33,6 +34,12 @@ run_phase() {
 
 echo "== docs check (snippets + DESIGN.md refs + links) =="
 run_phase python scripts/check_docs.py
+
+echo "== lint (ruff or builtin AST fallback) =="
+run_phase python scripts/lint.py
+
+echo "== kernel contracts (§15 static analysis + fixture self-test) =="
+run_phase python scripts/check_kernels.py
 
 echo "== tier-1 test suite =="
 run_phase python -m pytest -x -q "$@"

@@ -1,0 +1,21 @@
+"""Static kernel-contract analysis for the serving path (DESIGN.md §15).
+
+Every perf cliff this repo has shipped was found at runtime by
+benchmark archaeology: the PR 3 clip-mode gather devectorization, the
+PR 5 compile-per-rung-crossing retrace storm, the BENCH_sharded silent
+VMEM overflow.  This package is the distilled, executable form of
+those root causes — four machine-checked contracts evaluated over the
+*registered* serving entry points:
+
+- ``host-escape``   — no callbacks / host transfers in serving jaxprs+HLO
+- ``retrace-budget`` — jit caches grow to exactly the signature lattice
+- ``vmem``          — pool footprints proven against the kernel budget
+- ``lint``          — devectorizing gathers, f64 upcasts, identity-lane
+                      narrowing casts, batch-length scan trip counts
+
+Run ``python -m repro.analysis`` (or ``scripts/check_kernels.py``).
+"""
+
+from repro.analysis.findings import Finding, Report, load_allowlist
+
+__all__ = ["Finding", "Report", "load_allowlist"]

@@ -1,0 +1,94 @@
+"""``python -m repro.analysis`` — kernel contract checker CLI
+(DESIGN.md §15).
+
+Exit status is 0 iff no *blocking* finding survives the allowlist.
+
+Flags:
+  --contracts C[,C..]  subset of {static,retrace,vmem} (default: all)
+  --allowlist PATH     reviewed-violation patterns
+                       (default: scripts/kernel_contracts_allow.txt
+                       when it exists)
+  --json               machine-readable report on stdout
+  --no-hlo             skip lowered-module scans (jaxpr checks only)
+  --fixtures           run over the deliberately-broken fixture
+                       kernels instead of the real entry points
+                       (self-test: exits nonzero iff any fixture is
+                       NOT caught)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+DEFAULT_ALLOWLIST = os.path.join("scripts", "kernel_contracts_allow.txt")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static kernel-contract checks for the serving path")
+    ap.add_argument("--contracts", default="static,retrace,vmem",
+                    help="comma list of static,retrace,vmem")
+    ap.add_argument("--allowlist", default=None)
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--fixtures", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.findings import Report, load_allowlist
+
+    if args.fixtures:
+        return _run_fixture_selftest(args)
+
+    allow_path = args.allowlist
+    if allow_path is None and os.path.exists(DEFAULT_ALLOWLIST):
+        allow_path = DEFAULT_ALLOWLIST
+    report = Report(allowlist=load_allowlist(allow_path))
+
+    wanted = {c.strip() for c in args.contracts.split(",") if c.strip()}
+    unknown = wanted - {"static", "retrace", "vmem"}
+    if unknown:
+        print(f"unknown contracts: {sorted(unknown)}", file=sys.stderr)
+        return 2
+
+    from repro.analysis import contracts, retrace, vmem
+
+    if "static" in wanted:
+        contracts.run_static_checks(report, check_hlo=not args.no_hlo)
+    if "retrace" in wanted:
+        retrace.run_retrace_check(report)
+    if "vmem" in wanted:
+        vmem.run_vmem_checks(report)
+
+    print(report.to_json() if args.json else report.render())
+    return 0 if report.ok else 1
+
+
+def _run_fixture_selftest(args) -> int:
+    """Every broken fixture must produce at least one blocking finding
+    — the checker checking itself."""
+    from repro.analysis.findings import Report
+    from repro.analysis.fixtures import FIXTURES
+    from repro.analysis.jaxpr_checks import check_jaxpr
+
+    missed = []
+    for name, build in FIXTURES.items():
+        rep = Report()
+        check_jaxpr(build(), name, rep)
+        caught = rep.blocking()
+        status = "caught" if caught else "MISSED"
+        detail = caught[0].location if caught else "-"
+        print(f"  {status}  {name}  @ {detail}")
+        if not caught:
+            missed.append(name)
+    if missed:
+        print(f"FAIL: fixtures not caught: {missed}")
+        return 1
+    print(f"OK: all {len(FIXTURES)} broken fixtures caught")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

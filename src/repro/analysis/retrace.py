@@ -1,0 +1,195 @@
+"""Contract 2 — retrace budget over the ratchet/capacity lattice
+(DESIGN.md §15).
+
+Drives a real flow-off ``FlatAFLI`` through a scripted workload that
+walks the full serving lattice — every request-size bucket, tier
+presence flipping on, delta→run merges, fold trigger and swap — while
+mirroring each dispatch as a *declared* lattice point: the batch's
+pow2 bucket plus ``ServingState.trace_signature()`` (pool buckets,
+tier capacities, probe statics, ratchets — the only coordinates §11
+allows a retrace to depend on).
+
+After the drive, each serving jit cache must hold **at most** one
+entry per distinct declared point.  Implementation details that leak
+extra trace keys — the PR 5 bug class, where ``DeviceTier.refresh``
+shipped pow2-*rounded* prefixes so every rung crossing paid a ~40 ms
+XLA compile — grow the cache without moving any declared coordinate
+and are reported as violations with the function's def site.
+
+The declared budget for the tier writes is shape-arithmetic, not
+mirroring: ``_write_prefix`` may hold one trace per (capacity bucket,
+dtype) pair — capacities are pinned by ``preallocate`` and the dtype
+set is {f32, u32, i32} (identity hi/lo share the u32 signature).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.analysis.findings import Finding, Report
+
+SERVE_BATCHES = (1, 33, 64, 65, 130, 200, 256, 400)   # buckets 64..512
+SCAN_BATCHES = (4, 64, 100)                           # buckets 64, 128
+_PREFIX_DTYPES = ("float32", "uint32", "int32")
+
+
+def _fn_location(fn) -> str:
+    import inspect
+
+    fn = getattr(fn, "__wrapped__", fn)
+    try:
+        return (f"{inspect.getsourcefile(fn)}:"
+                f"{inspect.getsourcelines(fn)[1]}")
+    except (TypeError, OSError):
+        return repr(fn)
+
+
+def drive_lattice(*, seed: int = 11, n_build: int = 512,
+                  delta_cap: int = 64,
+                  tier_factory=None) -> Tuple[Dict[str, Set], object]:
+    """Run the scripted lattice workload; returns the declared
+    signature sets per entry and the driven index.
+
+    ``tier_factory`` lets the regression tests swap in a broken
+    ``DeviceTier`` (e.g. the pre-PR-5 rung-prefix refresh) without
+    touching the driver.
+    """
+    import repro.kernels.ops as ops
+    from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig
+    from repro.kernels.backend import pow2_batch
+
+    declared: Dict[str, Set] = {"fused_lookup": set(), "range_scan": set()}
+
+    idx = FlatAFLI(FlatAFLIConfig(delta_cap=delta_cap))
+    if tier_factory is not None:
+        for slot in ("run", "delta", "scan"):
+            setattr(idx._serving, slot, tier_factory())
+    serving = idx._serving
+
+    real_lookup, real_scan = ops.fused_lookup, ops.fused_range_scan
+
+    def lookup_spy(arrays, pools, feats, qhi, qlo, **kw):
+        # feats is already padded to the pow2 batch bucket by the
+        # caller; the declared point is (bucket, lattice signature)
+        declared["fused_lookup"].add(
+            ("point", int(feats.shape[0]), serving.trace_signature()))
+        return real_lookup(arrays, pools, feats, qhi, qlo, **kw)
+
+    def scan_spy(scan_pack, tiers, feats_lo, feats_hi, **kw):
+        declared["range_scan"].add(
+            ("scan", int(feats_lo.shape[0]), serving.scan_signature()))
+        return real_scan(scan_pack, tiers, feats_lo, feats_hi, **kw)
+
+    ops.fused_lookup, ops.fused_range_scan = lookup_spy, scan_spy
+    try:
+        rng = np.random.default_rng(seed)
+        keys = np.unique(rng.uniform(0.0, 1e6, 4 * n_build))[:n_build]
+        pay = np.arange(keys.shape[0], dtype=np.int64)
+        idx.build(keys, pay)
+
+        def serve_sweep():
+            for n in SERVE_BATCHES:
+                q = keys[np.arange(n) % keys.shape[0]]
+                idx.lookup_batch(q)
+            for n in SCAN_BATCHES:
+                lo = keys[np.arange(n) % keys.shape[0]]
+                idx.scan_batch(lo, lo + 1.0)
+
+        # phase A: tiers empty — one trace per batch bucket
+        serve_sweep()
+
+        # phase B: writes walk the tier lattice — delta fills, merges
+        # into the run at delta_cap, and enough volume crosses the
+        # fold trigger (rebuild_frac * n) so a fold starts, ticks, and
+        # swaps mid-workload
+        fresh = np.unique(rng.uniform(2e6, 3e6, 8 * delta_cap))
+        step = max(delta_cap // 2, 1)
+        for i in range(0, fresh.shape[0], step):
+            batch = fresh[i:i + step]
+            idx.insert_batch(
+                batch, np.arange(batch.shape[0], dtype=np.int64) + 50_000)
+            idx.lookup_batch(batch[: min(8, batch.shape[0])])
+        serve_sweep()
+
+        # phase C: post-fold steady state — the sweep must mint ZERO
+        # new traces beyond what phases A/B declared (rung crossings,
+        # fold swaps, and length changes are not lattice coordinates)
+        idx.delete_batch(keys[:8])
+        serve_sweep()
+    finally:
+        ops.fused_lookup, ops.fused_range_scan = real_lookup, real_scan
+
+    return declared, idx
+
+
+def prefix_budget(serving) -> int:
+    """Declared ``_write_prefix`` budget: one trace per (capacity
+    bucket, dtype) over the tiers that allocated buffers."""
+    caps = {t.capacity for t in (serving.run, serving.delta, serving.scan)
+            if t.capacity}
+    return len(caps) * len(_PREFIX_DTYPES)
+
+
+def run_retrace_check(report: Optional[Report] = None, *, seed: int = 11,
+                      n_build: int = 512, delta_cap: int = 64) -> Report:
+    """Clear the serving jit caches, drive the lattice, and compare
+    every cache against its declared budget."""
+    import repro.core.serving_state as serving_state
+    from repro.core.flat_afli import flat_lookup
+    from repro.kernels.fused_lookup import fused_lookup_pallas
+    from repro.kernels.nf_forward import nf_forward_pallas
+    from repro.kernels.range_scan import fused_range_scan_pallas
+
+    report = report or Report()
+    tracked = {
+        "fused_lookup": fused_lookup_pallas,
+        "range_scan": fused_range_scan_pallas,
+        "tier_refresh": serving_state._write_prefix,
+        "tier_len_write": serving_state._write_len,
+        "oracle_lookup": flat_lookup,
+        "nf_forward": nf_forward_pallas,
+    }
+    for fn in tracked.values():
+        fn.clear_cache()
+
+    declared, idx = drive_lattice(seed=seed, n_build=n_build,
+                                  delta_cap=delta_cap)
+    budgets = {
+        "fused_lookup": len(declared["fused_lookup"]),
+        "range_scan": len(declared["range_scan"]),
+        "tier_refresh": prefix_budget(idx._serving),
+        # one [lane] i32 length vector, always the same shape
+        "tier_len_write": 1,
+        # flow-off kernel-on drive: the oracle and the NF forward must
+        # never trace — a nonzero cache is a silent fallback
+        "oracle_lookup": 0,
+        "nf_forward": 0,
+    }
+    for name, fn in tracked.items():
+        actual = fn._cache_size()
+        budget = budgets[name]
+        if actual > budget:
+            report.add(Finding(
+                contract="retrace-budget", entry=name,
+                location=_fn_location(fn),
+                message=(f"jit cache holds {actual} traces but the "
+                         f"declared lattice admits only {budget}: "
+                         "something outside the declared coordinates "
+                         "(pool buckets, tier capacities, ratchets, "
+                         "batch buckets) is minting trace keys — the "
+                         "PR 5 rung-crossing bug class"),
+                details={"actual": actual, "budget": budget}))
+        else:
+            if actual < budget:
+                report.add(Finding(
+                    contract="retrace-budget", entry=name,
+                    location=_fn_location(fn), severity="info",
+                    message=(f"jit cache holds {actual} traces, under "
+                             f"the declared {budget}: distinct lattice "
+                             "points coalesced (benign; tighten the "
+                             "declared budget if this persists)"),
+                    details={"actual": actual, "budget": budget}))
+            report.note_pass(name, "retrace-budget")
+    return report

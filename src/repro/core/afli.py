@@ -27,12 +27,11 @@ simpler bookkeeping; the space accounting counts the mask).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.conflict import (
-    LinearModel,
     conflict_degrees,
     fit_linear_model,
     tail_conflict_degree,

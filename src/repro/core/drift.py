@@ -39,6 +39,7 @@ flow→identity wins and the re-key drops the flow entirely.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable, Optional, Tuple
 
@@ -46,7 +47,25 @@ import numpy as np
 
 from repro.core.conflict import accept_candidate, dataset_tail_conflict
 
-__all__ = ["DriftConfig", "DriftMonitor", "ReflowManager"]
+__all__ = ["DriftConfig", "DriftMonitor", "LockDisciplineError",
+           "ReflowManager"]
+
+
+class LockDisciplineError(RuntimeError):
+    """The ReflowManager's single-owner discipline was violated.
+
+    The manager is not thread-safe by design: one owner drives
+    ``tick()`` from the serving path and reads ``stats()`` between
+    transitions.  Two calls can still interleave incorrectly from a
+    single thread — an injected callable (``apply``, ``evaluate``,
+    ``train_factory``, ``serving_tail``) calling back into ``tick()``,
+    or ``stats()`` reading counters mid-transition — and those bugs
+    corrupt the episode bookkeeping silently.  This error makes the
+    violation loud.  It is a programming error, never a data-dependent
+    failure, so the state machine's ``except Exception`` degradation
+    ladder deliberately re-raises it instead of counting it as a failed
+    retrain episode.
+    """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,6 +204,8 @@ class ReflowManager:
         self._pending: Optional[Tuple[Any, bool, int]] = None
         self._pending_identity = False
         self._applied = False
+        self._in_tick = False          # reentrancy guard (lock discipline)
+        self._commit_depth = 0         # stats() barred inside _commit()
         # counters (monotone; NOT reset by dispatch_stats(reset=True))
         self.checks = 0
         self.triggers = 0
@@ -201,30 +222,52 @@ class ReflowManager:
         self.baseline_tail = max(int(tail), 1)
 
     def tick(self) -> None:
-        """One bounded unit of drift work; called per insert batch."""
-        if self.state == self.TRAINING:
-            self._advance_training()
-        elif self.state == self.PENDING:
-            self._try_apply()
-        elif self.monitor.should_check():
-            self._check()
+        """One bounded unit of drift work; called per insert batch.
+
+        Single-owner: an injected callable calling back into ``tick()``
+        would advance the state machine underneath its own caller, so
+        reentrancy raises :class:`LockDisciplineError` instead of
+        silently double-driving an episode.
+        """
+        if self._in_tick:
+            raise LockDisciplineError(
+                "tick() re-entered from within an injected callable: "
+                "the manager is single-owner and its callables must "
+                "not drive the state machine recursively")
+        self._in_tick = True
+        try:
+            if self.state == self.TRAINING:
+                self._advance_training()
+            elif self.state == self.PENDING:
+                self._try_apply()
+            elif self.monitor.should_check():
+                self._check()
+        finally:
+            self._in_tick = False
 
     def note_swap(self) -> None:
         """The re-key fold swapped in: the candidate now serves."""
-        self.reflows_completed += 1
-        if self._pending_identity:
-            self.identity_switches += 1
-        if self._pending is not None:
-            self.baseline_tail = max(int(self._pending[2]), 1)
-        self._pending = None
-        self._pending_identity = False
-        self._applied = False
-        self._episode_attempts = 0
-        self._cooldown_span = int(self.cfg.cooldown_keys)
-        self.cooldown_until = self.monitor.keys_observed + self._cooldown_span
-        self.state = self.IDLE
+        with self._commit():
+            self.reflows_completed += 1
+            if self._pending_identity:
+                self.identity_switches += 1
+            if self._pending is not None:
+                self.baseline_tail = max(int(self._pending[2]), 1)
+            self._pending = None
+            self._pending_identity = False
+            self._applied = False
+            self._episode_attempts = 0
+            self._cooldown_span = int(self.cfg.cooldown_keys)
+            self.cooldown_until = (self.monitor.keys_observed
+                                   + self._cooldown_span)
+            self.state = self.IDLE
 
     def stats(self) -> dict:
+        if self._commit_depth:
+            raise LockDisciplineError(
+                "stats() read inside a commit window: the episode "
+                "counters are mid-transition and would be mutually "
+                "inconsistent")
         return {
             "state": self.state,
             "last_score": self.last_score,
@@ -244,15 +287,40 @@ class ReflowManager:
         }
 
     # -- state machine --------------------------------------------------
+    @contextlib.contextmanager
+    def _commit(self):
+        """Episode-bookkeeping mutation window.
+
+        Counters and state flip together inside it, so an external read
+        (``stats()``) mid-window would observe e.g. ``reflows_completed``
+        advanced with ``state`` still PENDING.  Injected callables run
+        *outside* commit windows — they may legitimately read stats —
+        and the window must never nest: nesting means a mutation section
+        called another mutation section, i.e. the discipline is already
+        broken somewhere above.
+        """
+        if self._commit_depth:
+            raise LockDisciplineError(
+                "nested commit window: an episode transition ran inside "
+                "another transition's mutation section")
+        self._commit_depth += 1
+        try:
+            yield
+        finally:
+            self._commit_depth -= 1
+
     def _check(self) -> None:
         sample = self.monitor.sample()
         self.checks += 1
         try:
             tail = int(self.serving_tail(sample))
+        except LockDisciplineError:
+            raise
         except Exception:
             return  # measurement failure is never a serving-path error
-        self.last_serving_tail = tail
-        self.last_score = tail / float(max(self.baseline_tail, 1))
+        with self._commit():
+            self.last_serving_tail = tail
+            self.last_score = tail / float(max(self.baseline_tail, 1))
         if not self.cfg.reflow:
             return
         if (self.last_score < self.cfg.threshold
@@ -262,12 +330,16 @@ class ReflowManager:
         self.triggers += 1
         self.retrain_attempts += 1
         try:
-            self._trainer = self.train_factory(sample,
-                                               self._episode_attempts)
-            self._sample = sample
-            self.state = self.TRAINING
+            trainer = self.train_factory(sample, self._episode_attempts)
+        except LockDisciplineError:
+            raise
         except Exception:
             self._fail()
+            return
+        with self._commit():
+            self._trainer = trainer
+            self._sample = sample
+            self.state = self.TRAINING
 
     def _advance_training(self) -> None:
         try:
@@ -275,6 +347,8 @@ class ReflowManager:
                 if self._trainer.step():
                     self._validate()
                     return
+        except LockDisciplineError:
+            raise
         except Exception:
             self._fail()
 
@@ -286,6 +360,8 @@ class ReflowManager:
         try:
             cand_tail, candidate = self.evaluate(self._trainer, sample)
             cand_tail = int(cand_tail)
+        except LockDisciplineError:
+            raise
         except Exception:
             self._fail()
             return
@@ -298,43 +374,57 @@ class ReflowManager:
                                 self.cfg.conflicts_decay):
             self._fail(rejected=True)
             return
-        self._pending = (best, use_flow, best_tail)
-        self._pending_identity = not use_flow
-        self._trainer = None
-        self._sample = None
-        self.state = self.PENDING
+        with self._commit():
+            self._pending = (best, use_flow, best_tail)
+            self._pending_identity = not use_flow
+            self._trainer = None
+            self._sample = None
+            self.state = self.PENDING
         self._try_apply()
 
     def _try_apply(self) -> None:
         if self._applied:
             return  # re-key fold in flight; note_swap() closes the episode
         best, use_flow, best_tail = self._pending
+        epoch = self.reflows_completed
         try:
             started = bool(self.apply(best, use_flow, best_tail))
+        except LockDisciplineError:
+            raise
         except Exception:
             self._fail()
             return
         if started:
-            self.reflows_started += 1
-            self._applied = True
-            # stay PENDING until note_swap(): the fold is in flight and
-            # a second episode must not start underneath it
+            with self._commit():
+                self.reflows_started += 1
+                if self.reflows_completed == epoch:
+                    # stay PENDING until note_swap(): the fold is in
+                    # flight and a second episode must not start
+                    # underneath it
+                    self._applied = True
+                # else: apply() swapped synchronously (empty-snapshot
+                # re-key calls on_swap before returning) and note_swap
+                # already closed the episode — marking it in-flight now
+                # would wedge every future PENDING episode behind a
+                # swap that will never arrive
         # else: a regular fold is mid-flight; retry next tick
 
     def _fail(self, rejected: bool = False) -> None:
-        if rejected:
-            self.candidates_rejected += 1
-        else:
-            self.retrain_failures += 1
-        self._trainer = None
-        self._sample = None
-        self._pending = None
-        self._pending_identity = False
-        self._applied = False
-        self._episode_attempts += 1
-        if self._episode_attempts >= max(int(self.cfg.max_attempts), 1):
-            self._cooldown_span = min(self._cooldown_span * 2,
-                                      64 * int(self.cfg.cooldown_keys))
-            self._episode_attempts = 0
-        self.cooldown_until = self.monitor.keys_observed + self._cooldown_span
-        self.state = self.IDLE
+        with self._commit():
+            if rejected:
+                self.candidates_rejected += 1
+            else:
+                self.retrain_failures += 1
+            self._trainer = None
+            self._sample = None
+            self._pending = None
+            self._pending_identity = False
+            self._applied = False
+            self._episode_attempts += 1
+            if self._episode_attempts >= max(int(self.cfg.max_attempts), 1):
+                self._cooldown_span = min(self._cooldown_span * 2,
+                                          64 * int(self.cfg.cooldown_keys))
+                self._episode_attempts = 0
+            self.cooldown_until = (self.monitor.keys_observed
+                                   + self._cooldown_span)
+            self.state = self.IDLE

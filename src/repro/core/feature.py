@@ -19,7 +19,6 @@ kernel path).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import numpy as np
 import jax.numpy as jnp

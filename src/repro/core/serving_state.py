@@ -353,6 +353,40 @@ class ServingState:
             run_iters=r.iters, run_window=r.window,
             delta_iters=d.iters, delta_window=d.window)
 
+    # ----------------------------------------------------- trace lattice
+    def trace_signature(self) -> tuple:
+        """The *declared* point-lookup trace-cache lattice point
+        (DESIGN.md §15): everything the serving discipline (§11) allows
+        a kernel retrace to depend on — tree pool buckets, tier
+        presence, tier capacity buckets, probe statics, and the
+        upward-only ratchets.  Two dispatches whose batch bucket and
+        ``trace_signature()`` coincide must hit the same jit cache
+        entry; the retrace-budget contract checker
+        (``repro.analysis.retrace``) counts distinct declared points
+        against the actual cache growth, which is exactly how the PR 5
+        per-rung-prefix refresh bug class is caught — a rung crossing
+        changes no declared coordinate, so any cache growth it causes
+        is a violation."""
+        pools = None
+        if self.tree_pools is not None:
+            pools = tuple((tuple(a.shape), str(a.dtype))
+                          for a in self.tree_pools)
+        tiers_live = bool(self.run.length or self.delta.length)
+        return (pools, tiers_live,
+                self.run.capacity, self.run.iters, self.run.window,
+                self.delta.capacity, self.delta.iters, self.delta.window,
+                self.max_depth, self.dense_window)
+
+    def scan_signature(self) -> tuple:
+        """The declared range-scan lattice point: the point signature's
+        tier coordinates plus the scan pool's capacity bucket and
+        lower-bound statics (§12)."""
+        tiers_live = bool(self.run.length or self.delta.length)
+        return (tiers_live,
+                self.run.capacity, self.run.iters, self.run.window,
+                self.delta.capacity, self.delta.iters, self.delta.window,
+                self.scan.capacity, self.scan.iters, self.scan.window)
+
     # ------------------------------------------------------------ stats
     def stats(self) -> dict:
         """Zero-repack telemetry (DESIGN.md §11): pack reuse, prefix

@@ -18,7 +18,6 @@ keeping the kernel write set small and revisit-friendly.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -330,9 +330,15 @@ def _kernel(feat_ref, qhi_ref, qlo_ref, w_ref,
             wok = ((ekey[widx] == qkey[:, None])
                    & (ehi[widx] == qhi[:, None])
                    & (elo[widx] == qlo[:, None]))
+            # argmax < window by construction, so the column pick can
+            # promise in-bounds — the default fill-mode gather would
+            # devectorize exactly like the PR 3 clip-mode take
             first = jnp.argmax(wok, axis=1)
-            found = jnp.take_along_axis(wok, first[:, None], 1)[:, 0]
-            wpay = jnp.take_along_axis(epay[widx], first[:, None], 1)[:, 0]
+            found = jnp.take_along_axis(
+                wok, first[:, None], 1, mode="promise_in_bounds")[:, 0]
+            wpay = jnp.take_along_axis(
+                epay[widx], first[:, None], 1,
+                mode="promise_in_bounds")[:, 0]
             return e_dense, jnp.where(found, wpay, -1)
 
         def dense_skip(_):

@@ -20,11 +20,10 @@ Grid: (ceil(B / TILE),).  TILE is lane-aligned (multiple of 128).
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels.backend import resolve_interpret

@@ -7,9 +7,8 @@ real TPU backends.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -31,6 +30,7 @@ __all__ = [
     "pool_nbytes",
     "kernel_block_bytes",
     "scan_block_bytes",
+    "overflow_reason",
     "serving_cache_size",
     "flash_decode",
 ]
@@ -94,6 +94,37 @@ def scan_block_bytes(scan_pack, tier_bytes: int, tile: int, dim: int,
     return scan_pack.nbytes() + int(tier_bytes) + q_bytes
 
 
+def overflow_reason(parts, budget: int) -> Dict:
+    """Attribute a VMEM-budget overflow to one component.
+
+    ``parts`` is ``[(component, bytes), ...]`` in residency order
+    (grid-invariant blocks first).  The blamed component is the first
+    whose cumulative sum crosses the budget — "the pools fit, adding
+    the write tiers did not" reads as ``component="write-tiers"``.
+
+    This is the ONE vocabulary for overflow reporting: the runtime
+    fallback telemetry (``fused_lookup_stats()["fallback_reasons"]``)
+    and the static VMEM proof (``repro.analysis.vmem``) both emit this
+    structure, so a bench report and a CI finding describe the same
+    cliff in the same words (DESIGN.md §15).
+    """
+    total = sum(b for _, b in parts)
+    component = parts[-1][0] if parts else "unknown"
+    acc = 0
+    for name, b in parts:
+        acc += b
+        if acc > budget:
+            component = name
+            break
+    return {
+        "component": component,
+        "padded_bytes": int(total),
+        "budget_bytes": int(budget),
+        "over_bytes": int(max(0, total - budget)),
+        "parts": {name: int(b) for name, b in parts},
+    }
+
+
 # ------------------------------------------------------- serving telemetry
 # Cumulative fused-lookup dispatch counters (reset via
 # ``reset_fused_lookup_stats``).  ``retrace_count`` counts calls that
@@ -114,6 +145,26 @@ _FUSED_STATS = {
     "scan_trunc_count": 0,     # queries whose candidate span > scan_cap
 }
 
+# Structured reason for the last budget-driven fallback per route, in
+# the ``overflow_reason`` vocabulary (+ a cumulative count).  Routes:
+# "point" = tree pools fell off the kernel path entirely (oracle),
+# "point-tiers" = pools fit but the tier ride-along did not (host
+# probe), "scan" = the all-or-nothing range path went host.  ``None``
+# until that route falls back — a silent fallback is no longer
+# possible: every budget miss names the component and the bytes.
+_FALLBACK_REASONS: Dict[str, Dict | None] = {
+    "point": None, "point-tiers": None, "scan": None,
+}
+
+
+def _note_fallback(route: str, reason: Dict) -> Dict:
+    prev = _FALLBACK_REASONS.get(route)
+    reason = dict(reason)
+    reason["route"] = route
+    reason["count"] = (prev["count"] + 1) if prev else 1
+    _FALLBACK_REASONS[route] = reason
+    return reason
+
 
 def fused_lookup_stats(reset: bool = False) -> Dict[str, int]:
     """Snapshot of the cumulative fused-lookup dispatch counters.
@@ -122,6 +173,8 @@ def fused_lookup_stats(reset: bool = False) -> Dict[str, int]:
     multi-phase benchmarks and drift windows read per-phase counts
     instead of totals accumulated by warmup/previous phases."""
     out = dict(_FUSED_STATS)
+    out["fallback_reasons"] = {k: (dict(v) if v else None)
+                               for k, v in _FALLBACK_REASONS.items()}
     if reset:
         reset_fused_lookup_stats()
     return out
@@ -130,6 +183,8 @@ def fused_lookup_stats(reset: bool = False) -> Dict[str, int]:
 def reset_fused_lookup_stats() -> None:
     for k in _FUSED_STATS:
         _FUSED_STATS[k] = 0
+    for k in _FALLBACK_REASONS:
+        _FALLBACK_REASONS[k] = None
 
 
 def serving_cache_size() -> int:
@@ -244,11 +299,20 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
         _FUSED_STATS["tier_kernel_count"] += int(kernel_tiers)
         _FUSED_STATS["host_probe_count"] += int(have_tiers
                                                 and not kernel_tiers)
+        reason = None
+        if have_tiers and not kernel_tiers:
+            # the pools fit but the tier ride-along pushed the bill
+            # over budget: the write tiers fall to the host probe
+            reason = _note_fallback("point-tiers", overflow_reason(
+                [("tree-pools", pool_nbytes(pools)),
+                 ("query-block", q_tile * (dim + 4) * 4),
+                 ("write-tiers", tier_bytes)], vmem_budget))
         info = {"path": "fused", "n_dispatch": 1, "pool_bytes": nbytes,
                 "tier_bytes": tier_bytes, "retraced": retraced,
                 "tier_path": ("kernel" if kernel_tiers
                               else "host" if have_tiers else "none"),
-                "host_probe": have_tiers and not kernel_tiers}
+                "host_probe": have_tiers and not kernel_tiers,
+                "fallback_reason": reason}
         if not sync:
             return pay, z, info
         return np.asarray(pay), np.asarray(z), info
@@ -269,10 +333,20 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
     _FUSED_STATS["fallback_count"] += 1
     _FUSED_STATS["retrace_count"] += int(retraced)
     _FUSED_STATS["host_probe_count"] += int(have_tiers)
+    if nbytes is None:
+        # the kernel path was disabled by config, not outbid
+        reason = _note_fallback("point", {
+            "component": "kernel-disabled", "padded_bytes": 0,
+            "budget_bytes": int(vmem_budget), "over_bytes": 0,
+            "parts": {}})
+    else:
+        reason = _note_fallback("point", overflow_reason(
+            [("tree-pools", pool_nbytes(pools)),
+             ("query-block", q_tile * (dim + 4) * 4)], vmem_budget))
     info = {"path": "oracle", "n_dispatch": n_dispatch, "pool_bytes": nbytes,
             "tier_bytes": tier_bytes, "retraced": retraced,
             "tier_path": "host" if have_tiers else "none",
-            "host_probe": have_tiers}
+            "host_probe": have_tiers, "fallback_reason": reason}
     if not sync:
         return res, z, info
     return np.asarray(res), np.asarray(z), info
@@ -362,9 +436,19 @@ def fused_range_scan(scan_pack, tiers, feats_lo, feats_hi, *, flow=None,
     _FUSED_STATS["scan_fallback_count"] += 1
     _FUSED_STATS["retrace_count"] += int(retraced)
     _FUSED_STATS["scan_trunc_count"] += n_trunc
+    if nbytes is None:
+        reason = _note_fallback("scan", {
+            "component": "kernel-disabled", "padded_bytes": 0,
+            "budget_bytes": int(vmem_budget), "over_bytes": 0,
+            "parts": {}})
+    else:
+        reason = _note_fallback("scan", overflow_reason(
+            [("scan-pool", scan_pack.nbytes()),
+             ("query-block", q_tile * (2 * dim + 4 + scan_cap) * 4),
+             ("write-tiers", tier_bytes)], vmem_budget))
     info = {"path": "host", "n_dispatch": 0, "pool_bytes": nbytes,
             "retraced": retraced, "truncated": n_trunc,
-            "tier_path": "host"}
+            "tier_path": "host", "fallback_reason": reason}
     return np.asarray(pv), np.asarray(cnt), np.asarray(tot), info
 
 

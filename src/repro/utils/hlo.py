@@ -21,7 +21,8 @@ import re
 from collections import defaultdict
 from typing import Dict
 
-__all__ = ["collective_bytes", "op_census", "DTYPE_BYTES"]
+__all__ = ["collective_bytes", "op_census", "host_escape_ops",
+           "f64_census", "DTYPE_BYTES"]
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -97,6 +98,45 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
     for k, c in counts.items():
         out[f"n_{k}"] = c
     return dict(out)
+
+
+# Host-escape detection in lowered text (kernel contract §15): works on
+# both StableHLO (`stablehlo.custom_call @xla_python_cpu_callback`) and
+# post-compile HLO (`custom-call(...), custom_call_target="..."`).
+# Callback custom-call targets round-trip through the host per dispatch;
+# infeed/outfeed/send/recv are host transfers by definition.
+_HOST_CALL_TARGET_RE = re.compile(
+    r"custom_call_target\s*=\s*\"([^\"]*callback[^\"]*)\"|"
+    r"custom_call\s+@([\w.]*callback[\w.]*)")
+_HOST_FEED_RE = re.compile(
+    r"\b(?:(stablehlo)\.(send|recv|infeed|outfeed)|"
+    r"(infeed|outfeed|send|recv)\()")
+
+
+def host_escape_ops(hlo_text: str) -> Dict[str, int]:
+    """Count host round-trip ops in lowered module text: python-callback
+    custom-calls plus infeed/outfeed/send/recv.  Empty dict == the
+    module provably never leaves the device."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _HOST_CALL_TARGET_RE.search(line)
+        if m:
+            out[m.group(1) or m.group(2)] += 1
+            continue
+        m = _HOST_FEED_RE.search(line)
+        if m:
+            out[m.group(2) or m.group(3)] += 1
+    return dict(out)
+
+
+_F64_RE = re.compile(r"\bf64\b|xf64[>\]]|tensor<f64>")
+
+
+def f64_census(hlo_text: str) -> int:
+    """Count f64-typed values in lowered module text — the serving path
+    is f32-by-design (DESIGN.md §8), so any nonzero count is an upcast
+    that doubles VMEM traffic."""
+    return sum(len(_F64_RE.findall(line)) for line in hlo_text.splitlines())
 
 
 def op_census(hlo_text: str) -> Dict[str, int]:

@@ -1,0 +1,252 @@
+"""Kernel contract checker (DESIGN.md §15).
+
+Four layers, matching the analysis package split:
+
+- ``Finding``/``Report``/allowlist unit tests: keys, dedup, gating.
+- Broken-fixture golden tests: every deliberately re-introduced bug
+  class (clip-mode gather, host callback, identity-lane cast,
+  batch-length loop, f64 upcast, the PR 5 rung-prefix refresh, a
+  VMEM-overflowing pool config) must be reported as a failure with a
+  file:line finding — so a refactor of the checks cannot silently stop
+  detecting the bug that motivated them.
+- Clean-pass tests: the real registered entry points and the real
+  serving lattice must come up green.
+- Runtime telemetry: a budget-driven fallback must surface a
+  structured reason in ``fused_lookup_stats()`` /
+  ``NFL.dispatch_stats()`` using the same ``overflow_reason``
+  vocabulary as the static VMEM proof.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis.findings import Finding, Report, load_allowlist
+from repro.analysis.fixtures import (FIXTURES, RungPrefixDeviceTier,
+                                     RungRefreshTier)
+from repro.analysis.jaxpr_checks import check_jaxpr
+from repro.kernels.ops import (fused_lookup_stats, overflow_reason,
+                               reset_fused_lookup_stats)
+
+
+# ------------------------------------------------- findings / allowlist
+def test_finding_key_is_basename_line():
+    f = Finding(contract="lint", entry="fused_lookup",
+                location="/abs/path/src/repro/kernels/fused_lookup.py:334",
+                message="m")
+    assert f.key() == "lint fused_lookup fused_lookup.py:334"
+
+
+def test_report_dedup_and_gating(tmp_path):
+    rep = Report()
+    f = Finding(contract="lint", entry="e", location="a.py:1",
+                message="clip-mode gather: detail one")
+    rep.add(f)
+    # same defect captured from a second trace of the same entry
+    rep.add(Finding(contract="lint", entry="e", location="a.py:1",
+                    message="clip-mode gather: detail two"))
+    assert len(rep.findings) == 1
+    assert not rep.ok and rep.blocking() == [f]
+    # info findings never gate
+    rep2 = Report()
+    rep2.add(Finding(contract="vmem", entry="cfg", location="b.py:1",
+                     message="m", severity="info"))
+    assert rep2.ok and rep2.advisory()
+
+    allow = tmp_path / "allow.txt"
+    allow.write_text("# reviewed\nlint e a.py:*   # signed off\n")
+    rep3 = Report(allowlist=load_allowlist(str(allow)))
+    rep3.add(f)
+    assert rep3.ok and rep3.allowed() == [f]
+    assert "allowlisted" in rep3.render()
+
+
+def test_load_allowlist_missing_is_empty():
+    assert load_allowlist(None) == []
+    assert load_allowlist("/nonexistent/allow.txt") == []
+
+
+# -------------------------------------------- broken-fixture goldens
+_GOLDEN = {
+    "fixture:clip-gather": ("lint", "clip-mode gather in kernel body"),
+    "fixture:host-callback": ("host-escape", "`pure_callback`"),
+    "fixture:lane-cast": ("lint", "unsigned identity lane"),
+    "fixture:batch-loop": ("lint", "trips in kernel"),
+    "fixture:f64-upcast": ("lint", "float64"),
+}
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_fixture_caught_with_location(name):
+    rep = Report()
+    found = check_jaxpr(FIXTURES[name](), name, rep)
+    contract, fragment = _GOLDEN[name]
+    hits = [f for f in found
+            if f.contract == contract and fragment in f.message]
+    assert hits, (f"{name}: no {contract} finding containing "
+                  f"{fragment!r} in {[f.message for f in found]}")
+    # the finding pins the defect to its def site, not "<unknown>"
+    path, _, line = hits[0].location.rpartition(":")
+    assert path.endswith("fixtures.py") and int(line) > 0
+    assert not rep.ok
+
+
+def test_fixture_selftest_cli():
+    from repro.analysis.__main__ import main
+
+    assert main(["--fixtures"]) == 0
+
+
+def test_rung_refresh_miniature_mints_trace_per_rung():
+    RungRefreshTier.clear_cache()
+    tier = RungRefreshTier(capacity=1024)
+    rng = np.random.default_rng(0)
+    for n in (5, 9, 17, 33, 65, 129):   # six rung crossings
+        tier.refresh(rng.uniform(size=n).astype(np.float32))
+    # fixed discipline would hold ONE trace (full capacity bucket);
+    # the rung prefix mints one per crossing
+    assert RungRefreshTier.cache_size() >= 6
+
+
+def test_retrace_regression_rung_prefix_device_tier():
+    """Seeded PR 5 regression: swapping the rung-prefix DeviceTier into
+    the lattice drive must blow the declared ``_write_prefix`` budget."""
+    import repro.core.serving_state as serving_state
+
+    from repro.analysis.retrace import drive_lattice, prefix_budget
+
+    serving_state._write_prefix.clear_cache()
+    serving_state._write_len.clear_cache()
+    _, idx = drive_lattice(tier_factory=RungPrefixDeviceTier)
+    actual = serving_state._write_prefix._cache_size()
+    budget = prefix_budget(idx._serving)
+    assert actual > budget, (
+        f"rung-prefix refresh went undetected: cache {actual} "
+        f"within declared budget {budget}")
+
+
+def test_vmem_regression_overflowing_must_fit_config():
+    from repro.analysis.vmem import VmemConfig, run_vmem_checks
+
+    bad = VmemConfig(name="toy-overflow", n_keys=1 << 20)  # must_fit=True
+    rep = run_vmem_checks(configs=(bad,))
+    blocking = rep.blocking()
+    assert blocking, "a 1M-key unsharded pool cannot fit 12 MiB"
+    f = blocking[0]
+    assert f.contract == "vmem" and "tree-pools" in f.message
+    path, _, line = f.location.rpartition(":")
+    assert path.endswith(".py") and int(line) > 0
+    assert f.details["over_bytes"] > 0
+
+
+# --------------------------------------------------- clean-pass layer
+def test_static_checks_clean_on_real_entry_points():
+    """Every registered serving entry point traces clean (jaxpr layer;
+    the HLO layer runs in scripts/check_kernels.py to keep tier-1
+    wall-clock bounded)."""
+    from repro.analysis.contracts import ENTRY_POINTS, run_static_checks
+
+    rep = run_static_checks(Report(), check_hlo=False)
+    assert rep.ok, rep.render()
+    passed = {e for e, _ in rep.checked}
+    assert {ep.name for ep in ENTRY_POINTS} <= passed
+
+
+def test_retrace_check_clean_on_real_tree():
+    from repro.analysis.retrace import run_retrace_check
+
+    rep = run_retrace_check(Report())
+    assert rep.ok, rep.render()
+    # the oracle and NF-forward caches stayed at zero: the flow-off
+    # kernel-on drive never silently fell back
+    passed = {e for e, _ in rep.checked}
+    assert {"oracle_lookup", "nf_forward", "tier_refresh"} <= passed
+
+
+def test_vmem_proof_grid_and_documented_cliff():
+    from repro.analysis.vmem import run_vmem_checks
+
+    rep = run_vmem_checks(Report())
+    assert rep.ok, rep.render()   # model calibrated + must-fit configs fit
+    # the BENCH_sharded cliff is restated statically as an advisory
+    # blaming the pools — not silently absorbed
+    cliff = [f for f in rep.advisory()
+             if f.entry == "serve-256k-unsharded:point"]
+    assert cliff and "tree-pools" in cliff[0].message
+
+
+def test_cli_json_output():
+    from repro.analysis.__main__ import main
+
+    assert main(["--contracts", "vmem"]) == 0
+    # --json emits a machine-readable report on stdout
+    import contextlib
+    import io
+
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        rc = main(["--contracts", "vmem", "--json"])
+    payload = json.loads(buf.getvalue())
+    assert rc == 0 and payload["ok"]
+    assert any(c["entry"] == "model-calibration"
+               for c in payload["checked"])
+
+
+# ------------------------------------------------ runtime telemetry
+def test_overflow_reason_blames_first_crossing_component():
+    r = overflow_reason([("tree-pools", 10), ("query-block", 5),
+                         ("write-tiers", 7)], budget=12)
+    assert r["component"] == "query-block"      # 10 fits, 15 crosses
+    assert r["over_bytes"] == 10 and r["padded_bytes"] == 22
+    fits = overflow_reason([("tree-pools", 10)], budget=12)
+    assert fits["over_bytes"] == 0
+
+
+def test_fallback_reason_surfaces_in_stats_and_dispatch_stats():
+    """Satellite of §15: a budget-driven oracle fallback names the
+    component that fell off the kernel path — same vocabulary as the
+    static proof — in both ``fused_lookup_stats()`` and
+    ``NFL.dispatch_stats()``."""
+    from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig
+
+    reset_fused_lookup_stats()
+    rng = np.random.default_rng(5)
+    keys = np.unique(rng.uniform(0.0, 1e6, 2048))[:512]
+    idx = FlatAFLI(FlatAFLIConfig(vmem_budget=1024))  # outbid the pools
+    idx.build(keys, np.arange(keys.shape[0], dtype=np.int64))
+    assert np.array_equal(idx.lookup_batch(keys[:64]),
+                          np.arange(64, dtype=np.int64))
+    stats = fused_lookup_stats()
+    assert stats["fallback_count"] > 0
+    reason = stats["fallback_reasons"]["point"]
+    assert reason is not None and reason["component"] == "tree-pools"
+    assert reason["over_bytes"] > 0 and reason["count"] >= 1
+    assert reason["budget_bytes"] == 1024
+    assert set(reason["parts"]) == {"tree-pools", "query-block"}
+
+    # a healthy budget leaves the reason None (and reset clears it)
+    reset_fused_lookup_stats()
+    assert fused_lookup_stats()["fallback_reasons"]["point"] is None
+    idx2 = FlatAFLI(FlatAFLIConfig())
+    idx2.build(keys, np.arange(keys.shape[0], dtype=np.int64))
+    idx2.lookup_batch(keys[:64])
+    stats = fused_lookup_stats()
+    assert stats["fused_count"] > 0
+    assert stats["fallback_reasons"]["point"] is None
+
+
+def test_fallback_reason_rides_nfl_dispatch_stats():
+    from repro.core.flat_afli import FlatAFLIConfig
+    from repro.core.nfl import NFL, NFLConfig
+
+    reset_fused_lookup_stats()
+    rng = np.random.default_rng(6)
+    keys = np.unique(rng.uniform(0.0, 1e6, 2048))[:512]
+    nfl = NFL(NFLConfig(backend="flat",
+                        flat_index=FlatAFLIConfig(vmem_budget=2048)))
+    nfl.bulkload(keys, np.arange(keys.shape[0], dtype=np.int64))
+    nfl.lookup_batch(keys[:64])
+    reasons = nfl.dispatch_stats()["dispatch"]["fallback_reasons"]
+    assert reasons["point"] is not None
+    assert reasons["point"]["component"] == "tree-pools"

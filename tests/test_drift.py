@@ -209,6 +209,74 @@ def test_manager_busy_apply_retries():
     assert mgr.reflows_started == 1 and busy["n"] == 3
 
 
+# ------------------------------------------------------ lock discipline
+def test_manager_reentrant_tick_trips():
+    """An injected callable driving tick() recursively must raise
+    LockDisciplineError — and the error must propagate, not be
+    swallowed by the degradation ladder as a 'failed retrain'."""
+    mgr_box = {}
+
+    def _apply(cand, use_flow, tail):
+        mgr_box["m"].stats()  # reading stats from a callable is legal
+        mgr_box["m"].tick()   # re-driving the machine is not
+        return True
+
+    mgr, _, _ = _armed_manager(apply=_apply)
+    mgr_box["m"] = mgr
+    mgr.tick()  # -> TRAINING
+    with pytest.raises(drift_mod.LockDisciplineError):
+        mgr.tick()  # step -> validate -> apply -> reentrant tick
+    # a discipline violation is a programming error, not an episode
+    # failure: no cooldown, no failure count, machine still PENDING
+    assert mgr.retrain_failures == 0 and mgr.state == ReflowManager.PENDING
+    # and the guard resets: the owner's next tick still runs
+    mgr.apply = lambda c, f, t: True
+    mgr.tick()
+    assert mgr.reflows_started == 1
+
+
+def test_manager_stats_blocked_mid_commit():
+    """stats() inside a commit window would read mutually inconsistent
+    counters (e.g. reflows_completed advanced, state still PENDING)."""
+    mgr, _, _ = _armed_manager()
+    with pytest.raises(drift_mod.LockDisciplineError):
+        with mgr._commit():
+            mgr.stats()
+    mgr.stats()  # window closed: reads are legal again
+    with pytest.raises(drift_mod.LockDisciplineError):
+        with mgr._commit():
+            with mgr._commit():  # nesting = transition inside transition
+                pass
+
+
+def test_manager_immediate_swap_not_wedged():
+    """apply() may swap synchronously (flat_afli's empty-snapshot
+    start_reflow calls on_swap before returning True).  note_swap then
+    closes the episode *inside* the apply call; the manager must not
+    re-mark the episode in flight afterwards, or every later PENDING
+    episode waits forever on a swap that already happened."""
+    mgr_box = {}
+
+    def _apply(cand, use_flow, tail):
+        mgr_box["m"].note_swap()  # the empty-snapshot immediate swap
+        return True
+
+    mgr, mon, _ = _armed_manager(apply=_apply)
+    mgr_box["m"] = mgr
+    mgr.tick()
+    mgr.tick()
+    assert mgr.state == ReflowManager.IDLE
+    assert mgr.reflows_started == 1 and mgr.reflows_completed == 1
+    # second episode end-to-end: past cooldown, re-arm, drive again —
+    # before the epoch fix this stayed wedged behind _applied=True
+    mon.observe(np.full(mgr.cooldown_until - mon.keys_observed + 64, 7.0))
+    mgr.tick()
+    assert mgr.state == ReflowManager.TRAINING
+    mgr.tick()
+    assert mgr.reflows_started == 2 and mgr.reflows_completed == 2
+    assert mgr.state == ReflowManager.IDLE
+
+
 # ----------------------------------------------------------- NFL end-to-end
 def _drift_nfl(**drift_kw):
     kw = dict(reflow=True, threshold=1.5, min_tail=2, check_every=512,
