@@ -87,6 +87,13 @@ def _compare_rerun(name: str, base: dict, path: str):
             n_settle=int(w.get("n_settle", 6_144)),
             n_steady=int(w.get("n_steady", 16_384)),
             batch_size=int(w.get("batch_size", 256)), out_json=None)
+    if name.startswith("BENCH_service"):
+        from benchmarks import bench_service
+
+        return bench_service.run(
+            n_keys=n_keys, n_reqs=int(w.get("n_reqs", 2_000)),
+            n_fault_reqs=int(w.get("n_fault_reqs", 600)),
+            batch_size=int(w.get("batch_size", 128)), out_json=None)
     if name.startswith("BENCH_sharded"):
         # the sharded bench needs the baseline's forced device topology,
         # and XLA_FLAGS must land before jax initializes — jax is already
@@ -162,7 +169,7 @@ def main() -> None:
                     help="tag filter, repeatable and/or comma-separated: "
                          "fig7,fig8,fig10,fig11,table1,table2,table3,"
                          "roofline,fused,mixed,serving,range,sharded,"
-                         "drift")
+                         "drift,service")
     ap.add_argument("--n-keys", type=int, default=None)
     ap.add_argument("--repeats", type=int, default=None,
                     help="timed repeats per variant in the repeat-based "
@@ -277,6 +284,22 @@ def main() -> None:
                 out_json="BENCH_drift.smoke.json"))
         else:
             rows += bench_drift.rows(bench_drift.run(
+                n_keys=max(n_keys, 32_768) if args.full else 32_768))
+    if want("service"):
+        # §16 SLO front-end: goodput-vs-SLO curves, 2x-overload admission
+        # contrast, injected-fault degradation; emits BENCH_service.json
+        # (smoke: a .smoke.json artifact so the verify.sh correctness
+        # gate sees the wrong counts without clobbering the committed
+        # baseline)
+        from benchmarks import bench_service
+
+        if args.smoke:
+            rows += bench_service.rows(bench_service.run(
+                n_keys=n_keys, n_reqs=384, n_fault_reqs=192,
+                batch_size=64, out_json="BENCH_service.smoke.json",
+                fault_modes=("forced_fallback", "transient_errors")))
+        else:
+            rows += bench_service.rows(bench_service.run(
                 n_keys=max(n_keys, 32_768) if args.full else 32_768))
     if want("sharded"):
         # §13 sharded serving at P=1 vs P=4: needs a forced multi-device

@@ -4,8 +4,9 @@
 # kernel-contract checker (static analysis + fixture self-test), the
 # tier-1 test suite, and a seconds-scale smoke of the serving-path benchmarks
 # (fused read path, mixed write path, §11 serving state, §12 range
-# scans, §14 drift re-flow), so a doc or perf-path regression in any
-# dispatch route is caught before it lands.
+# scans, §14 drift re-flow, §16 SLO front-end incl. injected faults),
+# so a doc or perf-path regression in any dispatch route is caught
+# before it lands.
 # Any "wrong" count > 0 in an emitted BENCH JSON fails the run.
 #
 # Usage:
@@ -50,11 +51,14 @@ run_phase python -m benchmarks.run --smoke --only fused --only mixed \
 # the range and drift smokes emit BENCH_*.smoke.json so the correctness
 # gate below sees their wrong counts; the EXIT trap removes them on
 # every outcome — only the committed full-size baselines persist
-trap 'rm -f BENCH_range_scan.smoke.json BENCH_drift.smoke.json' EXIT
+trap 'rm -f BENCH_range_scan.smoke.json BENCH_drift.smoke.json BENCH_service.smoke.json' EXIT
 run_phase python -m benchmarks.run --smoke --only range
 
 echo "== drift smoke (§14 re-flow on/off/forced-failure) =="
 run_phase python -m benchmarks.run --smoke --only drift
+
+echo "== service smoke (§16 SLO front-end + injected faults) =="
+run_phase python -m benchmarks.run --smoke --only service
 
 echo "== bench JSON correctness gate (wrong > 0 fails) =="
 python - <<'PY'

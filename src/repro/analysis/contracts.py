@@ -181,6 +181,34 @@ def exercise_serving_world(captured_sink=None, *, seed: int = 7,
     nfl.insert_batch(new2, np.arange(new2.shape[0], dtype=np.int64) + 20_000)
     nfl.lookup_batch(np.concatenate([keys2[:32], new2[:16]]))
     nfl.scan_batch(keys2[:8], keys2[8:16])
+
+    # ---- §16 SLO front-end over the same sharded flow-on NFL: the
+    # double-buffered async dispatch forms its own (smaller, mixed-op)
+    # batch shapes — the contract checker must see exactly what the
+    # continuous loop launches, not just the hand-batched calls above
+    from repro.serve.frontend import (FrontEnd, FrontEndConfig,
+                                      ServiceRequest)
+
+    fe = FrontEnd(nfl, FrontEndConfig(max_batch=32, batch_timeout_s=1e-4,
+                                      admission=False, expire_queued=False))
+    spare3 = np.unique(rng.normal(9e5, 1e3, 24))
+    rid = 0
+    for i in range(0, 64, 16):
+        for k in keys2[i:i + 16]:
+            fe.submit(ServiceRequest(rid, "point", float(k),
+                                     deadline_s=60.0))
+            rid += 1
+        lo = float(keys2[i])
+        fe.submit(ServiceRequest(rid, "range", lo, hi=lo * (1 + 1e-4),
+                                 deadline_s=60.0))
+        rid += 1
+    for j, k in enumerate(spare3):
+        fe.submit(ServiceRequest(rid, "insert", float(k),
+                                 payload=30_000 + j, deadline_s=60.0))
+        rid += 1
+    fe.submit(ServiceRequest(rid, "delete", float(keys2[0]),
+                             deadline_s=60.0))
+    fe.drain()
     return idx, nfl
 
 

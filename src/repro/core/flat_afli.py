@@ -1142,21 +1142,39 @@ class FlatAFLI:
         self._sync_tiers()
 
     # ------------------------------------------------------------- lookup
+    def _tier_state(self):
+        """The current write-tier arrays as an immutable snapshot.
+
+        Every tier mutation *replaces* these arrays (``_dedup_newest``
+        builds fresh ones) — none is ever written in place — so holding
+        the references IS a consistent snapshot.  An async finisher
+        captures this at dispatch time: the device kernel already runs
+        against dispatch-time tier buffers (functional device arrays),
+        and the host probe must resolve against the same instant or a
+        read gathered after a later write would see the future."""
+        return (self._run_pk, self._run_hi, self._run_lo, self._run_pv,
+                self._delta_pk, self._delta_hi, self._delta_lo,
+                self._delta_pv)
+
     def _probe_delta(self, res: np.ndarray, q32: np.ndarray,
                      qhi: np.ndarray, qlo: np.ndarray) -> np.ndarray:
+        return self._probe_tiers_at(self._tier_state(), res, q32, qhi, qlo)
+
+    def _probe_tiers_at(self, tier_state, res: np.ndarray, q32: np.ndarray,
+                        qhi: np.ndarray, qlo: np.ndarray) -> np.ndarray:
         """Host oracle for the in-kernel tier probe: resolve every query
         against the write tiers (sorted searchsorted pools; exact identity
         compares only), newest copy first — active delta > compacted run >
         device result.  Runs only when the kernel did not already probe
         the tiers on device (``last_dispatch["host_probe"]``)."""
-        if not (self._delta_pk.shape[0] or self._run_pk.shape[0]):
+        (run_pk, run_hi, run_lo, run_pv,
+         dl_pk, dl_hi, dl_lo, dl_pv) = tier_state
+        if not (dl_pk.shape[0] or run_pk.shape[0]):
             return res
         self.n_host_tier_probes += 1
-        run_pay = _probe_sorted_pool(self._run_pk, self._run_hi,
-                                     self._run_lo, self._run_pv,
+        run_pay = _probe_sorted_pool(run_pk, run_hi, run_lo, run_pv,
                                      q32, qhi, qlo)
-        dl_pay = _probe_sorted_pool(self._delta_pk, self._delta_hi,
-                                    self._delta_lo, self._delta_pv,
+        dl_pay = _probe_sorted_pool(dl_pk, dl_hi, dl_lo, dl_pv,
                                     q32, qhi, qlo)
         # identity match in a newer tier wins even when it is a
         # TOMBSTONE — the tombstone masks every older copy below, then
@@ -1182,11 +1200,12 @@ class FlatAFLI:
         q32 = k64.astype(np.float32)
         res_dev, n = self._device_lookup_async(q32, hi, lo)
         host_probe = self.last_dispatch.get("host_probe", True)
+        tier_state = self._tier_state()
 
         def finish() -> np.ndarray:
             res = np.asarray(res_dev)[:n]
             if host_probe:
-                return self._probe_delta(res, q32, hi, lo)
+                return self._probe_tiers_at(tier_state, res, q32, hi, lo)
             return res
 
         return finish
@@ -1244,12 +1263,55 @@ class FlatAFLI:
         The kernel also emits the transformed positioning keys, which feed
         the host-side tier probe when the kernel could not take it.
         """
+        return self.lookup_batch_flow_async(feats, ikeys, packed_w,
+                                            shapes)()
+
+    def lookup_batch_flow_async(self, feats: np.ndarray, ikeys: np.ndarray,
+                                packed_w, shapes):
+        """Flow-positioned twin of ``lookup_batch_async``: dispatch the
+        fused NF + traversal + tier-probe kernel without blocking and
+        return a zero-arg finisher.  The kernel inputs are snapshot at
+        dispatch time (tier buffers are functional device arrays), so a
+        finisher called after later writes still resolves against the
+        index state the batch was dispatched into — the §16 front-end
+        relies on this to overlap host-side batching with device
+        execution."""
+        from repro.kernels import ops
+        from repro.kernels.backend import pow2_batch
+
         ik64 = np.asarray(ikeys, dtype=np.float64)
         hi, lo = split_key_bits(ik64)
-        res, z = self._flow_device_lookup(feats, hi, lo, packed_w, shapes)
-        if self.last_dispatch.get("host_probe", True):
-            res = self._probe_delta(res, z, hi, lo)
-        return res
+        n = feats.shape[0]
+        n_pad = pow2_batch(n)
+        pf, phi, plo = feats, hi, lo
+        if n_pad != n:
+            pf = np.pad(feats, ((0, n_pad - n), (0, 0)))
+            phi = np.pad(hi, (0, n_pad - n))
+            plo = np.pad(lo, (0, n_pad - n))
+        res_dev, z_dev, self.last_dispatch = ops.fused_lookup(
+            self.arrays, self._kernel_pools,
+            jnp.asarray(pf, jnp.float32), jnp.asarray(phi),
+            jnp.asarray(plo), flow=(packed_w, shapes),
+            max_depth=self._depth_static(),
+            dense_iters=self.cfg.dense_search_iters,
+            bucket_cap=self.cfg.max_bucket,
+            dense_window=self._dense_window_static(),
+            tiers=self._tier_pack,
+            vmem_budget=self.cfg.vmem_budget
+            if self.cfg.use_fused_kernel else 0,
+            sync=False,
+        )
+        host_probe = self.last_dispatch.get("host_probe", True)
+        tier_state = self._tier_state()
+
+        def finish() -> np.ndarray:
+            res = np.asarray(res_dev)[:n]
+            if host_probe:
+                return self._probe_tiers_at(tier_state, res,
+                                            np.asarray(z_dev)[:n], hi, lo)
+            return res
+
+        return finish
 
     def verify_serve_flow(self, feats: np.ndarray, ikeys: np.ndarray,
                           packed_w, shapes, payloads: np.ndarray) -> int:
@@ -1640,6 +1702,12 @@ class FlatAFLI:
         return True
 
     def _fold_tick(self, budget: int) -> None:
+        if self._fold is not None:
+            # §16 fault-injection hook: a FaultPlan with fold_stall_s
+            # set models a slow fold, stretching the tier-resident window
+            from repro.kernels import ops
+
+            ops.fault_stall("fold")
         if self._fold is not None and self._fold.tick(budget):
             # swapped in; apply any delta merge deferred during the fold
             if self._delta_pk.shape[0] > self.cfg.delta_cap:

@@ -33,6 +33,7 @@ Two serving backends (DESIGN.md §9):
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, Optional
 
@@ -94,6 +95,12 @@ class NFL:
                              "re-key rides the incremental-fold machinery)")
         self._drift: Optional[DriftMonitor] = None
         self._reflow: Optional[ReflowManager] = None
+        # serializes the drift/re-flow tick on the write path against
+        # ``dispatch_stats(reset=True)`` snapshots from another thread
+        # (the §16 front-end loop): an unlocked reset racing a tick
+        # could zero counters mid-transition and lose counts.  RLock —
+        # the tick's injected callables may themselves read stats.
+        self._telemetry_lock = threading.RLock()
         if self.cfg.backend == "flat" and self.cfg.drift.enabled:
             self._drift = DriftMonitor(self.cfg.drift)
             self._reflow = ReflowManager(
@@ -307,6 +314,28 @@ class NFL:
             out[i] = -1 if r is None else r
         return out
 
+    def lookup_batch_async(self, keys: np.ndarray):
+        """Dispatch a batched point lookup without blocking; returns a
+        zero-arg finisher producing the payload array.
+
+        On the flat backend (single or sharded) the kernel inputs are
+        snapshot at dispatch time, so the §16 front-end can keep a
+        second batch in flight behind the first (double-buffered
+        dispatch) and still read results consistent with the index
+        state each batch was dispatched into.  The AFLI backend has no
+        device path — the lookup runs eagerly and the finisher just
+        hands the result back."""
+        keys = np.asarray(keys, dtype=np.float64)
+        if self.cfg.backend == "flat":
+            if not self.use_flow:
+                return self.index.lookup_batch_async(keys)
+            feats = expand_features(keys, self.normalizer, self.cfg.flow.dim,
+                                    self.cfg.flow.theta, dtype=np.float32)
+            return self.index.lookup_batch_flow_async(
+                feats, keys, self._packed_w, self._shapes)
+        res = self.lookup_batch(keys)
+        return lambda: res
+
     def insert_batch(self, keys: np.ndarray, payloads: np.ndarray) -> None:
         keys = np.asarray(keys, dtype=np.float64)
         payloads = np.asarray(payloads, dtype=np.int64)
@@ -315,8 +344,9 @@ class NFL:
             self.index.insert_batch(
                 pkeys, payloads, ikeys=keys if self.use_flow else None)
             if self._drift is not None:
-                self._drift.observe(keys)
-                self._reflow.tick()
+                with self._telemetry_lock:
+                    self._drift.observe(keys)
+                    self._reflow.tick()
             return
         insert = self.index.insert
         for i in range(keys.shape[0]):
@@ -413,15 +443,17 @@ class NFL:
         read per-phase counts."""
         from repro.kernels.ops import fused_lookup_stats
 
-        out = {"dispatch": fused_lookup_stats(reset=reset)}
-        if self.cfg.backend == "flat":
-            out.update(self.index.serving_telemetry())
-            if self._reflow is not None:
-                out["drift"] = {"enabled": True, "use_flow": self.use_flow,
-                                **self._reflow.stats(),
-                                "signals": self.index.drift_signals()}
-            else:
-                out["drift"] = {"enabled": False}
-            if reset:
-                self.index.reset_telemetry()
+        with self._telemetry_lock:
+            out = {"dispatch": fused_lookup_stats(reset=reset)}
+            if self.cfg.backend == "flat":
+                out.update(self.index.serving_telemetry())
+                if self._reflow is not None:
+                    out["drift"] = {"enabled": True,
+                                    "use_flow": self.use_flow,
+                                    **self._reflow.stats(),
+                                    "signals": self.index.drift_signals()}
+                else:
+                    out["drift"] = {"enabled": False}
+                if reset:
+                    self.index.reset_telemetry()
         return out

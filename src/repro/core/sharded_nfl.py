@@ -417,10 +417,13 @@ class ShardedFlatAFLI:
             bool, count=hi.shape[0])
 
     # ------------------------------------------------------------- points
-    def _fanout_points(self, pk64: np.ndarray, ik64: np.ndarray,
-                       sids: np.ndarray) -> np.ndarray:
+    def _fanout_points_async(self, pk64: np.ndarray, ik64: np.ndarray,
+                             sids: np.ndarray):
         """Dispatch every shard's sub-batch before finishing any (the
-        fan-out/gather of DESIGN.md §13), then restore input order."""
+        fan-out/gather of DESIGN.md §13) and return a zero-arg finisher
+        that gathers the parts and restores input order.  Every shard
+        kernel is in flight when this returns, so a §16 front-end can
+        stack a second batch behind the first before blocking."""
         segs, inv = fanout_plan(sids, self.n_shards)
         ik64 = np.asarray(ik64, dtype=np.float64)
         finishers = []
@@ -433,21 +436,45 @@ class ShardedFlatAFLI:
             with self._on(s):
                 finishers.append(self.shards[s].lookup_batch_async(
                     pk64[seg], ikeys=ik64[seg]))
-        parts = [f() for f in finishers if f is not None]
-        if not parts:
-            return np.full(sids.shape[0], -1, np.int32)
-        return np.concatenate(parts)[inv]
+        n = int(sids.shape[0])
 
-    def lookup_batch(self, keys: np.ndarray,
-                     ikeys: np.ndarray | None = None) -> np.ndarray:
-        """Batched point lookups; ``keys`` are positioning keys (raw
-        keys when the flow is off)."""
+        def finish() -> np.ndarray:
+            parts = [f() for f in finishers if f is not None]
+            if not parts:
+                return np.full(n, -1, np.int32)
+            return np.concatenate(parts)[inv]
+
+        return finish
+
+    def _fanout_points(self, pk64: np.ndarray, ik64: np.ndarray,
+                       sids: np.ndarray) -> np.ndarray:
+        return self._fanout_points_async(pk64, ik64, sids)()
+
+    def lookup_batch_async(self, keys: np.ndarray,
+                           ikeys: np.ndarray | None = None):
+        """Non-blocking form of ``lookup_batch``: route, fan out to
+        every shard, and return the gather as a finisher."""
         k64 = np.asarray(keys, dtype=np.float64)
         ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
         sids = self._route_points(k64.astype(np.float32))
         self._router["point_batches"] += 1
         self._router["point_queries"] += int(k64.shape[0])
-        return self._fanout_points(k64, ik64, sids)
+        return self._fanout_points_async(k64, ik64, sids)
+
+    def lookup_batch(self, keys: np.ndarray,
+                     ikeys: np.ndarray | None = None) -> np.ndarray:
+        """Batched point lookups; ``keys`` are positioning keys (raw
+        keys when the flow is off)."""
+        return self.lookup_batch_async(keys, ikeys)()
+
+    def lookup_batch_flow_async(self, feats: np.ndarray, ikeys: np.ndarray,
+                                packed_w, shapes):
+        """Non-blocking form of ``lookup_batch_flow``: one fused router
+        dispatch, per-shard kernels all in flight on return."""
+        z, sids = route_flow(feats, packed_w, shapes, self._boundaries_dev)
+        self._router["point_batches"] += 1
+        self._router["point_queries"] += int(z.shape[0])
+        return self._fanout_points_async(z.astype(np.float64), ikeys, sids)
 
     def lookup_batch_flow(self, feats: np.ndarray, ikeys: np.ndarray,
                           packed_w, shapes) -> np.ndarray:
@@ -455,10 +482,8 @@ class ShardedFlatAFLI:
         + boundary binning), then the per-shard fused kernels probe by
         the routed z — identity resolution and the in-kernel tier probes
         work exactly as on the single index."""
-        z, sids = route_flow(feats, packed_w, shapes, self._boundaries_dev)
-        self._router["point_batches"] += 1
-        self._router["point_queries"] += int(z.shape[0])
-        return self._fanout_points(z.astype(np.float64), ikeys, sids)
+        return self.lookup_batch_flow_async(feats, ikeys, packed_w,
+                                            shapes)()
 
     # ------------------------------------------------------------- writes
     def insert_batch(self, keys: np.ndarray, payloads: np.ndarray,

@@ -7,6 +7,9 @@ real TPU backends.
 
 from __future__ import annotations
 
+import threading
+import time
+
 from typing import Dict
 
 import jax.numpy as jnp
@@ -156,13 +159,27 @@ _FALLBACK_REASONS: Dict[str, Dict | None] = {
     "point": None, "point-tiers": None, "scan": None,
 }
 
+# One lock serializes every counter mutation AND the snapshot-and-reset
+# in ``fused_lookup_stats(reset=True)``: the §16 front-end loop reads
+# per-window stats from its serving thread while the §14 background
+# re-flow tick keeps dispatching on the write path, and an unlocked
+# reset racing a bump would silently lose counts.
+_STATS_LOCK = threading.Lock()
+
+
+def _bump(**counts) -> None:
+    with _STATS_LOCK:
+        for k, v in counts.items():
+            _FUSED_STATS[k] += v
+
 
 def _note_fallback(route: str, reason: Dict) -> Dict:
-    prev = _FALLBACK_REASONS.get(route)
-    reason = dict(reason)
-    reason["route"] = route
-    reason["count"] = (prev["count"] + 1) if prev else 1
-    _FALLBACK_REASONS[route] = reason
+    with _STATS_LOCK:
+        prev = _FALLBACK_REASONS.get(route)
+        reason = dict(reason)
+        reason["route"] = route
+        reason["count"] = (prev["count"] + 1) if prev else 1
+        _FALLBACK_REASONS[route] = reason
     return reason
 
 
@@ -171,20 +188,116 @@ def fused_lookup_stats(reset: bool = False) -> Dict[str, int]:
 
     ``reset=True`` zeroes the counters after snapshotting, so
     multi-phase benchmarks and drift windows read per-phase counts
-    instead of totals accumulated by warmup/previous phases."""
-    out = dict(_FUSED_STATS)
-    out["fallback_reasons"] = {k: (dict(v) if v else None)
-                               for k, v in _FALLBACK_REASONS.items()}
-    if reset:
-        reset_fused_lookup_stats()
+    instead of totals accumulated by warmup/previous phases.  Snapshot
+    and reset happen atomically under the stats lock: concurrent
+    dispatches land either in this snapshot or the next window, never
+    nowhere."""
+    with _STATS_LOCK:
+        out = dict(_FUSED_STATS)
+        out["fallback_reasons"] = {k: (dict(v) if v else None)
+                                   for k, v in _FALLBACK_REASONS.items()}
+        if reset:
+            _reset_stats_unlocked()
     return out
 
 
 def reset_fused_lookup_stats() -> None:
+    with _STATS_LOCK:
+        _reset_stats_unlocked()
+
+
+def _reset_stats_unlocked() -> None:
     for k in _FUSED_STATS:
         _FUSED_STATS[k] = 0
     for k in _FALLBACK_REASONS:
         _FALLBACK_REASONS[k] = None
+
+
+# --------------------------------------------------------- fault injection
+class TransientDispatchError(RuntimeError):
+    """Injected transient dispatch failure (``serve.faults.FaultPlan``).
+
+    Raised *before* the kernel launches, so a failed dispatch has no
+    side effect on index state and is safe to retry; the front-end's
+    bounded-retry-with-backoff loop (DESIGN.md §16) is the intended
+    handler."""
+
+
+# Raw fault-injection state lives here — not in ``serve/`` — because
+# ops.py is the one module every dispatch route already crosses;
+# ``serve.faults.inject`` is the structured front door that installs a
+# ``FaultPlan`` and guarantees cleanup.
+_FAULT_PLAN = {
+    "force_fallback": False,  # every point/scan dispatch takes the oracle
+    "stall_s": 0.0,           # sleep before dispatch (device-stall model)
+    "stall_every": 1,         # ...on every Nth dispatch
+    "fold_stall_s": 0.0,      # sleep inside each incremental fold tick
+    "error_every": 0,         # raise TransientDispatchError on every Nth
+}
+_FAULT_COUNTS = {
+    "dispatches_seen": 0, "forced_fallbacks": 0, "stalls": 0,
+    "fold_stalls": 0, "transient_errors": 0,
+}
+
+
+def set_fault_plan(**knobs) -> None:
+    """Install fault-injection knobs; unknown keys are an error."""
+    with _STATS_LOCK:
+        for k, v in knobs.items():
+            if k not in _FAULT_PLAN:
+                raise KeyError(f"unknown fault knob: {k!r}")
+            _FAULT_PLAN[k] = v
+
+
+def clear_fault_plan() -> None:
+    with _STATS_LOCK:
+        _FAULT_PLAN.update(force_fallback=False, stall_s=0.0,
+                           stall_every=1, fold_stall_s=0.0, error_every=0)
+
+
+def fault_injection_stats(reset: bool = False) -> Dict[str, int]:
+    with _STATS_LOCK:
+        out = dict(_FAULT_COUNTS)
+        if reset:
+            for k in _FAULT_COUNTS:
+                _FAULT_COUNTS[k] = 0
+    return out
+
+
+def _fault_gate(route: str) -> bool:
+    """Apply the installed fault plan to one dispatch: maybe stall,
+    maybe raise a transient error, maybe force the oracle fallback.
+    Returns True when the dispatch must take the fallback path."""
+    with _STATS_LOCK:
+        plan = dict(_FAULT_PLAN)
+        _FAULT_COUNTS["dispatches_seen"] += 1
+        n = _FAULT_COUNTS["dispatches_seen"]
+        err = bool(plan["error_every"]) and n % plan["error_every"] == 0
+        stall = (plan["stall_s"] > 0
+                 and n % max(int(plan["stall_every"]), 1) == 0)
+        if err:
+            _FAULT_COUNTS["transient_errors"] += 1
+        elif stall:
+            _FAULT_COUNTS["stalls"] += 1
+        if plan["force_fallback"] and not err:
+            _FAULT_COUNTS["forced_fallbacks"] += 1
+    if err:
+        raise TransientDispatchError(
+            f"injected transient fault on {route} dispatch #{n}")
+    if stall:
+        time.sleep(plan["stall_s"])
+    return bool(plan["force_fallback"])
+
+
+def fault_stall(point: str) -> None:
+    """Injection hook for non-dispatch stall points (``"fold"`` is the
+    incremental-fold tick on the write path)."""
+    with _STATS_LOCK:
+        s = _FAULT_PLAN["fold_stall_s"] if point == "fold" else 0.0
+        if s > 0:
+            _FAULT_COUNTS["fold_stalls"] += 1
+    if s > 0:
+        time.sleep(s)
 
 
 def serving_cache_size() -> int:
@@ -246,7 +359,8 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
     from repro.kernels.fused_lookup import fused_lookup_pallas, select_tile
 
     interpret = resolve_interpret(interpret)
-    _FUSED_STATS["dispatch_count"] += 1
+    forced = _fault_gate("point")
+    _bump(dispatch_count=1)
     cache_before = serving_cache_size()
     if vmem_budget is None:
         vmem_budget = (DEFAULT_INTERPRET_BUDGET if interpret
@@ -258,7 +372,7 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
     # blocks of the tile the grid will use — not the raw pool bytes
     q_tile = select_tile(int(feats.shape[0]), use_flow, tile, interpret)
     nbytes = None
-    if vmem_budget > 0:
+    if vmem_budget > 0 and not forced:
         if callable(pools):
             pools = pools()
         nbytes = kernel_block_bytes(pools, 0, q_tile, dim)
@@ -294,11 +408,9 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
             delta_window=tiers.delta_window if kernel_tiers else 4,
         )
         retraced = serving_cache_size() > cache_before
-        _FUSED_STATS["fused_count"] += 1
-        _FUSED_STATS["retrace_count"] += int(retraced)
-        _FUSED_STATS["tier_kernel_count"] += int(kernel_tiers)
-        _FUSED_STATS["host_probe_count"] += int(have_tiers
-                                                and not kernel_tiers)
+        _bump(fused_count=1, retrace_count=int(retraced),
+              tier_kernel_count=int(kernel_tiers),
+              host_probe_count=int(have_tiers and not kernel_tiers))
         reason = None
         if have_tiers and not kernel_tiers:
             # the pools fit but the tier ride-along pushed the bill
@@ -330,10 +442,16 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
                       dense_iters=dense_iters, bucket_cap=bucket_cap,
                       dense_window=dense_window)
     retraced = serving_cache_size() > cache_before
-    _FUSED_STATS["fallback_count"] += 1
-    _FUSED_STATS["retrace_count"] += int(retraced)
-    _FUSED_STATS["host_probe_count"] += int(have_tiers)
-    if nbytes is None:
+    _bump(fallback_count=1, retrace_count=int(retraced),
+          host_probe_count=int(have_tiers))
+    if forced:
+        # an installed FaultPlan forced the oracle path: same structured
+        # vocabulary as a real budget miss, component names the cause
+        reason = _note_fallback("point", {
+            "component": "fault-injection", "padded_bytes": 0,
+            "budget_bytes": int(vmem_budget), "over_bytes": 0,
+            "parts": {}})
+    elif nbytes is None:
         # the kernel path was disabled by config, not outbid
         reason = _note_fallback("point", {
             "component": "kernel-disabled", "padded_bytes": 0,
@@ -381,7 +499,8 @@ def fused_range_scan(scan_pack, tiers, feats_lo, feats_hi, *, flow=None,
     from repro.kernels.fused_lookup import select_tile
 
     interpret = resolve_interpret(interpret)
-    _FUSED_STATS["scan_dispatch_count"] += 1
+    forced = _fault_gate("scan")
+    _bump(scan_dispatch_count=1)
     cache_before = serving_cache_size()
     if vmem_budget is None:
         vmem_budget = (DEFAULT_INTERPRET_BUDGET if interpret
@@ -391,7 +510,7 @@ def fused_range_scan(scan_pack, tiers, feats_lo, feats_hi, *, flow=None,
     q_tile = select_tile(int(feats_lo.shape[0]), use_flow, tile, interpret)
 
     nbytes = None
-    if vmem_budget > 0:
+    if vmem_budget > 0 and not forced:
         if callable(scan_pack):
             scan_pack = scan_pack()
         if callable(tiers):
@@ -422,9 +541,8 @@ def fused_range_scan(scan_pack, tiers, feats_lo, feats_hi, *, flow=None,
         pv, cnt, tot = np.asarray(pv), np.asarray(cnt), np.asarray(tot)
         retraced = serving_cache_size() > cache_before
         n_trunc = int((tot > scan_cap).sum())
-        _FUSED_STATS["scan_fused_count"] += 1
-        _FUSED_STATS["retrace_count"] += int(retraced)
-        _FUSED_STATS["scan_trunc_count"] += n_trunc
+        _bump(scan_fused_count=1, retrace_count=int(retraced),
+              scan_trunc_count=n_trunc)
         info = {"path": "fused", "n_dispatch": 1, "pool_bytes": nbytes,
                 "retraced": retraced, "truncated": n_trunc,
                 "tier_path": "kernel" if have_tiers else "none"}
@@ -433,10 +551,14 @@ def fused_range_scan(scan_pack, tiers, feats_lo, feats_hi, *, flow=None,
     pv, cnt, tot = host_fallback()
     retraced = serving_cache_size() > cache_before
     n_trunc = int((np.asarray(tot) > scan_cap).sum())
-    _FUSED_STATS["scan_fallback_count"] += 1
-    _FUSED_STATS["retrace_count"] += int(retraced)
-    _FUSED_STATS["scan_trunc_count"] += n_trunc
-    if nbytes is None:
+    _bump(scan_fallback_count=1, retrace_count=int(retraced),
+          scan_trunc_count=n_trunc)
+    if forced:
+        reason = _note_fallback("scan", {
+            "component": "fault-injection", "padded_bytes": 0,
+            "budget_bytes": int(vmem_budget), "over_bytes": 0,
+            "parts": {}})
+    elif nbytes is None:
         reason = _note_fallback("scan", {
             "component": "kernel-disabled", "padded_bytes": 0,
             "budget_bytes": int(vmem_budget), "over_bytes": 0,

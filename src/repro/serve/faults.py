@@ -1,0 +1,106 @@
+"""Fault injection for the serving front-end (DESIGN.md §16).
+
+A ``FaultPlan`` names one adversarial condition per knob; ``inject``
+installs it for the duration of a ``with`` block and guarantees cleanup
+on every exit path.  The raw injection state lives in
+``repro.kernels.ops`` (the one module every dispatch route crosses);
+this module is the structured front door the benches and tests use.
+
+The injectable faults and where they bite:
+
+==================  =====================================================
+knob                failure it models
+==================  =====================================================
+force_oracle        VMEM pressure / kernel regression: every point and
+                    range dispatch is forced onto the declared oracle
+                    fallback path.  The fallback telemetry reports it in
+                    the §15 ``overflow_reason`` vocabulary with
+                    ``component="fault-injection"``.
+device_stall_s      a slow / contended accelerator: every
+                    ``stall_every``-th dispatch sleeps before launching.
+dispatch_error_     transient dispatch failures (preempted device,
+every               flaky transport): every Nth dispatch raises
+                    ``ops.TransientDispatchError`` *before* launching —
+                    no index side effects, safe to retry.
+fold_stall_s        a slow incremental fold: every fold tick on the
+                    write path sleeps, stretching the window in which
+                    reads ride the delta/run tiers.
+retrain_failure     a poisoned §14 re-flow: the background trainer
+                    raises, so the drift machinery must back off and
+                    keep serving on the incumbent transform.
+==================  =====================================================
+
+Forced retrain failure patches ``nfl._reflow.train_factory`` — the same
+seam ``bench_drift`` uses — so it needs the ``NFL`` handle; everything
+else is process-global ops state.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Iterator
+
+from repro.kernels import ops
+
+__all__ = ["FaultPlan", "inject", "injection_stats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """One declarative bundle of injected faults (all off by default)."""
+
+    force_oracle: bool = False       # kernel→oracle fallback on every dispatch
+    device_stall_s: float = 0.0      # sleep before dispatch
+    stall_every: int = 1             # ...on every Nth dispatch
+    dispatch_error_every: int = 0    # TransientDispatchError on every Nth
+    fold_stall_s: float = 0.0        # sleep per incremental-fold tick
+    retrain_failure: bool = False    # background re-flow trainer raises
+
+    def any_active(self) -> bool:
+        return (self.force_oracle or self.device_stall_s > 0
+                or self.dispatch_error_every > 0 or self.fold_stall_s > 0
+                or self.retrain_failure)
+
+
+def _failing_train_factory(sample, attempt):
+    raise RuntimeError("injected retrain failure (FaultPlan)")
+
+
+@contextlib.contextmanager
+def inject(plan: FaultPlan, nfl=None) -> Iterator[FaultPlan]:
+    """Install ``plan`` for the duration of the block.
+
+    ``nfl`` is required only for ``retrain_failure`` (the trainer seam
+    lives on the instance); passing a plan that needs it without an
+    ``NFL`` that has drift enabled raises rather than silently injecting
+    nothing.
+    """
+    ops.set_fault_plan(
+        force_fallback=plan.force_oracle,
+        stall_s=float(plan.device_stall_s),
+        stall_every=max(int(plan.stall_every), 1),
+        fold_stall_s=float(plan.fold_stall_s),
+        error_every=max(int(plan.dispatch_error_every), 0),
+    )
+    saved_factory = None
+    reflow = getattr(nfl, "_reflow", None) if nfl is not None else None
+    if plan.retrain_failure:
+        if reflow is None:
+            ops.clear_fault_plan()
+            raise ValueError(
+                "FaultPlan(retrain_failure=True) needs an NFL with the "
+                "§14 re-flow machinery enabled (DriftConfig.reflow)")
+        saved_factory = reflow.train_factory
+        reflow.train_factory = _failing_train_factory
+    try:
+        yield plan
+    finally:
+        ops.clear_fault_plan()
+        if saved_factory is not None:
+            reflow.train_factory = saved_factory
+
+
+def injection_stats(reset: bool = False) -> Dict[str, int]:
+    """Cumulative injected-fault event counts (see ``ops``)."""
+    return ops.fault_injection_stats(reset)

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.models.model import ModelAPI
 
-__all__ = ["Request", "ServeConfig", "ContinuousBatcher"]
+__all__ = ["DrainStatus", "Request", "ServeConfig", "ContinuousBatcher"]
 
 
 @dataclasses.dataclass
@@ -31,6 +31,17 @@ class Request:
     # filled by the scheduler
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    truncated: bool = False             # drain hit max_steps first
+
+
+@dataclasses.dataclass(frozen=True)
+class DrainStatus:
+    """Outcome of ``run_until_drained``: whether every request finished,
+    how many steps ran, and the rids left queued/active on truncation."""
+
+    drained: bool
+    steps: int
+    unfinished: List[int]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,10 +104,30 @@ class ContinuousBatcher:
                 req.done = True
                 self.slots[i] = None  # slot freed for the next admit
 
-    def run_until_drained(self, max_steps: int = 10_000) -> None:
+    def run_until_drained(self, max_steps: int = 10_000,
+                          strict: bool = True) -> DrainStatus:
+        """Pump ``step`` until every request finished or ``max_steps``
+        decode steps ran.  Hitting the step cap with work outstanding
+        used to return silently — indistinguishable from a clean drain,
+        with the stuck requests still holding slots.  Now every
+        unfinished request is marked ``truncated`` and the truncation is
+        loud: an exception under ``strict`` (the default), otherwise a
+        ``DrainStatus`` with ``drained=False`` naming the rids."""
         while (self.queue or any(s is not None for s in self.slots)) and \
                 self.steps < max_steps:
             self.step()
+        unfinished = [r for r in (*self.queue, *self.slots)
+                      if r is not None and not r.done]
+        for r in unfinished:
+            r.truncated = True
+        status = DrainStatus(drained=not unfinished, steps=self.steps,
+                             unfinished=[r.rid for r in unfinished])
+        if strict and not status.drained:
+            raise RuntimeError(
+                f"run_until_drained truncated at max_steps={max_steps}: "
+                f"{len(status.unfinished)} request(s) still queued/active "
+                f"(rids {status.unfinished})")
+        return status
 
 
 def _slot_index(arr, i: int):

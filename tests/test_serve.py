@@ -105,3 +105,43 @@ def test_continuous_batcher_matches_sequential():
     for r, exp in zip(reqs, expected):
         assert r.done
         assert r.output == exp, (r.rid, r.output, exp)
+
+
+def test_run_until_drained_truncation_is_loud():
+    """Regression: hitting max_steps with work outstanding used to return
+    silently, indistinguishable from a clean drain.  Now it raises under
+    strict (default), and in non-strict mode returns drained=False with
+    every unfinished request marked ``truncated``."""
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def fresh(n_reqs, max_new):
+        b = ContinuousBatcher(model, params, ServeConfig(batch_slots=2,
+                                                         max_len=64))
+        rs = [Request(rid=i, prompt=np.array([3 + i, 5], np.int32),
+                      max_new_tokens=max_new) for i in range(n_reqs)]
+        for r in rs:
+            b.submit(r)
+        return b, rs
+
+    # strict: truncation raises, naming the stuck requests
+    b, reqs = fresh(3, max_new=8)
+    with pytest.raises(RuntimeError, match="truncated at max_steps"):
+        b.run_until_drained(max_steps=2)
+    assert any(r.truncated for r in reqs)
+
+    # non-strict: DrainStatus reports the same thing without raising
+    b, reqs = fresh(3, max_new=8)
+    status = b.run_until_drained(max_steps=2, strict=False)
+    assert not status.drained and status.steps == 2
+    assert status.unfinished and set(status.unfinished) <= {0, 1, 2}
+    for r in reqs:
+        assert r.truncated == (r.rid in status.unfinished)
+        assert r.done == (r.rid not in status.unfinished)
+
+    # clean drain: drained=True, nothing truncated
+    b, reqs = fresh(2, max_new=4)
+    status = b.run_until_drained()
+    assert status.drained and not status.unfinished
+    assert all(r.done and not r.truncated for r in reqs)
