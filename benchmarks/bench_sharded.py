@@ -7,10 +7,13 @@ credible throughput claims must report scaling behavior):
 * **read window** — balanced batched point lookups, best-of-N wall
   clock.  The workload is sized so the UNSHARDED pools exceed the
   real-TPU per-core VMEM budget (``ops.DEFAULT_VMEM_BUDGET``, 12 MiB)
-  and fall off the fused single-dispatch path onto the oracle fallback,
-  while each shard's pools still fit — sharding restores kernel-path
-  serving, which is exactly the mechanism that scales on real
-  hardware (per-device pools stay VMEM-resident as the keyset grows);
+  and fall off the fused single-dispatch path — since §17 that means
+  onto the HBM-streaming tier (``path == "streamed"``, still one
+  kernel dispatch, pool tiles double-buffered through VMEM), not the
+  host oracle — while each shard's pools still fit fully resident, so
+  sharding restores fused serving, which is exactly the mechanism that
+  scales on real hardware (per-device pools stay VMEM-resident as the
+  keyset grows);
 * **steady mixed window** — 80/20 read/insert traffic balanced across
   shards, checked against a dict oracle (wrong must be 0), with the
   per-shard §11 guarantees asserted: zero tier repacks and zero XLA
@@ -157,6 +160,8 @@ def run(n_keys: int = N_KEYS, n_reads: int = N_READS, n_ops: int = N_OPS,
             "us_per_query": best / n_reads * 1e6,
             "path": shard0.last_dispatch.get("path"),
             "pool_bytes_per_shard": shard0.last_dispatch.get("pool_bytes"),
+            "stream_tile": shard0.last_dispatch.get("stream_tile"),
+            "tiles_streamed": shard0.last_dispatch.get("tiles_streamed"),
             "compiles_warmup": warm_c,
             "compiles_measure": meas_c,
             "wrong": read_wrong,
@@ -242,6 +247,14 @@ def run(n_keys: int = N_KEYS, n_reads: int = N_READS, n_ops: int = N_OPS,
             f"P={P}: {stats['retrace_count']} retraces in steady window"
         assert all(p["tier_repacks"] == 0 for p in per_shard), \
             f"P={P}: tier repacks in steady window"
+        # §17 regression gate: every dispatch route (fused when the
+        # pools fit, streamed when they don't) probes the write tiers
+        # in-kernel — a host-side tier probe in the steady window means
+        # a read left the kernel path (the pre-§17 P=1 behavior: 4
+        # oracle read batches x 1 host probe each)
+        assert steady["host_tier_probes_in_window"] == 0, \
+            (f"P={P}: {steady['host_tier_probes_in_window']} host tier "
+             "probes in steady window — reads left the kernel path")
 
     ps = [f"P{p}" for p in shard_counts]
     if len(ps) >= 2:
@@ -255,7 +268,9 @@ def run(n_keys: int = N_KEYS, n_reads: int = N_READS, n_ops: int = N_OPS,
                 s1["throughput_mops"] / s0["throughput_mops"],
             "p_lo_path": r0["path"], "p_hi_path": r1["path"],
             "mechanism": "per-shard pools fit the per-device VMEM "
-                         "budget; the unsharded pools do not",
+                         "budget and serve fully resident (fused); the "
+                         "unsharded pools do not and stream tiles "
+                         "through VMEM (streamed, §17)",
         }
         print(f"scaling {ps[0]} -> {ps[-1]}: read "
               f"{result['scaling']['read_speedup']:.2f}x "

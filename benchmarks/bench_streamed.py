@@ -1,0 +1,231 @@
+"""HBM-streaming lookup tier: throughput across pool/budget ratios
+(DESIGN.md §17).
+
+One flow-on build, then the same read workload served under a sweep of
+VMEM budgets — ``budget = fused_bill / r`` for each ratio ``r``.  At
+r=1 the pools fit and the fused rung serves; at every r>1 the fused
+rung is outbid and the dispatch ladder must hold the batch on the
+kernel path by streaming the rank-ordered scan pool through VMEM in
+double-buffered tiles.  Each ratio also times the declared fallback
+(``use_streamed_kernel=False`` -> host oracle, the pre-§17 behavior at
+that budget) so the JSON records the streamed-vs-oracle margin point by
+point; the reference throughput is stored under ``ref_throughput_mops``
+on purpose — ``run.py --compare`` gates ``throughput_mops`` (the
+protected trajectory) and must not gate the noisy host reference.
+
+Hard gates (the §17 acceptance): wrong == 0 everywhere, and every
+ratio through 4x serves with ``path == "streamed"`` — pools several
+multiples past the budget never leave the kernel path.  Past the
+write-tier crossover (the point where the VMEM-resident write tiers
+alone outgrow the budget, so no stream tile can help) the ladder may
+demote to the oracle, but only with a structured ``point-streamed``
+fallback reason recorded in the entry — a silent demotion fails.
+
+  PYTHONPATH=src python -m benchmarks.bench_streamed
+
+Emits ``BENCH_streamed.json`` (``--smoke``: small sizes, no artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+N_KEYS = 131_072
+N_READS = 8_192
+REPEATS = 5
+RATIOS = (1, 2, 4, 8, 16)
+
+
+def run(n_keys: int = N_KEYS, n_reads: int = N_READS,
+        repeats: int = REPEATS, ratios=RATIOS, delta_cap: int = 256,
+        out_json: str | None = "BENCH_streamed.json"):
+    import numpy as np
+
+    from benchmarks.common import best_s
+    from repro.data.datasets import make_dataset
+    from repro.core.flat_afli import FlatAFLIConfig
+    from repro.core.flow import FlowConfig
+    from repro.core.nfl import NFL, NFLConfig
+    from repro.core.train_flow import FlowTrainConfig
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    build_keys = np.sort(make_dataset("lognormal", n_keys))
+    payloads = np.arange(n_keys, dtype=np.int64)
+
+    t0 = time.perf_counter()
+    nfl = NFL(NFLConfig(backend="flat", force_flow=True,
+                        flow=FlowConfig(dim=3),
+                        flow_train=FlowTrainConfig(epochs=1),
+                        flat_index=FlatAFLIConfig(delta_cap=delta_cap)))
+    nfl.bulkload(build_keys, payloads)
+    bulkload_s = time.perf_counter() - t0
+    idx = nfl.index
+    base_cfg = idx.cfg
+
+    q = rng.choice(build_keys, n_reads, replace=True)
+    expect = np.searchsorted(build_keys, q).astype(np.int64)
+
+    # one generously-budgeted probe dispatch at the measurement batch
+    # shape measures the fused bill — the sweep budgets are expressed
+    # as fractions of it (the bill includes the query block, so the
+    # probe must use the same batch bucket)
+    idx.cfg = dataclasses.replace(base_cfg, vmem_budget=1 << 34)
+    nfl.lookup_batch(q)
+    assert idx.last_dispatch["path"] == "fused", idx.last_dispatch
+    # the full fused residency: pools + query block + tier ride-along
+    # (at any budget below this the ladder leaves the fused rung)
+    bill = (int(idx.last_dispatch["pool_bytes"])
+            + int(idx.last_dispatch["tier_bytes"] or 0))
+
+    result = {
+        "workload": {
+            "n_keys": n_keys, "n_reads": n_reads, "repeats": repeats,
+            "ratios": list(ratios), "delta_cap": delta_cap,
+            "dataset": "lognormal", "use_flow": True,
+            "fused_bill_bytes": bill,
+        },
+        "bulkload_s": bulkload_s,
+        "ratios": {},
+    }
+
+    for r in ratios:
+        budget = bill if r == 1 else bill // r
+        idx.cfg = dataclasses.replace(base_cfg, vmem_budget=budget)
+        ops.reset_fused_lookup_stats()
+        res = nfl.lookup_batch(q)
+        wrong = int((np.asarray(res) != expect).sum())
+        info = dict(idx.last_dispatch)
+        # why the streamed rung itself refused, if it did (§15 vocab;
+        # info["fallback_reason"] carries the fused rung's reason)
+        fb_stream = ops.fused_lookup_stats()["fallback_reasons"].get(
+            "point-streamed")
+        best, warm_c, meas_c = best_s(lambda: nfl.lookup_batch(q),
+                                      repeats)
+
+        # declared fallback at the same budget: the pre-§17 ladder
+        # (stream rung unwired) drops the batch to the host oracle
+        idx.cfg = dataclasses.replace(base_cfg, vmem_budget=budget,
+                                      use_streamed_kernel=False)
+        res_ref = nfl.lookup_batch(q)
+        ref_wrong = int((np.asarray(res_ref) != expect).sum())
+        ref_path = idx.last_dispatch["path"]
+        ref_best, _, _ = best_s(lambda: nfl.lookup_batch(q),
+                                max(repeats - 2, 1))
+
+        entry = {
+            "budget_bytes": int(budget),
+            "pool_over_budget_x": bill / budget,
+            "path": info.get("path"),
+            "throughput_mops": n_reads / best / 1e6,
+            "us_per_query": best / n_reads * 1e6,
+            "wrong": wrong,
+            "wall_s": best,
+            "compiles_warmup": warm_c, "compiles_measure": meas_c,
+            "stream_tile": info.get("stream_tile"),
+            "tiles_streamed": info.get("tiles_streamed"),
+            "pool_bytes": info.get("pool_bytes"),
+            "pool_stream_bytes": info.get("pool_stream_bytes"),
+            "tier_path": info.get("tier_path"),
+            "ref_path": ref_path,
+            "ref_throughput_mops": n_reads / ref_best / 1e6,
+            "ref_wrong": ref_wrong,
+            "speedup_vs_ref": ref_best / best,
+        }
+        result["ratios"][f"x{r}"] = entry
+        print(f"x{r}: {entry['path']} {entry['throughput_mops']:.3f} "
+              f"Mops/s (tile={entry['stream_tile']}, "
+              f"bill {entry['pool_bytes'] / 2 ** 20 if entry['pool_bytes'] else 0:.1f} MiB "
+              f"vs budget {budget / 2 ** 20:.1f} MiB) | ref "
+              f"{ref_path} {entry['ref_throughput_mops']:.3f} Mops/s | "
+              f"{entry['speedup_vs_ref']:.2f}x | wrong={wrong}")
+
+        # §17 acceptance gates
+        assert wrong == 0 and ref_wrong == 0, \
+            f"x{r}: wrong answers (streamed={wrong}, ref={ref_wrong})"
+        if r == 1:
+            assert entry["path"] == "fused", entry["path"]
+        elif entry["path"] == "streamed":
+            assert entry["pool_bytes"] <= budget, \
+                f"x{r}: streamed bill exceeds the budget"
+        else:
+            # past the write-tier crossover: demotion is allowed only
+            # above the 4x acceptance floor, and never silently
+            assert r > 4, \
+                f"x{r}: left the kernel path below the 4x floor " \
+                f"({entry['path']})"
+            assert fb_stream \
+                and fb_stream.get("route") == "point-streamed" \
+                and fb_stream.get("over_bytes", 0) > 0, \
+                f"x{r}: demoted without a structured reason " \
+                f"({fb_stream})"
+            entry["fallback_reason"] = fb_stream
+
+    streamed = {k: v for k, v in result["ratios"].items()
+                if v["path"] == "streamed"}
+    if streamed:
+        worst = min(streamed.values(), key=lambda v: v["speedup_vs_ref"])
+        result["crossover"] = {
+            "max_ratio_on_kernel_path": max(
+                v["pool_over_budget_x"] for v in streamed.values()),
+            "min_speedup_vs_oracle": worst["speedup_vs_ref"],
+            "all_streamed_beat_oracle": all(
+                v["speedup_vs_ref"] > 1.0 for v in streamed.values()),
+        }
+        print(f"kernel path held to "
+              f"{result['crossover']['max_ratio_on_kernel_path']:.1f}x "
+              f"pool/budget; min streamed-vs-oracle speedup "
+              f"{result['crossover']['min_speedup_vs_oracle']:.2f}x")
+
+    idx.cfg = base_cfg
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out_json}")
+    return result
+
+
+def rows(result):
+    out = []
+    for name, e in result["ratios"].items():
+        out.append((f"streamed_{name}", e["us_per_query"],
+                    f"{e['throughput_mops']:.3f}Mops_{e['path']}_"
+                    f"tile={e['stream_tile']}"))
+    if "crossover" in result:
+        out.append(("streamed_crossover", 0.0,
+                    f"{result['crossover']['max_ratio_on_kernel_path']:.0f}"
+                    f"x_pool_over_budget"))
+    return out
+
+
+def run_at_workload(w: dict, out_json: str | None = None):
+    """Re-run at a recorded baseline's workload block (``--compare``)."""
+    return run(
+        n_keys=int(w.get("n_keys", N_KEYS)),
+        n_reads=int(w.get("n_reads", N_READS)),
+        repeats=int(w.get("repeats", REPEATS)),
+        ratios=tuple(w.get("ratios", RATIOS)),
+        delta_cap=int(w.get("delta_cap", 256)),
+        out_json=out_json)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale sizes, no JSON artifact")
+    ap.add_argument("--n-keys", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        run(n_keys=args.n_keys or 16_384, n_reads=1_024, repeats=2,
+            ratios=(1, 4), out_json=args.out)
+    else:
+        run(**{**({"n_keys": args.n_keys} if args.n_keys else {}),
+               **({"out_json": args.out} if args.out else {})})
+
+
+if __name__ == "__main__":
+    main()

@@ -94,6 +94,10 @@ def _compare_rerun(name: str, base: dict, path: str):
             n_keys=n_keys, n_reqs=int(w.get("n_reqs", 2_000)),
             n_fault_reqs=int(w.get("n_fault_reqs", 600)),
             batch_size=int(w.get("batch_size", 128)), out_json=None)
+    if name.startswith("BENCH_streamed"):
+        from benchmarks import bench_streamed
+
+        return bench_streamed.run_at_workload(w, out_json=None)
     if name.startswith("BENCH_sharded"):
         # the sharded bench needs the baseline's forced device topology,
         # and XLA_FLAGS must land before jax initializes — jax is already
@@ -169,7 +173,7 @@ def main() -> None:
                     help="tag filter, repeatable and/or comma-separated: "
                          "fig7,fig8,fig10,fig11,table1,table2,table3,"
                          "roofline,fused,mixed,serving,range,sharded,"
-                         "drift,service")
+                         "drift,service,streamed")
     ap.add_argument("--n-keys", type=int, default=None)
     ap.add_argument("--repeats", type=int, default=None,
                     help="timed repeats per variant in the repeat-based "
@@ -301,6 +305,18 @@ def main() -> None:
         else:
             rows += bench_service.rows(bench_service.run(
                 n_keys=max(n_keys, 32_768) if args.full else 32_768))
+    if want("streamed"):
+        # §17 HBM-streaming lookup tier: pool/budget ratio sweep with
+        # streamed-vs-oracle margins; emits BENCH_streamed.json
+        from benchmarks import bench_streamed
+
+        if args.smoke:
+            rows += bench_streamed.rows(bench_streamed.run(
+                n_keys=max(n_keys, 16_384), n_reads=1_024, repeats=2,
+                ratios=(1, 4), out_json=None))
+        else:
+            rows += bench_streamed.rows(bench_streamed.run(
+                n_keys=max(n_keys, 131_072) if args.full else 131_072))
     if want("sharded"):
         # §13 sharded serving at P=1 vs P=4: needs a forced multi-device
         # host, and XLA_FLAGS must land before jax initializes — jax is

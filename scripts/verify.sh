@@ -4,7 +4,8 @@
 # kernel-contract checker (static analysis + fixture self-test), the
 # tier-1 test suite, and a seconds-scale smoke of the serving-path benchmarks
 # (fused read path, mixed write path, §11 serving state, §12 range
-# scans, §14 drift re-flow, §16 SLO front-end incl. injected faults),
+# scans, §14 drift re-flow, §16 SLO front-end incl. injected faults,
+# §17 HBM-streaming tier),
 # so a doc or perf-path regression in any dispatch route is caught
 # before it lands.
 # Any "wrong" count > 0 in an emitted BENCH JSON fails the run.
@@ -48,6 +49,9 @@ run_phase python -m pytest -x -q "$@"
 echo "== serving-path smoke (fused + mixed + serving state + range) =="
 run_phase python -m benchmarks.run --smoke --only fused --only mixed \
   --only serving
+
+echo "== streamed smoke (§17 HBM-streaming tier, pool/budget sweep) =="
+run_phase python -m benchmarks.run --smoke --only streamed
 # the range and drift smokes emit BENCH_*.smoke.json so the correctness
 # gate below sees their wrong counts; the EXIT trap removes them on
 # every outcome — only the committed full-size baselines persist

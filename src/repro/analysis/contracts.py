@@ -89,6 +89,13 @@ ENTRY_POINTS: Tuple[EntryPoint, ...] = (
         name="nf_forward",
         module="repro.kernels.nf_forward", attr="nf_forward_pallas",
         bindings=(("repro.kernels.ops", "nf_forward_pallas"),)),
+    EntryPoint(
+        name="streamed_lookup",
+        module="repro.kernels.streamed_lookup", attr="streamed_lookup_pallas",
+        # per-tile local lower_bound + tier probes, all window-bounded;
+        # ops imports the symbol lazily at dispatch time, so the module
+        # binding is the only one to patch
+        trip_budget=256),
 )
 
 
@@ -170,6 +177,24 @@ def exercise_serving_world(captured_sink=None, *, seed: int = 7,
     oracle = FlatAFLI(FlatAFLIConfig(use_fused_kernel=False))
     oracle.build(keys[:128], pay[:128])
     oracle.lookup_batch(keys[:32])
+
+    # ---- §17 streamed rung: a larger flow-off world (pools must
+    # dwarf the write tiers) probed once to measure the fused bill,
+    # then re-budgeted to half of it so the point route must stream
+    # the scan pool tile-by-tile — tiers probed in-kernel at the last
+    # tile after the insert below
+    keys4 = np.unique(rng.uniform(0.0, 1e6, 4 * 4096))[:4096]
+    sidx = FlatAFLI(FlatAFLIConfig(delta_cap=64))
+    sidx.build(keys4, np.arange(keys4.shape[0], dtype=np.int64))
+    sidx.lookup_batch(keys4[:64])
+    bill = int(sidx.last_dispatch["pool_bytes"])
+    sidx.cfg = dataclasses.replace(sidx.cfg, vmem_budget=bill // 2)
+    sidx.lookup_batch(keys4[:64])
+    assert sidx.last_dispatch["path"] == "streamed", sidx.last_dispatch
+    snew = np.unique(rng.uniform(4e6, 5e6, 48))
+    sidx.insert_batch(snew,
+                      np.arange(snew.shape[0], dtype=np.int64) + 40_000)
+    sidx.lookup_batch(np.concatenate([keys4[:24], snew[:8]]))
 
     # ---- flow-on sharded NFL: router + NF forward + per-shard serving
     nfl = NFL(NFLConfig(backend="flat", shards=shards, force_flow=True,

@@ -141,6 +141,7 @@ def run_retrace_check(report: Optional[Report] = None, *, seed: int = 11,
     from repro.kernels.fused_lookup import fused_lookup_pallas
     from repro.kernels.nf_forward import nf_forward_pallas
     from repro.kernels.range_scan import fused_range_scan_pallas
+    from repro.kernels.streamed_lookup import streamed_lookup_pallas
 
     report = report or Report()
     tracked = {
@@ -150,6 +151,7 @@ def run_retrace_check(report: Optional[Report] = None, *, seed: int = 11,
         "tier_len_write": serving_state._write_len,
         "oracle_lookup": flat_lookup,
         "nf_forward": nf_forward_pallas,
+        "streamed_lookup": streamed_lookup_pallas,
     }
     for fn in tracked.values():
         fn.clear_cache()
@@ -163,9 +165,13 @@ def run_retrace_check(report: Optional[Report] = None, *, seed: int = 11,
         # one [lane] i32 length vector, always the same shape
         "tier_len_write": 1,
         # flow-off kernel-on drive: the oracle and the NF forward must
-        # never trace — a nonzero cache is a silent fallback
+        # never trace — a nonzero cache is a silent fallback.  Same for
+        # the §17 streamed rung: this drive's pools always fit the
+        # interpret budget, so a streamed trace means the dispatch
+        # ladder demoted a fused-eligible batch
         "oracle_lookup": 0,
         "nf_forward": 0,
+        "streamed_lookup": 0,
     }
     for name, fn in tracked.items():
         actual = fn._cache_size()

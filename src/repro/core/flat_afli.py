@@ -180,6 +180,8 @@ class FlatAFLIConfig:
     dense_search_iters: int = 24      # binary-search rounds (2^24 max dense)
     rebuild_frac: float = 0.25        # run/total ratio triggering the fold
     use_fused_kernel: bool = True     # serve via kernels/fused_lookup
+    use_streamed_kernel: bool = True  # §17 HBM-streaming rung when the
+                                      # fused pools outgrow the budget
     vmem_budget: Optional[int] = None  # pool-bytes cap; None -> backend default
     delta_cap: int = 4096             # active-delta bound before run merge
     fold_step_keys: int = 4096        # incremental-fold work unit (keys)
@@ -1021,6 +1023,25 @@ class FlatAFLI:
         self._sync_tiers()
         return self._serving.tier_pack()
 
+    def _stream_pack(self):
+        """StreamPack thunk for ``ops.fused_lookup``'s HBM-streaming
+        rung (§17): the rank-ordered scan pool + resident router.  The
+        pool mirrors the live static structure exactly (same build /
+        fold-swap refresh points as the tree pools), so a streamed probe
+        of it is payload-identical to the tree traversal — which is what
+        lets the ladder swap one for the other when the pools outgrow
+        the VMEM budget."""
+        return self._serving.stream_pack()
+
+    def _stream_arg(self, *, live: bool):
+        """The ``stream=`` argument for a point dispatch: the thunk on
+        the live serve path (config-gated), ``None`` on fold/candidate
+        verification dispatches — those probe an *override* structure
+        (new arrays/pools), and serving them from the live scan pool
+        would silently verify the wrong thing."""
+        return (self._stream_pack
+                if live and self.cfg.use_streamed_kernel else None)
+
     def _device_lookup_async(self, pk32: np.ndarray, hi: np.ndarray,
                              lo: np.ndarray, *, arrays=None, pools=None,
                              max_depth=None, dense_window=None,
@@ -1065,6 +1086,8 @@ class FlatAFLI:
             dense_window=(self._dense_window_static()
                           if dense_window is None else dense_window),
             tiers=self._tier_pack if tiers else None,
+            stream=self._stream_arg(
+                live=arrays is None and pools is None and tiers),
             vmem_budget=self.cfg.vmem_budget
             if self.cfg.use_fused_kernel else 0,
             sync=False,
@@ -1245,6 +1268,8 @@ class FlatAFLI:
             dense_window=(self._dense_window_static()
                           if dense_window is None else dense_window),
             tiers=self._tier_pack if tiers else None,
+            stream=self._stream_arg(
+                live=arrays is None and pools is None and tiers),
             vmem_budget=self.cfg.vmem_budget
             if self.cfg.use_fused_kernel else 0,
         )
@@ -1297,6 +1322,7 @@ class FlatAFLI:
             bucket_cap=self.cfg.max_bucket,
             dense_window=self._dense_window_static(),
             tiers=self._tier_pack,
+            stream=self._stream_arg(live=True),
             vmem_budget=self.cfg.vmem_budget
             if self.cfg.use_fused_kernel else 0,
             sync=False,

@@ -194,6 +194,14 @@ class ServingState:
         self.tree_packs = 0             # full tree pool packings
         self.tier_reuses = 0            # tier_pack calls with warm buffers
         self.scan_reuses = 0            # scan_pack calls with warm buffers
+        # streamed-tier router (DESIGN.md §17): resident first-key-per-
+        # STREAM_ALIGN-slice vector over the scan pool, rebuilt only
+        # when the pool content or capacity bucket moves (both happen
+        # off the serve path) — steady-state stream_pack calls reuse it
+        self._router = None
+        self._router_for = None         # (scan.uploads, scan.capacity)
+        self.router_builds = 0
+        self.stream_reuses = 0          # stream_pack calls w/ warm router
         self._run_dirty = True
         self._delta_dirty = True
 
@@ -260,6 +268,37 @@ class ServingState:
         return ScanPack(
             pool=ScanPool(pk=s.pk, hi=s.hi, lo=s.lo, pv=s.pv, plen=s.plen),
             iters=s.iters)
+
+    def stream_pack(self):
+        """The streamed-tier dispatch bundle for ``ops.fused_lookup``'s
+        HBM-streaming rung (DESIGN.md §17): the rank-ordered scan pool
+        (streamed in tiles), its resident router vector, and the pool's
+        duplicate-run window.  The router is keyed on the pool's upload
+        version + capacity bucket, so it is rebuilt only at build / fold
+        swap / bucket growth — the same off-serve-path cadence as the
+        pool itself — and every steady-state call reuses the resident
+        vector (zero-repack, §11 discipline).  The pool buffers are
+        shared with ``scan_pack`` — the streamed tier adds only the
+        router's few KiB of device state."""
+        from repro.kernels.range_scan import ScanPool
+        from repro.kernels.streamed_lookup import StreamPack, build_router
+
+        if self.scan.pk is None:
+            self.scan.refresh(np.empty(0, np.float32),
+                              np.empty(0, np.uint32),
+                              np.empty(0, np.uint32),
+                              np.empty(0, np.int32), self.scan.window)
+        s = self.scan
+        key = (s.uploads, s.capacity)
+        if self._router is None or self._router_for != key:
+            self._router = build_router(s.pk)
+            self._router_for = key
+            self.router_builds += 1
+        else:
+            self.stream_reuses += 1
+        return StreamPack(
+            pool=ScanPool(pk=s.pk, hi=s.hi, lo=s.lo, pv=s.pv, plen=s.plen),
+            router=self._router, window=s.window)
 
     # ------------------------------------------------------------ tiers
     def preallocate(self, *, delta_floor: int, run_floor: int,
@@ -372,10 +411,16 @@ class ServingState:
             pools = tuple((tuple(a.shape), str(a.dtype))
                           for a in self.tree_pools)
         tiers_live = bool(self.run.length or self.delta.length)
+        # the scan-pool coordinates are point-lookup coordinates too
+        # (§17): a point dispatch that falls off the fused rung serves
+        # from the streamed scan pool, whose kernel statics (tile count,
+        # router shape, duplicate window) are functions of the capacity
+        # bucket + window ratchet — both only move at build/fold swap
         return (pools, tiers_live,
                 self.run.capacity, self.run.iters, self.run.window,
                 self.delta.capacity, self.delta.iters, self.delta.window,
-                self.max_depth, self.dense_window)
+                self.max_depth, self.dense_window,
+                self.scan.capacity, self.scan.window)
 
     def scan_signature(self) -> tuple:
         """The declared range-scan lattice point: the point signature's
@@ -403,6 +448,8 @@ class ServingState:
             "tier_repacks": (self.run.repacks + self.delta.repacks
                              + self.scan.repacks),
             "scan_uploads": self.scan.uploads,
+            "router_builds": self.router_builds,
+            "stream_reuses": self.stream_reuses,
             "run_capacity": self.run.capacity,
             "delta_capacity": self.delta.capacity,
             "scan_capacity": self.scan.capacity,
@@ -419,3 +466,5 @@ class ServingState:
         self.tree_packs = 0
         self.tier_reuses = 0
         self.scan_reuses = 0
+        self.router_builds = 0
+        self.stream_reuses = 0

@@ -56,7 +56,8 @@ from repro.kernels.nf_forward import apply_flow_tile
 
 __all__ = ["fused_lookup_pallas", "KernelPools", "TierPools", "TierPack",
            "DEFAULT_TILE", "INTERPRET_TILE", "NF_TILE", "TOMBSTONE",
-           "nf_forward_lanes", "lower_bound", "probe_pool"]
+           "nf_forward_lanes", "lower_bound", "probe_pool",
+           "probe_pool_index"]
 
 DEFAULT_TILE = 512       # lane-aligned query tile for compiled TPU runs
 INTERPRET_TILE = 2048    # CPU validation: per-step query tile of the
@@ -74,9 +75,10 @@ TOMBSTONE = -2
 
 
 # ---------------------------------------------------------------- shared
-# traversal helpers, used by this kernel AND kernels/range_scan.py (the
-# fused range-scan path reuses the same tiled-grid machinery: NF sub-tile
-# discipline, bounded lower-bound search, identity-window probes).
+# traversal helpers, used by this kernel AND kernels/range_scan.py AND
+# kernels/streamed_lookup.py (the fused range-scan and HBM-streaming
+# paths reuse the same tiled-grid machinery: NF sub-tile discipline,
+# bounded lower-bound search, identity-window probes).
 
 def nf_forward_lanes(feat_ref, w_ref, dim: int, shapes) -> jnp.ndarray:
     """NF forward over one [tile] lane batch of expanded features.
@@ -115,10 +117,10 @@ def lower_bound(ppk, n_pool, qkey, iters: int) -> jnp.ndarray:
     return l_fin
 
 
-def probe_pool(phi, plo, ppv, n_pool, l_fin, nmax, window: int,
-               qhi, qlo) -> jnp.ndarray:
-    """Newest matching payload per lane from one sorted pool (-1 = miss;
-    a matched TOMBSTONE payload passes through for the caller to mask).
+def probe_pool_index(phi, plo, n_pool, l_fin, nmax, window: int,
+                     qhi, qlo) -> jnp.ndarray:
+    """Newest matching *pool index* per lane from one sorted pool
+    (-1 = no identity match in the probe window).
 
     Scans ``[l_fin - window, l_fin + 3*window)`` around the lower-bound
     landing: backward reach for a high landing (a query key 1 ulp above
@@ -127,14 +129,26 @@ def probe_pool(phi, plo, ppv, n_pool, l_fin, nmax, window: int,
     pow2-rounded max equal-key run length of the pool).  Matching is by
     exact (hi, lo) identity ONLY — the positioning key is the locator,
     never the matcher (XLA's per-consumer-shape NF re-materialization is
-    1-ulp divergent, so f32 key equality is not codegen-stable)."""
+    1-ulp divergent, so f32 key equality is not codegen-stable).  The
+    index form is what the streamed tier accumulates across pool tiles
+    (global index order == insertion order, so max-index == newest)."""
     widx = (l_fin - window)[:, None] + jax.lax.broadcasted_iota(
         jnp.int32, (l_fin.shape[0], 4 * window), 1)
     wc = jnp.clip(widx, 0, nmax - 1)
     ok = ((widx >= 0) & (widx < n_pool)
           & (phi[wc] == qhi[:, None])
           & (plo[wc] == qlo[:, None]))
-    last = jnp.max(jnp.where(ok, widx, -1), axis=1)
+    return jnp.max(jnp.where(ok, widx, -1), axis=1)
+
+
+def probe_pool(phi, plo, ppv, n_pool, l_fin, nmax, window: int,
+               qhi, qlo) -> jnp.ndarray:
+    """Newest matching payload per lane from one sorted pool (-1 = miss;
+    a matched TOMBSTONE payload passes through for the caller to mask).
+    Payload form of ``probe_pool_index`` — see there for the window
+    coverage and identity-only matching arguments."""
+    last = probe_pool_index(phi, plo, n_pool, l_fin, nmax, window,
+                            qhi, qlo)
     pay = ppv[jnp.clip(last, 0, nmax - 1)]
     return jnp.where(last >= 0, pay, -1)
 

@@ -141,6 +141,11 @@ _FUSED_STATS = {
     "tier_kernel_count": 0,  # calls that probed the tiers in-kernel
     "host_probe_count": 0,   # calls whose tiers fell to the host oracle
     "retrace_count": 0,    # calls that paid a fresh XLA trace
+    # HBM-streaming rung (DESIGN.md §17)
+    "streamed_count": 0,       # streamed single-dispatch path taken
+    "stream_fallback_count": 0,  # streaming attempted but could not run
+    "streamed_tiles_count": 0,   # cumulative pool tiles DMA'd by the
+    #                              streamed grid (query tiles x pool tiles)
     # range-scan path (DESIGN.md §12)
     "scan_dispatch_count": 0,  # fused_range_scan shim calls
     "scan_fused_count": 0,     # single-dispatch range kernel taken
@@ -152,11 +157,15 @@ _FUSED_STATS = {
 # the ``overflow_reason`` vocabulary (+ a cumulative count).  Routes:
 # "point" = tree pools fell off the kernel path entirely (oracle),
 # "point-tiers" = pools fit but the tier ride-along did not (host
-# probe), "scan" = the all-or-nothing range path went host.  ``None``
-# until that route falls back — a silent fallback is no longer
-# possible: every budget miss names the component and the bytes.
+# probe), "point-streamed" = the HBM-streaming rung could not run
+# either (its resident floor — write tiers + router + the minimum
+# double-buffered tile pair — already exceeds the budget), "scan" = the
+# all-or-nothing range path went host.  ``None`` until that route falls
+# back — a silent fallback is no longer possible: every budget miss
+# names the component and the bytes.
 _FALLBACK_REASONS: Dict[str, Dict | None] = {
-    "point": None, "point-tiers": None, "scan": None,
+    "point": None, "point-tiers": None, "point-streamed": None,
+    "scan": None,
 }
 
 # One lock serializes every counter mutation AND the snapshot-and-reset
@@ -305,9 +314,11 @@ def serving_cache_size() -> int:
     from repro.core.flat_afli import flat_lookup
     from repro.kernels.fused_lookup import fused_lookup_pallas
     from repro.kernels.range_scan import fused_range_scan_pallas
+    from repro.kernels.streamed_lookup import streamed_lookup_pallas
 
     total = 0
-    for fn in (fused_lookup_pallas, fused_range_scan_pallas, flat_lookup,
+    for fn in (fused_lookup_pallas, streamed_lookup_pallas,
+               fused_range_scan_pallas, flat_lookup,
                nf_forward_pallas):
         try:
             total += fn._cache_size()
@@ -318,15 +329,24 @@ def serving_cache_size() -> int:
 
 def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
                  max_depth: int, dense_iters: int, bucket_cap: int,
-                 dense_window: int = 8, tiers=None, vmem_budget=None,
-                 tile=None, interpret=None, sync: bool = True):
-    """Dispatch shim for the fused single-dispatch lookup (DESIGN.md §9).
+                 dense_window: int = 8, tiers=None, stream=None,
+                 vmem_budget=None, tile=None, interpret=None,
+                 sync: bool = True):
+    """Dispatch shim for the point-lookup ladder: fused -> streamed ->
+    oracle (DESIGN.md §9/§17).
 
     When the packed pools fit the VMEM budget, the whole read path — NF
     forward + multi-level traversal + identity resolution — runs as ONE
-    ``pallas_call`` (``kernels/fused_lookup``).  Oversized pools fall back
-    to the bit-identical oracle path: ``nf_forward_pallas`` (when ``flow``
-    is given) followed by the pure-jnp ``flat_lookup`` while-loop.
+    ``pallas_call`` (``kernels/fused_lookup``).  When they do not (or the
+    tier ride-along pushes the bill over), the **streamed** rung keeps
+    serving on a single ``pallas_call`` by streaming the rank-ordered
+    pool HBM->VMEM in double-buffered tiles with the write tiers still
+    resident (``kernels/streamed_lookup``) — its budget is billed per
+    tile working set, not whole-pool bytes.  Only when even the streamed
+    rung's resident floor exceeds the budget does the path fall back to
+    the bit-identical oracle: ``nf_forward_pallas`` (when ``flow`` is
+    given) followed by the pure-jnp ``flat_lookup`` while-loop plus a
+    host-side tier probe.
 
     arrays: the ``FlatArrays`` pools (oracle path); pools: their packed
     ``KernelPools`` twin, or a zero-arg callable producing it — the thunk
@@ -337,7 +357,8 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
     optional ``TierPack`` (or a thunk producing one, or ``None`` when the
     write tiers are empty) — when it also fits the budget the run/delta
     tiers are probed *in-kernel* (DESIGN.md §10) and no host-side delta
-    probe is needed.
+    probe is needed; stream: optional ``StreamPack`` (or thunk / None)
+    enabling the streamed rung — ``ServingState.stream_pack``.
 
     Returns ``(payload i32[n], positioning_key f32[n], info)`` as numpy
     — or as device arrays when ``sync=False``, which dispatches without
@@ -391,9 +412,102 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
     else:
         packed_w, shapes = jnp.zeros((1, 1), jnp.float32), ()
 
+    def _attempt_streamed(tiers_in):
+        """The HBM-streaming rung (DESIGN.md §17): serve from the
+        rank-ordered pool in double-buffered ``stream_tile`` slices with
+        the write tiers VMEM-resident.  Returns the finished result
+        tuple, or ``None`` — with the structured ``point-streamed``
+        reason recorded — when even streaming cannot run (the resident
+        floor alone exceeds the budget, or no stream pack is wired)."""
+        nonlocal stream
+        if stream is None or vmem_budget <= 0 or forced:
+            return None
+        from repro.kernels.streamed_lookup import (
+            MIN_STREAM_TILE, select_stream_tile, stream_resident_parts,
+            streamed_lookup_pallas)
+
+        if callable(stream):
+            stream = stream()
+        if stream is None:
+            return None
+        tiers_s = tiers_in() if callable(tiers_in) else tiers_in
+        have_t = tiers_s is not None
+        t_bytes = tiers_s.nbytes() if have_t else 0
+        cap = int(stream.pool.pk.shape[0])
+        router_len = int(stream.router.shape[0])
+        # every (query tile, pool tile) grid step costs real overhead —
+        # pipeline bubbles compiled, per-step dispatch interpreted — so
+        # co-optimize the two tiles for minimum total grid steps under
+        # the budget instead of inheriting the fused rung's query tile.
+        # Doubling the query tile is bit-equality-safe: the NF forward
+        # always evaluates in fixed NF_TILE sub-tiles no matter the
+        # query-tile width (fused_lookup module docstring).
+        b_n = int(feats.shape[0])
+        floor_parts = stream_resident_parts(cap, router_len, t_bytes,
+                                            MIN_STREAM_TILE, q_tile, dim)
+        best = None  # (grid_steps, query_tile, stream_tile)
+        qt = q_tile
+        while True:
+            parts = stream_resident_parts(cap, router_len, t_bytes,
+                                          MIN_STREAM_TILE, qt, dim)
+            res_qt = sum(b for name, b in parts
+                         if name != "stream-tiles")
+            st_qt = select_stream_tile(cap, vmem_budget, res_qt)
+            if st_qt is None:
+                break  # a wider query block can only fit worse
+            steps = -(-b_n // qt) * (cap // st_qt)
+            if best is None or steps < best[0]:
+                best = (steps, qt, st_qt)
+            if qt >= b_n:
+                break
+            qt *= 2
+        if best is None:
+            _bump(stream_fallback_count=1)
+            _note_fallback("point-streamed",
+                           overflow_reason(floor_parts, vmem_budget))
+            return None
+        _, sq_tile, st = best
+        pay, z = streamed_lookup_pallas(
+            feats, qhi, qlo, packed_w, stream.pool, stream.router,
+            tiers_s.pools if have_t else None,
+            dim=dim, shapes=shapes, window=stream.window,
+            use_flow=use_flow, stream_tile=st, tile=sq_tile,
+            interpret=interpret, probe_tiers=have_t,
+            run_iters=tiers_s.run_iters if have_t else 1,
+            run_window=tiers_s.run_window if have_t else 4,
+            delta_iters=tiers_s.delta_iters if have_t else 1,
+            delta_window=tiers_s.delta_window if have_t else 4,
+        )
+        retraced = serving_cache_size() > cache_before
+        b_pad = -(-b_n // sq_tile) * sq_tile
+        n_tiles = (b_pad // sq_tile) * (cap // st)
+        bill = sum(b for _, b in stream_resident_parts(
+            cap, router_len, t_bytes, st, sq_tile, dim))
+        _bump(streamed_count=1, retrace_count=int(retraced),
+              tier_kernel_count=int(have_t), streamed_tiles_count=n_tiles)
+        info = {"path": "streamed", "n_dispatch": 1, "pool_bytes": bill,
+                "pool_stream_bytes": int(stream.pool.nbytes()),
+                "stream_tile": st, "tiles_streamed": n_tiles,
+                "tier_bytes": t_bytes, "retraced": retraced,
+                "tier_path": "kernel" if have_t else "none",
+                "host_probe": False, "fallback_reason": None}
+        if not sync:
+            return pay, z, info
+        return np.asarray(pay), np.asarray(z), info
+
     if nbytes is not None and nbytes <= vmem_budget:
         # tree pools fit; tiers ride along only if the budget still holds
         kernel_tiers = have_tiers and nbytes + tier_bytes <= vmem_budget
+        if have_tiers and not kernel_tiers:
+            # the pools fit but the tier ride-along does not: before
+            # dropping the tiers to the host probe, try the streamed
+            # rung — its resident bill is tiers + router + one
+            # double-buffered tile pair, usually far under the fused
+            # pools, and it keeps the whole batch on one dispatch with
+            # zero host tier probes
+            out = _attempt_streamed(tiers)
+            if out is not None:
+                return out
         pay, z = fused_lookup_pallas(
             feats, qhi, qlo, packed_w, pools,
             tiers.pools if kernel_tiers else None,
@@ -429,8 +543,17 @@ def fused_lookup(arrays, pools, feats, qhi, qlo, *, flow=None,
             return pay, z, info
         return np.asarray(pay), np.asarray(z), info
 
-    # oracle fallback: pools exceed the budget -> keep them in HBM and use
-    # the gather-per-level jnp traversal (two dispatches when flow is on)
+    # streamed rung: pools exceed the budget -> stream the rank-ordered
+    # pool through VMEM in double-buffered tiles (DESIGN.md §17) before
+    # surrendering the batch to the host oracle
+    out = _attempt_streamed(tiers)
+    if out is not None:
+        return out
+
+    # oracle fallback: pools exceed the budget AND the streamed rung's
+    # resident floor does not fit (or no stream pack is wired) -> keep
+    # the pools in HBM and use the gather-per-level jnp traversal (two
+    # dispatches when flow is on)
     if use_flow:
         z = nf_forward_pallas(jnp.asarray(feats, jnp.float32), packed_w,
                               shapes, dim, interpret=interpret)

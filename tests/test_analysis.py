@@ -132,12 +132,32 @@ def test_vmem_regression_overflowing_must_fit_config():
     bad = VmemConfig(name="toy-overflow", n_keys=1 << 20)  # must_fit=True
     rep = run_vmem_checks(configs=(bad,))
     blocking = rep.blocking()
-    assert blocking, "a 1M-key unsharded pool cannot fit 12 MiB"
+    assert blocking, "a 1M-key unsharded scan pool cannot fit 12 MiB"
     f = blocking[0]
-    assert f.contract == "vmem" and "tree-pools" in f.message
+    assert f.contract == "vmem" and "scan-pool" in f.message
     path, _, line = f.location.rpartition(":")
     assert path.endswith(".py") and int(line) > 0
     assert f.details["over_bytes"] > 0
+    # the point route does NOT block at 1M: the §17 streamed rung
+    # certifiably serves it, and the fused cliff stays an advisory
+    streamed = [g for g in rep.advisory()
+                if g.entry == "toy-overflow:point"]
+    assert streamed and "streamed rung" in streamed[0].message
+    assert streamed[0].details["stream_tile"] >= 128
+    assert {e for e, _ in rep.checked} >= {"toy-overflow:point-streamed"}
+
+
+def test_vmem_regression_budget_below_streamed_floor():
+    from repro.analysis.vmem import VmemConfig, run_vmem_checks
+
+    # Starve the budget below even the streamed resident floor (the
+    # write tiers alone are ~9 MiB at this scale): the point route must
+    # block and name the rung that could not run.
+    bad = VmemConfig(name="toy-starved", n_keys=1 << 20, budget=2 ** 20)
+    rep = run_vmem_checks(configs=(bad,))
+    point = [f for f in rep.blocking() if f.entry == "toy-starved:point"]
+    assert point, "no streamed escape hatch under a 1 MiB budget"
+    assert "streamed rung cannot run" in point[0].message
 
 
 # --------------------------------------------------- clean-pass layer
