@@ -87,6 +87,14 @@ def _compare_rerun(name: str, base: dict, path: str):
             n_settle=int(w.get("n_settle", 6_144)),
             n_steady=int(w.get("n_steady", 16_384)),
             batch_size=int(w.get("batch_size", 256)), out_json=None)
+    if name.startswith("BENCH_resharding"):
+        from benchmarks import bench_resharding
+
+        return bench_resharding.run(
+            n_keys=n_keys, n_storm=int(w.get("n_storm", 12_288)),
+            n_settle_batches=int(w.get("n_settle_batches", 48)),
+            n_steady=int(w.get("n_steady", 16_384)),
+            batch_size=int(w.get("batch_size", 256)), out_json=None)
     if name.startswith("BENCH_service"):
         from benchmarks import bench_service
 
@@ -173,7 +181,7 @@ def main() -> None:
                     help="tag filter, repeatable and/or comma-separated: "
                          "fig7,fig8,fig10,fig11,table1,table2,table3,"
                          "roofline,fused,mixed,serving,range,sharded,"
-                         "drift,service,streamed")
+                         "drift,resharding,service,streamed")
     ap.add_argument("--n-keys", type=int, default=None)
     ap.add_argument("--repeats", type=int, default=None,
                     help="timed repeats per variant in the repeat-based "
@@ -289,6 +297,23 @@ def main() -> None:
         else:
             rows += bench_drift.rows(bench_drift.run(
                 n_keys=max(n_keys, 32_768) if args.full else 32_768))
+    if want("resharding"):
+        # §18 dynamic resharding: hot-shard split with online boundary
+        # migration vs balanced/off/forced-failure; emits
+        # BENCH_resharding.json (smoke: a .smoke.json artifact so the
+        # verify.sh correctness gate sees the wrong counts without
+        # clobbering the committed baseline)
+        from benchmarks import bench_resharding
+
+        if args.smoke:
+            rows += bench_resharding.rows(bench_resharding.run(
+                n_keys=n_keys, n_storm=3_072, n_settle_batches=24,
+                n_steady=4_096, batch_size=128,
+                out_json="BENCH_resharding.smoke.json"))
+        else:
+            rows += bench_resharding.rows(bench_resharding.run(
+                n_keys=max(n_keys, 32_768) if args.full else 32_768,
+                assert_perf=True))
     if want("service"):
         # §16 SLO front-end: goodput-vs-SLO curves, 2x-overload admission
         # contrast, injected-fault degradation; emits BENCH_service.json

@@ -5,7 +5,7 @@
 # tier-1 test suite, and a seconds-scale smoke of the serving-path benchmarks
 # (fused read path, mixed write path, §11 serving state, §12 range
 # scans, §14 drift re-flow, §16 SLO front-end incl. injected faults,
-# §17 HBM-streaming tier),
+# §17 HBM-streaming tier, §18 dynamic resharding),
 # so a doc or perf-path regression in any dispatch route is caught
 # before it lands.
 # Any "wrong" count > 0 in an emitted BENCH JSON fails the run.
@@ -55,7 +55,7 @@ run_phase python -m benchmarks.run --smoke --only streamed
 # the range and drift smokes emit BENCH_*.smoke.json so the correctness
 # gate below sees their wrong counts; the EXIT trap removes them on
 # every outcome — only the committed full-size baselines persist
-trap 'rm -f BENCH_range_scan.smoke.json BENCH_drift.smoke.json BENCH_service.smoke.json' EXIT
+trap 'rm -f BENCH_range_scan.smoke.json BENCH_drift.smoke.json BENCH_service.smoke.json BENCH_resharding.smoke.json' EXIT
 run_phase python -m benchmarks.run --smoke --only range
 
 echo "== drift smoke (§14 re-flow on/off/forced-failure) =="
@@ -63,6 +63,9 @@ run_phase python -m benchmarks.run --smoke --only drift
 
 echo "== service smoke (§16 SLO front-end + injected faults) =="
 run_phase python -m benchmarks.run --smoke --only service
+
+echo "== resharding smoke (§18 hot-shard migration on/off/forced-failure) =="
+run_phase python -m benchmarks.run --smoke --only resharding
 
 echo "== bench JSON correctness gate (wrong > 0 fails) =="
 python - <<'PY'

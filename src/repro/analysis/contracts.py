@@ -73,6 +73,14 @@ ENTRY_POINTS: Tuple[EntryPoint, ...] = (
         name="shard_router",
         module="repro.kernels.shard_dispatch", attr="_route_flow"),
     EntryPoint(
+        name="boundary_splice",
+        # the §18 migration-swap boundary refresh: a value-only
+        # dynamic_update_slice over the f32[P-1] boundary vector, with
+        # the window offset traced — the swap must hold the host-escape
+        # and retrace contracts exactly like the steady serve path,
+        # because it runs between two serving batches
+        module="repro.kernels.shard_dispatch", attr="_splice_boundaries"),
+    EntryPoint(
         name="tier_refresh",
         module="repro.core.serving_state", attr="_write_prefix"),
     EntryPoint(
@@ -206,6 +214,16 @@ def exercise_serving_world(captured_sink=None, *, seed: int = 7,
     nfl.insert_batch(new2, np.arange(new2.shape[0], dtype=np.int64) + 20_000)
     nfl.lookup_batch(np.concatenate([keys2[:32], new2[:16]]))
     nfl.scan_batch(keys2[:8], keys2[8:16])
+
+    # ---- §18 boundary migration over the same sharded world: the
+    # swap's boundary splice is a registered entry point (it runs
+    # between two serving batches, so host-escape and retrace budgets
+    # apply to it like any serve dispatch); rebuild() drives the
+    # in-flight window folds to the atomic swap, and the post-swap
+    # lookup serves through the refreshed boundaries
+    assert nfl.index.start_reshard(0, shards - 1, on_swap=lambda: None)
+    nfl.index.rebuild()
+    nfl.lookup_batch(keys2[:32])
 
     # ---- §16 SLO front-end over the same sharded flow-on NFL: the
     # double-buffered async dispatch forms its own (smaller, mixed-op)

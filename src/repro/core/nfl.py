@@ -41,7 +41,14 @@ import numpy as np
 
 from repro.core.afli import AFLI, AFLIConfig
 from repro.core.conflict import dataset_tail_conflict, should_use_flow
-from repro.core.drift import DriftConfig, DriftMonitor, ReflowManager
+from repro.core.drift import (
+    DriftConfig,
+    DriftMonitor,
+    ExclusionLock,
+    ReflowManager,
+    ReshardConfig,
+    ReshardManager,
+)
 from repro.core.feature import expand_features
 from repro.core.flat_afli import FlatAFLI, FlatAFLIConfig
 from repro.core.flow import FlowConfig, transform_keys
@@ -64,6 +71,11 @@ class NFLConfig:
     drift: DriftConfig = dataclasses.field(default_factory=DriftConfig)
                                        # drift telemetry + background
                                        # re-flow (flat backend, §14)
+    reshard: ReshardConfig = dataclasses.field(
+        default_factory=ReshardConfig)
+                                       # hot-shard load telemetry +
+                                       # boundary migration (sharded
+                                       # flat backend, §18)
 
 
 class NFL:
@@ -93,14 +105,24 @@ class NFL:
         if self.cfg.drift.reflow and self.cfg.backend != "flat":
             raise ValueError("drift.reflow requires backend='flat' (the "
                              "re-key rides the incremental-fold machinery)")
+        if self.cfg.reshard.enabled and (self.cfg.backend != "flat"
+                                         or self.cfg.shards < 2):
+            raise ValueError("reshard.enabled requires backend='flat' "
+                             "with shards > 1 (boundary migration moves "
+                             "the sharded router's boundaries)")
         self._drift: Optional[DriftMonitor] = None
         self._reflow: Optional[ReflowManager] = None
+        self._reshard: Optional[ReshardManager] = None
         # serializes the drift/re-flow tick on the write path against
         # ``dispatch_stats(reset=True)`` snapshots from another thread
         # (the §16 front-end loop): an unlocked reset racing a tick
         # could zero counters mid-transition and lose counts.  RLock —
         # the tick's injected callables may themselves read stats.
         self._telemetry_lock = threading.RLock()
+        # one structural-exclusion token shared by BOTH managers (§18):
+        # a re-flow re-derives every boundary, a migration moves a
+        # window of them — they must never interleave
+        self._exclusion = ExclusionLock()
         if self.cfg.backend == "flat" and self.cfg.drift.enabled:
             self._drift = DriftMonitor(self.cfg.drift)
             self._reflow = ReflowManager(
@@ -108,7 +130,16 @@ class NFL:
                 serving_tail=self._drift_serving_tail,
                 train_factory=self._drift_train_factory,
                 evaluate=self._drift_evaluate,
-                apply=self._drift_apply)
+                apply=self._drift_apply,
+                exclusion=self._exclusion)
+        if self.cfg.reshard.enabled:
+            self.index.load_window_keys = int(
+                self.cfg.reshard.load_window_keys)
+            self._reshard = ReshardManager(
+                self.cfg.reshard,
+                load_snapshot=self.index.load_snapshot,
+                start_migration=self._reshard_apply,
+                exclusion=self._exclusion)
 
     # ------------------------------------------------------------ bulkload
     def bulkload(self, keys: np.ndarray, payloads: np.ndarray) -> None:
@@ -287,6 +318,26 @@ class NFL:
 
         return self.index.start_reflow(transform_fn, serve_ctx, on_swap)
 
+    # -------------------------------------------- reshard callbacks (§18)
+    def _reshard_apply(self, lo: int, hi: int) -> bool:
+        """Start the localized boundary migration of shard window
+        ``[lo, hi]``.  The sharded index owns atomicity and rollback;
+        the manager's ``note_swap`` / ``note_failure`` close the episode
+        from the index's swap/abort callbacks."""
+        return self.index.start_reshard(
+            lo, hi, on_swap=self._reshard.note_swap,
+            on_abort=self._reshard.note_failure)
+
+    def _reshard_note(self, n_keys: int) -> None:
+        """Feed routed traffic to the reshard manager (reads AND writes
+        — read skew is the §18 trigger) and give it one bounded control
+        tick, under the same telemetry lock the §14 tick uses."""
+        if self._reshard is None:
+            return
+        with self._telemetry_lock:
+            self._reshard.observe(int(n_keys))
+            self._reshard.tick()
+
     def _pkeys(self, keys: np.ndarray) -> np.ndarray:
         """Positioning keys for a batch of query keys (online NF inference)."""
         keys = np.asarray(keys, dtype=np.float64)
@@ -300,12 +351,16 @@ class NFL:
         keys = np.asarray(keys, dtype=np.float64)
         if self.cfg.backend == "flat":
             if not self.use_flow:
-                return self.index.lookup_batch(keys)
+                res = self.index.lookup_batch(keys)
+                self._reshard_note(keys.shape[0])
+                return res
             # fused single dispatch: NF forward + traversal in one kernel
             feats = expand_features(keys, self.normalizer, self.cfg.flow.dim,
                                     self.cfg.flow.theta, dtype=np.float32)
-            return self.index.lookup_batch_flow(feats, keys, self._packed_w,
-                                                self._shapes)
+            res = self.index.lookup_batch_flow(feats, keys, self._packed_w,
+                                               self._shapes)
+            self._reshard_note(keys.shape[0])
+            return res
         pkeys = self._pkeys(keys)
         out = np.empty(keys.shape[0], dtype=np.int64)
         lookup = self.index.lookup
@@ -328,11 +383,18 @@ class NFL:
         keys = np.asarray(keys, dtype=np.float64)
         if self.cfg.backend == "flat":
             if not self.use_flow:
-                return self.index.lookup_batch_async(keys)
-            feats = expand_features(keys, self.normalizer, self.cfg.flow.dim,
-                                    self.cfg.flow.theta, dtype=np.float32)
-            return self.index.lookup_batch_flow_async(
-                feats, keys, self._packed_w, self._shapes)
+                finish = self.index.lookup_batch_async(keys)
+            else:
+                feats = expand_features(keys, self.normalizer,
+                                        self.cfg.flow.dim,
+                                        self.cfg.flow.theta,
+                                        dtype=np.float32)
+                finish = self.index.lookup_batch_flow_async(
+                    feats, keys, self._packed_w, self._shapes)
+            # kernels are already in flight: the reshard control tick
+            # overlaps the device work it is charged to
+            self._reshard_note(keys.shape[0])
+            return finish
         res = self.lookup_batch(keys)
         return lambda: res
 
@@ -347,6 +409,7 @@ class NFL:
                 with self._telemetry_lock:
                     self._drift.observe(keys)
                     self._reflow.tick()
+            self._reshard_note(keys.shape[0])
             return
         insert = self.index.insert
         for i in range(keys.shape[0]):
@@ -379,8 +442,10 @@ class NFL:
         keys = np.asarray(keys, dtype=np.float64)
         pkeys = self._pkeys(keys)
         if self.cfg.backend == "flat":
-            return self.index.delete_batch(
+            res = self.index.delete_batch(
                 pkeys, ikeys=keys if self.use_flow else None)
+            self._reshard_note(keys.shape[0])
+            return res
         delete = self.index.delete
         return np.fromiter(
             (delete(p, k) for p, k in zip(pkeys.tolist(), keys.tolist())),
@@ -405,16 +470,21 @@ class NFL:
         lo_keys = np.asarray(lo_keys, dtype=np.float64)
         hi_keys = np.asarray(hi_keys, dtype=np.float64)
         if not self.use_flow:
-            return self.index.scan_batch(lo_keys, hi_keys, cap=cap)
-        feats_lo = expand_features(lo_keys, self.normalizer,
-                                   self.cfg.flow.dim, self.cfg.flow.theta,
-                                   dtype=np.float32)
-        feats_hi = expand_features(hi_keys, self.normalizer,
-                                   self.cfg.flow.dim, self.cfg.flow.theta,
-                                   dtype=np.float32)
-        return self.index.scan_batch_flow(feats_lo, feats_hi,
-                                          self._packed_w, self._shapes,
-                                          cap=cap)
+            res = self.index.scan_batch(lo_keys, hi_keys, cap=cap)
+        else:
+            feats_lo = expand_features(lo_keys, self.normalizer,
+                                       self.cfg.flow.dim,
+                                       self.cfg.flow.theta,
+                                       dtype=np.float32)
+            feats_hi = expand_features(hi_keys, self.normalizer,
+                                       self.cfg.flow.dim,
+                                       self.cfg.flow.theta,
+                                       dtype=np.float32)
+            res = self.index.scan_batch_flow(feats_lo, feats_hi,
+                                             self._packed_w, self._shapes,
+                                             cap=cap)
+        self._reshard_note(lo_keys.shape[0])
+        return res
 
     # established range-query spelling alongside the batched name
     lookup_range = scan_batch
@@ -454,6 +524,16 @@ class NFL:
                                     "signals": self.index.drift_signals()}
                 else:
                     out["drift"] = {"enabled": False}
+                if self._reshard is not None:
+                    # episode counters are monotone state and survive
+                    # reset, exactly like the §14 drift counters; the
+                    # per-shard load gauges ride in out["shards"] (and
+                    # here) and survive too
+                    out["reshard"] = {"enabled": True,
+                                      **self._reshard.stats(),
+                                      "load": self.index.load_snapshot()}
+                else:
+                    out["reshard"] = {"enabled": False}
                 if reset:
                     self.index.reset_telemetry()
         return out

@@ -194,6 +194,7 @@ class ServingState:
         self.tree_packs = 0             # full tree pool packings
         self.tier_reuses = 0            # tier_pack calls with warm buffers
         self.scan_reuses = 0            # scan_pack calls with warm buffers
+        self.ratchet_releases = 0       # release_ratchets calls (§14/§18)
         # streamed-tier router (DESIGN.md §17): resident first-key-per-
         # STREAM_ALIGN-slice vector over the scan pool, rebuilt only
         # when the pool content or capacity bucket moves (both happen
@@ -234,15 +235,21 @@ class ServingState:
         transform was accepted precisely because its conflict tail is
         smaller, so carrying the drifted geometry (huge dense windows,
         wide tier scans) forward would spend the win on inert scanning
-        forever.  Called ONLY at a re-flow swap, before ``set_tree``;
-        the next dispatch per shape pays one retrace, which is the
-        documented, bounded price of adopting the new transform."""
+        forever.  Called ONLY at a structural swap — a §14 re-flow
+        re-key, before ``set_tree`` — and counted (``ratchet_releases``)
+        so the §18 migration tests can assert the release stays scoped
+        to migrated shards: a fresh candidate shard starts from a fresh
+        ``ServingState`` (released by construction), and an untouched
+        shard's counter must not move.  The next dispatch per shape pays
+        one retrace, which is the documented, bounded price of adopting
+        the new geometry."""
         from repro.core.flat_afli import _depth_round, _window_round
 
         self.max_depth = _depth_round(max_depth)
         self.dense_window = _window_round(dense_window)
         for t in (self.run, self.delta, self.scan):
             t.window = 4
+        self.ratchet_releases += 1
 
     def set_scan(self, pk, hi, lo, pv, window: int) -> None:
         """Adopt the (re)built structure's rank-ordered scan pool
@@ -448,6 +455,7 @@ class ServingState:
             "tier_repacks": (self.run.repacks + self.delta.repacks
                              + self.scan.repacks),
             "scan_uploads": self.scan.uploads,
+            "ratchet_releases": self.ratchet_releases,
             "router_builds": self.router_builds,
             "stream_reuses": self.stream_reuses,
             "run_capacity": self.run.capacity,
@@ -466,5 +474,6 @@ class ServingState:
         self.tree_packs = 0
         self.tier_reuses = 0
         self.scan_reuses = 0
+        self.ratchet_releases = 0
         self.router_builds = 0
         self.stream_reuses = 0

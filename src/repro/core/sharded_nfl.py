@@ -64,12 +64,47 @@ from repro.dist.sharding import named_sharding, shard_mesh
 from repro.kernels.shard_dispatch import (
     choose_boundaries,
     fanout_plan,
+    refresh_boundaries,
     route,
     route_flow,
     split_ranges,
 )
 
 __all__ = ["ShardedFlatAFLI"]
+
+
+def _seed_candidate(parent: "ShardedFlatAFLI", cand: FlatAFLI, slot: int,
+                    spk: np.ndarray, shi: np.ndarray, slo: np.ndarray,
+                    spv: np.ndarray) -> _IncrementalFold:
+    """Configure a fresh candidate ``FlatAFLI`` for device ``slot`` and
+    start its incremental fold (shared by the §14 cross-shard re-key and
+    the §18 boundary migration).  The candidate's bucket tail mirrors
+    ``FlatAFLI.build``'s conflict fit over ITS OWN sub-distribution, and
+    the per-shard AutoSwitch verdict lands here because a fold-built
+    candidate never runs ``build()`` — which is where the verdict
+    normally lands."""
+    from repro.core.conflict import (
+        conflict_degrees, fit_linear_model, should_use_flow,
+        tail_conflict_degree,
+    )
+
+    model = fit_linear_model(spk.astype(np.float64))
+    if spk.shape[0] >= 2 and model.slope > 0:
+        d = tail_conflict_degree(
+            conflict_degrees(spk.astype(np.float64), model),
+            parent.cfg.gamma)
+    else:
+        d = parent.cfg.max_bucket
+    cand.d_tail = int(np.clip(d, parent.cfg.min_bucket,
+                              parent.cfg.max_bucket))
+    sik64 = _ids64(shi, slo).view(np.float64)
+    use, t_orig, t_new = should_use_flow(sik64, spk, parent.cfg.gamma)
+    cand.autoswitch = {"use_flow": bool(use),
+                       "tail_original": int(t_orig),
+                       "tail_transformed": int(t_new)}
+    with parent._on(slot):
+        return _IncrementalFold(cand, spk, shi, slo,
+                                spv.astype(np.int64))
 
 
 class _ShardedReflow:
@@ -104,11 +139,6 @@ class _ShardedReflow:
 
     def __init__(self, parent: "ShardedFlatAFLI", transform_fn,
                  serve_flow, on_swap):
-        from repro.core.conflict import (
-            conflict_degrees, fit_linear_model, should_use_flow,
-            tail_conflict_degree,
-        )
-
         self.parent = parent
         self.transform_fn = transform_fn
         self.serve_flow = serve_flow
@@ -147,31 +177,9 @@ class _ShardedReflow:
             if not seg.shape[0]:
                 self.folds.append(None)
                 continue
-            cand = self.candidates[s]
-            spk = pk[seg]
-            # the candidate's bucket tail mirrors FlatAFLI.build's
-            # conflict fit over ITS OWN sub-distribution
-            model = fit_linear_model(spk.astype(np.float64))
-            if spk.shape[0] >= 2 and model.slope > 0:
-                d = tail_conflict_degree(
-                    conflict_degrees(spk.astype(np.float64), model),
-                    parent.cfg.gamma)
-            else:
-                d = parent.cfg.max_bucket
-            cand.d_tail = int(np.clip(d, parent.cfg.min_bucket,
-                                      parent.cfg.max_bucket))
-            # per-shard AutoSwitch verdict over the candidate's own
-            # sub-distribution (§13/§14) — a fold-built candidate never
-            # runs build(), which is where the verdict normally lands
-            sik64 = _ids64(hi[seg], lo[seg]).view(np.float64)
-            use, t_orig, t_new = should_use_flow(sik64, spk,
-                                                 parent.cfg.gamma)
-            cand.autoswitch = {"use_flow": bool(use),
-                               "tail_original": int(t_orig),
-                               "tail_transformed": int(t_new)}
-            with parent._on(s):
-                self.folds.append(_IncrementalFold(
-                    cand, spk, hi[seg], lo[seg], pv[seg].astype(np.int64)))
+            self.folds.append(_seed_candidate(
+                parent, self.candidates[s], s, pk[seg], hi[seg], lo[seg],
+                pv[seg]))
 
     def tick(self, budget: int) -> bool:
         """Advance pending candidate folds round-robin under the
@@ -245,6 +253,200 @@ class _ShardedReflow:
         self.on_swap()
 
 
+class _ShardedReshard:
+    """Localized boundary migration (DESIGN.md §18): split a hot shard /
+    merge cold neighbors by re-partitioning ONE contiguous window of
+    shards ``[lo, hi]`` under fresh equal-mass boundaries while every
+    shard outside the window keeps serving untouched.
+
+    Same four-phase shape as :class:`_ShardedReflow`, scoped to the
+    window and with NO transform — positioning keys do not move, only
+    the boundaries between them do, so snapshot keys partition directly
+    and the held deltas route under the new interior boundaries without
+    re-keying:
+
+    1. **freeze** — snapshot the window shards (``_snapshot_live``) and
+       put them on ``_tier_hold``: their deltas keep absorbing writes,
+       but no local fold may consume entries this snapshot owns;
+    2. **re-partition** — the new interior boundaries are the equal-mass
+       quantiles of the window's OWN snapshot (``choose_boundaries``
+       over the affected shards' flow-CDF mass), so the k window slots
+       rebalance while the outer boundaries ``B[lo-1]`` / ``B[hi]`` —
+       and therefore every untouched shard's domain — stay
+       bit-identical;
+    3. **rebuild incrementally** — one fresh candidate ``FlatAFLI`` per
+       window slot (fresh ``ServingState``: fresh capacity buckets, and
+       ratchets release exactly as a §14 fold swap releases them —
+       scoped to the migrated slots only), folds advanced by the
+       routed-traffic budget while the old window shards keep serving;
+    4. **swap atomically** — held window deltas route by the new
+       interior boundaries into the candidates, then the window shards
+       and the boundary splice flip in one assignment block.  The
+       boundary array changes VALUES only (same length), so
+       ``_route_flow`` keeps its compiled trace and the §17 streamed
+       router — whose shape is a function of pool capacity, never of
+       boundary values — is untouched.
+
+    Any construction or fold failure aborts the episode: the parent
+    drops the coordinator, un-holds the window tiers, and serving
+    continues on the old shards + boundaries (nothing was published, so
+    there is nothing to roll back beyond the holds — ``_snapshot_live``
+    merges deltas INTO the live run tier, never out of it).
+    """
+
+    def __init__(self, parent: "ShardedFlatAFLI", lo: int, hi: int,
+                 on_swap, on_abort=None):
+        self.parent = parent
+        self.lo = int(lo)
+        self.hi = int(hi)
+        self.on_swap = on_swap
+        self.on_abort = on_abort
+        k = self.hi - self.lo + 1
+        # 1. freeze the window (fault seam: a snapshot that raises
+        # mid-window exercises the partial-freeze rollback)
+        pks, his, los, pvs, wts = [], [], [], [], []
+        for s in range(self.lo, self.hi + 1):
+            if s > self.lo and parent._reshard_fault == "snapshot":
+                raise RuntimeError("injected fault: reshard snapshot")
+            idx = parent.shards[s]
+            spk, shi, slo, spv = idx._snapshot_live()
+            pks.append(spk)
+            his.append(shi)
+            los.append(slo)
+            pvs.append(spv)
+            # per-key weight: the source shard's decayed load spread
+            # uniformly over its own keys (the router sees shards, not
+            # keys, so uniform-within-shard is the finest attribution
+            # the telemetry supports)
+            load_s = (float(parent._load_reads[s])
+                      + float(parent._load_writes[s]))
+            n_s = max(int(spk.shape[0]), 1)
+            wts.append(np.full(spk.shape[0], 1.0 + load_s / n_s,
+                               np.float64))
+            idx._fold = None
+            idx._tier_hold = True
+        pk = np.concatenate(pks) if pks else np.empty(0, np.float32)
+        hi_ = np.concatenate(his) if his else np.empty(0, np.uint32)
+        lo_ = np.concatenate(los) if los else np.empty(0, np.uint32)
+        pv = np.concatenate(pvs) if pvs else np.empty(0, np.int64)
+        wt = np.concatenate(wts) if wts else np.empty(0, np.float64)
+        pk = np.asarray(pk, np.float32)
+        order = np.argsort(pk, kind="stable")
+        pk, hi_, lo_ = pk[order], hi_[order], lo_[order]
+        pv = np.asarray(pv, np.int64)[order]
+        wt = wt[order]
+        # 2. re-partition: equal-mass interior boundaries over the
+        # window's LOAD-WEIGHTED flow-CDF mass (DILI's balancing
+        # objective): each key carries ``1 + load/n`` of its source
+        # shard, so with balanced load this is exactly the key-mass
+        # quantile split (``choose_boundaries``), and under read skew
+        # the hot shard's range splits finer — a read-hot range spreads
+        # across slots even when the key mass is already balanced.
+        # Window keys live in [B[lo-1], B[hi]), so the quantile values
+        # can never cross the outer boundaries.
+        if pk.shape[0]:
+            cw = np.cumsum(wt)
+            targets = cw[-1] * (np.arange(1, k, dtype=np.float64) / k)
+            cut = np.clip(np.searchsorted(cw, targets, side="left"),
+                          0, pk.shape[0] - 1)
+            self.interior = np.ascontiguousarray(pk[cut], np.float32)
+        else:
+            # empty window: the splice becomes an identity write
+            self.interior = parent.boundaries[self.lo:self.hi].copy()
+        sids = route(pk, self.interior)
+        segs, _inv = fanout_plan(sids, k)
+        # 3. fresh candidate per window slot, built incrementally on the
+        # slot's own device
+        self.candidates = [FlatAFLI(parent.cfg) for _ in range(k)]
+        self.folds: List[Optional[_IncrementalFold]] = []
+        for j, seg in enumerate(segs):
+            if not seg.shape[0]:
+                self.folds.append(None)
+                continue
+            self.folds.append(_seed_candidate(
+                parent, self.candidates[j], self.lo + j, pk[seg],
+                hi_[seg], lo_[seg], pv[seg]))
+
+    def tick(self, budget: int) -> bool:
+        """Advance pending window folds round-robin under the caller's
+        budget; returns True once the swap has happened."""
+        if self.parent._reshard_fault == "fold":
+            raise RuntimeError("injected fault: reshard candidate fold")
+        pending = [(j, f) for j, f in enumerate(self.folds)
+                   if f is not None]
+        if pending:
+            share = max(budget // len(pending), 1)
+            for j, f in pending:
+                with self.parent._on(self.lo + j):
+                    if f.tick(share):
+                        self.folds[j] = None
+        if any(f is not None for f in self.folds):
+            return False
+        self._swap_window()
+        return True
+
+    def _swap_window(self) -> None:
+        """4. the atomic flip: route the held window deltas into the
+        candidates under the new interior boundaries, then publish the
+        window shards + the boundary splice in one block.  Shards
+        outside ``[lo, hi]`` are never read or written here — the §11
+        zero-repack guarantees hold for them through the swap."""
+        parent = self.parent
+        k = self.hi - self.lo + 1
+        # candidate id sets from their swapped scan mirrors (== their
+        # snapshot segments, tombstones already dropped)
+        id_sets = []
+        for cand in self.candidates:
+            id_sets.append(set(_ids64(cand._scan_hi,
+                                      cand._scan_lo).tolist()))
+        # held deltas: writes that landed during the migration, one copy
+        # per identity per old window shard; positioning keys are
+        # unchanged, so they route directly by the new interior
+        dpk, dhi, dlo, dpv = [], [], [], []
+        for idx in parent.shards[self.lo:self.hi + 1]:
+            if idx._delta_pk.shape[0]:
+                dpk.append(idx._delta_pk)
+                dhi.append(idx._delta_hi)
+                dlo.append(idx._delta_lo)
+                dpv.append(idx._delta_pv)
+        if dpk:
+            pk = np.asarray(np.concatenate(dpk), np.float32)
+            hi_ = np.concatenate(dhi)
+            lo_ = np.concatenate(dlo)
+            pv = np.concatenate(dpv)
+            sids = route(pk, self.interior)
+            segs, _inv = fanout_plan(sids, k)
+            for j, seg in enumerate(segs):
+                if not seg.shape[0]:
+                    continue
+                cand = self.candidates[j]
+                with parent._on(self.lo + j):
+                    cand._append_delta(pk[seg], hi_[seg], lo_[seg],
+                                       np.asarray(pv[seg], np.int32))
+                for u, p in zip(_ids64(hi_[seg], lo_[seg]).tolist(),
+                                np.asarray(pv[seg]).tolist()):
+                    if p == TOMBSTONE:
+                        id_sets[j].discard(u)
+                    else:
+                        id_sets[j].add(u)
+        for j, cand in enumerate(self.candidates):
+            cand._id_set = id_sets[j]
+            cand.n_keys = len(id_sets[j])
+            with parent._on(self.lo + j):
+                cand._sync_tiers()
+        # ---- the flip: one assignment block, no query in between
+        parent.shards[self.lo:self.hi + 1] = self.candidates
+        parent._refresh_boundaries(self.interior, self.lo)
+        # the window's load gauges described the OLD domains — level
+        # them (total preserved) so stale attribution cannot re-trigger
+        # on the slots whose domains just moved; they re-converge within
+        # one load window of routed traffic
+        for g in (parent._load_reads, parent._load_writes):
+            g[self.lo:self.hi + 1] = g[self.lo:self.hi + 1].mean()
+        parent.n_reshards += 1
+        self.on_swap()
+
+
 class ShardedFlatAFLI:
     """P-way key-space-partitioned FlatAFLI behind the FlatAFLI serving
     surface (DESIGN.md §13) — ``NFL`` drives it exactly like the single
@@ -270,6 +472,18 @@ class ShardedFlatAFLI:
         self._serve_flow = None
         self._reflow: Optional[_ShardedReflow] = None   # §14 coordinator
         self.n_reflows = 0
+        self._reshard: Optional[_ShardedReshard] = None  # §18 coordinator
+        self.n_reshards = 0
+        self.n_reshard_aborts = 0
+        self._reshard_fault: Optional[str] = None   # §16 fault seam
+        # §18 router load gauges: decayed per-shard key mass.  Reads and
+        # writes decay together (shares stay comparable across the two),
+        # and the decay clock is routed keys, not wall time, so the
+        # gauges are deterministic under test.  Gauges, not counters:
+        # reset_telemetry() leaves them alone.
+        self.load_window_keys = 4096
+        self._load_reads = np.zeros(self.n_shards, np.float64)
+        self._load_writes = np.zeros(self.n_shards, np.float64)
         self._router = {
             "point_batches": 0, "point_queries": 0,
             "write_batches": 0, "write_keys": 0,
@@ -324,13 +538,109 @@ class ShardedFlatAFLI:
         and boundaries keep serving; the final swap flips shards,
         boundaries, and the serve-flow context atomically.  Returns
         False while a previous re-key is still in flight."""
-        if self._reflow is not None:
+        if self._reflow is not None or self._reshard is not None:
             return False
         self._reflow = _ShardedReflow(self, transform_fn, serve_flow,
                                       on_swap)
         # degenerate case (nothing indexed): all folds empty — swap now
         self._reflow_tick(1)
         return True
+
+    # ------------------------------------------------------ §18 resharding
+    def _note_load(self, segs, *, write: bool) -> None:
+        """Fold one routed batch into the decayed load gauges.  One
+        batch of n keys decays every gauge by ``exp(-n / window)`` then
+        adds the batch's per-shard counts, so each gauge is a key mass
+        with an expected horizon of ``load_window_keys`` routed keys."""
+        counts = np.array([int(seg.shape[0]) for seg in segs], np.float64)
+        n = float(counts.sum())
+        if n <= 0.0:
+            return
+        d = float(np.exp(-n / float(max(self.load_window_keys, 1))))
+        self._load_reads *= d
+        self._load_writes *= d
+        if write:
+            self._load_writes += counts
+        else:
+            self._load_reads += counts
+
+    def load_snapshot(self) -> dict:
+        """§18 trigger input (the ``ReshardManager.load_snapshot``
+        seam): decayed per-shard read/write gauges plus live key counts,
+        jsonable."""
+        return {
+            "reads": self._load_reads.tolist(),
+            "writes": self._load_writes.tolist(),
+            "n_keys": [int(idx.n_keys) for idx in self.shards],
+            "window_keys": int(self.load_window_keys),
+        }
+
+    def start_reshard(self, lo: int, hi: int, on_swap,
+                      on_abort=None) -> bool:
+        """Begin the localized boundary migration of shard window
+        ``[lo, hi]`` (DESIGN.md §18): freeze + re-partition now, then
+        the window's candidates fold incrementally under the
+        routed-traffic budget while ALL shards — window included — keep
+        serving against the old boundaries; the swap flips the window
+        shards and the boundary splice atomically.  Returns False while
+        a §14 re-key or another migration is in flight; raises if the
+        freeze itself fails (window un-held, nothing published)."""
+        if self._reshard is not None or self._reflow is not None:
+            return False
+        lo = max(int(lo), 0)
+        hi = min(int(hi), self.n_shards - 1)
+        if hi <= lo:
+            return False
+        try:
+            self._reshard = _ShardedReshard(self, lo, hi, on_swap,
+                                            on_abort)
+        except Exception:
+            # partial-freeze rollback: un-hold the window and re-raise;
+            # data is safe (_snapshot_live merges into the live run
+            # tier, never out of it) and nothing was published
+            for s in range(lo, hi + 1):
+                self.shards[s]._tier_hold = False
+            self.n_reshard_aborts += 1
+            raise
+        self._reshard_tick(1)   # degenerate (empty window) swaps now
+        return True
+
+    def _reshard_tick(self, n_batch: int) -> None:
+        """Advance an in-flight migration by the same bounded budget a
+        local fold would get.  Read skew is the §18 trigger, so reads
+        AND writes fund migration folds (unlike §14 re-keys, which only
+        writes fund — a read-only hot shard must still migrate).  A fold
+        failure aborts the episode in place: drop the coordinator,
+        un-hold the window, leave shards + boundaries exactly as they
+        were, and notify the owner (``on_abort``)."""
+        if self._reshard is None:
+            return
+        budget = max(int(self.cfg.fold_step_keys),
+                     int(self.cfg.fold_work_factor * max(n_batch, 1)))
+        r = self._reshard
+        try:
+            done = r.tick(budget)
+        except Exception:
+            self._reshard = None
+            for s in range(r.lo, r.hi + 1):
+                self.shards[s]._tier_hold = False
+            self.n_reshard_aborts += 1
+            if r.on_abort is not None:
+                r.on_abort()
+            return
+        if done:
+            self._reshard = None
+
+    def _refresh_boundaries(self, interior: np.ndarray, lo: int) -> None:
+        """Value-only boundary refresh (§18): splice the window's new
+        interior boundaries into the existing f32[P-1] array through the
+        jitted ``_splice_boundaries`` kernel and republish.  The length
+        never changes, so ``_route_flow`` — whose boundaries argument is
+        traced, not static — keeps its compiled trace across the swap,
+        and the §17 streamed router (shaped by pool capacity, not by
+        boundary values) is untouched."""
+        self._set_boundaries(
+            refresh_boundaries(self.boundaries, interior, lo))
 
     # -------------------------------------------------------------- build
     def build(self, pkeys: np.ndarray, payloads: np.ndarray,
@@ -425,6 +735,7 @@ class ShardedFlatAFLI:
         kernel is in flight when this returns, so a §16 front-end can
         stack a second batch behind the first before blocking."""
         segs, inv = fanout_plan(sids, self.n_shards)
+        self._note_load(segs, write=False)
         ik64 = np.asarray(ik64, dtype=np.float64)
         finishers = []
         for s, seg in enumerate(segs):
@@ -459,7 +770,9 @@ class ShardedFlatAFLI:
         sids = self._route_points(k64.astype(np.float32))
         self._router["point_batches"] += 1
         self._router["point_queries"] += int(k64.shape[0])
-        return self._fanout_points_async(k64, ik64, sids)
+        finish = self._fanout_points_async(k64, ik64, sids)
+        self._reshard_tick(int(k64.shape[0]))
+        return finish
 
     def lookup_batch(self, keys: np.ndarray,
                      ikeys: np.ndarray | None = None) -> np.ndarray:
@@ -474,7 +787,10 @@ class ShardedFlatAFLI:
         z, sids = route_flow(feats, packed_w, shapes, self._boundaries_dev)
         self._router["point_batches"] += 1
         self._router["point_queries"] += int(z.shape[0])
-        return self._fanout_points_async(z.astype(np.float64), ikeys, sids)
+        finish = self._fanout_points_async(z.astype(np.float64), ikeys,
+                                           sids)
+        self._reshard_tick(int(z.shape[0]))
+        return finish
 
     def lookup_batch_flow(self, feats: np.ndarray, ikeys: np.ndarray,
                           packed_w, shapes) -> np.ndarray:
@@ -497,6 +813,7 @@ class ShardedFlatAFLI:
         pv = np.asarray(payloads, dtype=np.int32)
         sids = self._route_points(k64.astype(np.float32))
         segs, _inv = fanout_plan(sids, self.n_shards)
+        self._note_load(segs, write=True)
         self._router["write_batches"] += 1
         self._router["write_keys"] += int(k64.shape[0])
         for s, seg in enumerate(segs):
@@ -508,6 +825,7 @@ class ShardedFlatAFLI:
                 self.shards[s].insert_batch(k64[seg], pv[seg],
                                             ikeys=ik64[seg])
         self._reflow_tick(int(k64.shape[0]))
+        self._reshard_tick(int(k64.shape[0]))
 
     def delete_batch(self, keys: np.ndarray,
                      ikeys: np.ndarray | None = None) -> np.ndarray:
@@ -517,6 +835,7 @@ class ShardedFlatAFLI:
         ik64 = k64 if ikeys is None else np.asarray(ikeys, dtype=np.float64)
         sids = self._route_points(k64.astype(np.float32))
         segs, inv = fanout_plan(sids, self.n_shards)
+        self._note_load(segs, write=True)
         self._router["write_batches"] += 1
         self._router["write_keys"] += int(k64.shape[0])
         parts = []
@@ -529,6 +848,7 @@ class ShardedFlatAFLI:
                 parts.append(self.shards[s].delete_batch(k64[seg],
                                                          ikeys=ik64[seg]))
         self._reflow_tick(int(k64.shape[0]))
+        self._reshard_tick(int(k64.shape[0]))
         if not parts:
             return np.zeros(k64.shape[0], bool)
         return np.concatenate(parts)[inv]
@@ -586,6 +906,7 @@ class ShardedFlatAFLI:
         sub_cnt = np.empty(m, np.int32)
         sub_tot = np.empty(m, np.int64)
         segs, _inv = fanout_plan(sid, self.n_shards)
+        self._note_load(segs, write=False)
         for s, seg in enumerate(segs):
             c = int(seg.shape[0])
             self._router["per_shard_ranges"][s] += c
@@ -626,7 +947,10 @@ class ShardedFlatAFLI:
         test hook; production serving relies on per-shard incremental
         folds instead).  An in-flight cross-shard re-key is driven to
         its swap first — rebuilding the old shards would waste the work
-        and re-freeze their tiers."""
+        and re-freeze their tiers; same for an in-flight §18 migration
+        (an aborting migration exits the loop by dropping itself)."""
+        while self._reshard is not None:
+            self._reshard_tick(1 << 50)
         while self._reflow is not None:
             self._reflow_tick(1 << 50)
         for s, idx in enumerate(self.shards):
@@ -647,9 +971,15 @@ class ShardedFlatAFLI:
 
     def serving_telemetry(self) -> dict:
         """Aggregated ``NFL.dispatch_stats()`` slice (§11/§13): summed
-        ServingState counters, per-shard breakdowns, and the router's
-        fan-out accounting."""
-        per_shard = [idx.serving_telemetry() for idx in self.shards]
+        ServingState counters, per-shard breakdowns (each carrying its
+        §18 decayed load gauges), and the router's fan-out
+        accounting."""
+        per_shard = []
+        for s, idx in enumerate(self.shards):
+            t = idx.serving_telemetry()
+            t["load"] = {"reads": float(self._load_reads[s]),
+                         "writes": float(self._load_writes[s])}
+            per_shard.append(t)
         # counters sum across shards; gauges (resident capacities,
         # ratcheted statics) take the max — a summed depth bound would
         # describe no kernel anywhere
@@ -689,8 +1019,11 @@ class ShardedFlatAFLI:
             "run_ratio": max((p["run_ratio"] for p in per), default=0.0),
             "fold_active": any(p["fold_active"] for p in per),
             "reflow_active": self._reflow is not None,
+            "reshard_active": self._reshard is not None,
             "n_rebuilds": sum(p["n_rebuilds"] for p in per),
             "n_reflows": int(self.n_reflows),
+            "n_reshards": int(self.n_reshards),
+            "n_reshard_aborts": int(self.n_reshard_aborts),
             "autoswitch": [p["autoswitch"] for p in per],
             "shards": per,
         }
@@ -698,7 +1031,9 @@ class ShardedFlatAFLI:
     def reset_telemetry(self) -> None:
         """Per-shard counter reset plus the router's fan-out accounting
         (per-shard lists reset to zeros; see ``FlatAFLI.reset_telemetry``
-        for what counts as a counter vs. state)."""
+        for what counts as a counter vs. state).  The §18 decayed load
+        gauges are state, not counters — they survive the reset, exactly
+        like the capacity/ratchet gauges do."""
         for idx in self.shards:
             idx.reset_telemetry()
         for k, v in self._router.items():
@@ -714,8 +1049,12 @@ class ShardedFlatAFLI:
             "devices": [str(d) for d in self.devices],
             "fold_active": any(s["fold_active"] for s in shard_stats),
             "reflow_active": self._reflow is not None,
+            "reshard_active": self._reshard is not None,
             "n_rebuilds": sum(s["n_rebuilds"] for s in shard_stats),
             "n_reflows": self.n_reflows,
+            "n_reshards": self.n_reshards,
+            "n_reshard_aborts": self.n_reshard_aborts,
+            "load": self.load_snapshot(),
             "max_depth": max((s["max_depth"] for s in shard_stats),
                              default=1),
             "n_host_tier_probes": self.n_host_tier_probes,

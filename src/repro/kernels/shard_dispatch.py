@@ -37,6 +37,7 @@ import numpy as np
 
 __all__ = [
     "choose_boundaries",
+    "refresh_boundaries",
     "route",
     "route_flow",
     "bin_by_shard",
@@ -63,6 +64,47 @@ def choose_boundaries(pk32_sorted: np.ndarray, n_shards: int) -> np.ndarray:
     idx = (np.arange(1, P, dtype=np.int64) * n) // P
     b = np.asarray(pk32_sorted, np.float32)[np.clip(idx, 0, max(n - 1, 0))]
     return np.ascontiguousarray(b, np.float32)
+
+
+@jax.jit
+def _splice_boundaries(boundaries: jnp.ndarray, interior: jnp.ndarray,
+                       lo: jnp.ndarray) -> jnp.ndarray:
+    """Value-only boundary refresh for a §18 migration swap: write the
+    window's ``k - 1`` new interior boundaries over positions
+    ``lo .. lo + k - 2`` of the f32[P-1] boundary vector.  The window
+    offset rides as a TRACED scalar (``dynamic_update_slice`` start),
+    and the output length equals the input length — so this dispatch,
+    and every downstream consumer of the refreshed vector
+    (``_route_flow`` takes boundaries as a traced argument), reuses its
+    compiled trace no matter which window migrates.  The §17 streamed
+    router is untouched by construction: its shape derives from pool
+    capacity, never from boundary values."""
+    return jax.lax.dynamic_update_slice(boundaries, interior, (lo,))
+
+
+def refresh_boundaries(boundaries, interior, lo: int) -> np.ndarray:
+    """Host wrapper for the migration-swap boundary splice: validate the
+    window, run the jitted ``_splice_boundaries``, and check that the
+    refreshed vector is still non-decreasing (a splice that breaks the
+    routing order would silently mis-route every query past the window —
+    fail loudly instead; the §18 coordinator derives interior boundaries
+    from the window's own key mass, which cannot cross the outer
+    boundaries, so this never trips in normal operation).  Returns the
+    new f32[P-1] host vector; the caller republishes the device copy."""
+    b = np.asarray(boundaries, np.float32)
+    it = np.asarray(interior, np.float32)
+    lo = int(lo)
+    if it.shape[0] == 0:
+        return b.copy()
+    if lo < 0 or lo + it.shape[0] > b.shape[0]:
+        raise ValueError(
+            f"boundary splice [{lo}, {lo + it.shape[0]}) outside the "
+            f"boundary vector of length {b.shape[0]}")
+    out = np.asarray(_splice_boundaries(
+        jnp.asarray(b), jnp.asarray(it), jnp.asarray(lo, jnp.int32)))
+    if out.shape[0] > 1 and np.any(np.diff(out) < 0):
+        raise ValueError("boundary splice breaks routing monotonicity")
+    return np.ascontiguousarray(out, np.float32)
 
 
 def route(z32: np.ndarray, boundaries) -> np.ndarray:

@@ -28,11 +28,21 @@ fold_stall_s        a slow incremental fold: every fold tick on the
 retrain_failure     a poisoned §14 re-flow: the background trainer
                     raises, so the drift machinery must back off and
                     keep serving on the incumbent transform.
+fail_reshard        a poisoned §18 boundary migration.  ``"snapshot"``:
+                    the window freeze raises mid-snapshot (partial
+                    freeze rolled back); ``"fold"``: the candidate fold
+                    raises mid-flight (episode aborted in place);
+                    ``"contention"``: ``start_reshard`` reports busy, as
+                    if a concurrent re-flow held the swap window.  All
+                    three must leave boundaries and serving untouched
+                    and back off with the doubling cooldown.
 ==================  =====================================================
 
 Forced retrain failure patches ``nfl._reflow.train_factory`` — the same
-seam ``bench_drift`` uses — so it needs the ``NFL`` handle; everything
-else is process-global ops state.
+seam ``bench_drift`` uses — and forced reshard failure arms the sharded
+index's ``_reshard_fault`` seam (or wraps ``start_reshard`` for
+contention), so both need the ``NFL`` handle; everything else is
+process-global ops state.
 """
 
 from __future__ import annotations
@@ -56,11 +66,13 @@ class FaultPlan:
     dispatch_error_every: int = 0    # TransientDispatchError on every Nth
     fold_stall_s: float = 0.0        # sleep per incremental-fold tick
     retrain_failure: bool = False    # background re-flow trainer raises
+    fail_reshard: str = ""           # §18 migration failure mode:
+                                     # "snapshot" | "fold" | "contention"
 
     def any_active(self) -> bool:
         return (self.force_oracle or self.device_stall_s > 0
                 or self.dispatch_error_every > 0 or self.fold_stall_s > 0
-                or self.retrain_failure)
+                or self.retrain_failure or bool(self.fail_reshard))
 
 
 def _failing_train_factory(sample, attempt):
@@ -93,12 +105,39 @@ def inject(plan: FaultPlan, nfl=None) -> Iterator[FaultPlan]:
                 "§14 re-flow machinery enabled (DriftConfig.reflow)")
         saved_factory = reflow.train_factory
         reflow.train_factory = _failing_train_factory
+    saved_start = None
+    index = getattr(nfl, "index", None) if nfl is not None else None
+    if plan.fail_reshard:
+        if plan.fail_reshard not in ("snapshot", "fold", "contention"):
+            ops.clear_fault_plan()
+            raise ValueError(
+                f"unknown fail_reshard mode {plan.fail_reshard!r}: "
+                "expected 'snapshot', 'fold', or 'contention'")
+        if index is None or not hasattr(index, "start_reshard"):
+            ops.clear_fault_plan()
+            raise ValueError(
+                "FaultPlan(fail_reshard=...) needs an NFL on the "
+                "sharded flat backend (the §18 migration machinery)")
+        if plan.fail_reshard == "contention":
+            # model a concurrent re-flow owning the swap window: the
+            # index reports busy, exactly as start_reshard does when
+            # another structural episode is in flight
+            saved_start = index.start_reshard
+            index.start_reshard = (
+                lambda *a, **kw: False)  # noqa: ARG005 - seam stub
+        else:
+            index._reshard_fault = plan.fail_reshard
     try:
         yield plan
     finally:
         ops.clear_fault_plan()
         if saved_factory is not None:
             reflow.train_factory = saved_factory
+        if plan.fail_reshard and index is not None:
+            if saved_start is not None:
+                index.start_reshard = saved_start
+            else:
+                index._reshard_fault = None
 
 
 def injection_stats(reset: bool = False) -> Dict[str, int]:

@@ -15,7 +15,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.core.drift import DriftConfig
+from repro.core.drift import DriftConfig, ReshardConfig
 from repro.core.flat_afli import FlatAFLIConfig
 from repro.core.nfl import NFL, NFLConfig
 from repro.core.train_flow import FlowTrainConfig
@@ -400,6 +400,86 @@ def test_fault_retrain_failure_backs_off_and_serves():
     st = nfl.dispatch_stats()["drift"]
     assert st["retrain_failures"] >= 1
     assert st["reflows_completed"] == 0
+
+
+def _reshard_nfl(seed):
+    return _build_nfl(
+        n=1500, seed=seed, shards=4,
+        flat_index=FlatAFLIConfig(rebuild_frac=0.1, delta_cap=24,
+                                  fold_step_keys=48, fold_work_factor=4.0),
+        reshard=ReshardConfig(enabled=True, hot_frac=1.8, min_load=128.0,
+                              min_keys=256, check_every=256,
+                              cooldown_keys=512, load_window_keys=1024))
+
+
+@pytest.mark.parametrize("mode", ["contention", "snapshot", "fold"])
+def test_fault_reshard_failure_backs_off_and_serves(mode):
+    """A poisoned §18 migration — swap-window contention from a
+    concurrent re-flow, a snapshot that raises mid-freeze, or a
+    candidate fold that dies in flight — must leave boundaries and
+    serving untouched, count a monotone failure, and double the
+    cooldown; after the fault clears, the next episode migrates."""
+    nfl, keys, oracle = _reshard_nfl(seed=21)
+    idx = nfl.index
+    b0 = idx.boundaries.copy()
+    span0 = nfl._reshard._cooldown_span
+    hot = keys[keys.astype(np.float32) < b0[0]]
+    rng = np.random.default_rng(22)
+    orc = _Oracle(oracle)
+    fe = FrontEnd(nfl, FrontEndConfig(max_batch=32, batch_timeout_s=5e-4,
+                                      admission=False, expire_queued=False))
+    fe.on_batch_dispatched = orc.hook
+    reqs = [ServiceRequest(rid, "point",
+                           float(rng.choice(hot if rng.random() < 0.8
+                                            else keys)),
+                           deadline_s=_SLACK)
+            for rid in range(700)]
+    with faults.inject(faults.FaultPlan(fail_reshard=mode), nfl=nfl):
+        _submit_drain(fe, reqs)
+    _assert_terminal_exactly_once(fe, reqs)
+    assert fe.counters["completed"] == len(reqs)
+    assert orc.check(reqs) == 0, f"{mode}: served wrong results"
+    st = nfl.dispatch_stats()["reshard"]
+    assert st["migrations_failed"] >= 1, f"{mode}: fault never fired"
+    assert st["migrations_completed"] == 0
+    assert st["resharding_episodes"] == st["migrations_failed"], \
+        f"{mode}: episode/failure accounting drifted (double count?)"
+    assert st["cooldown_span"] >= 2 * span0, f"{mode}: no backoff"
+    assert st["state"] == "idle"
+    assert np.array_equal(idx.boundaries, b0), \
+        f"{mode}: a failed migration moved the boundaries"
+    assert idx.n_reshards == 0
+    assert not any(s._tier_hold for s in idx.shards), \
+        f"{mode}: a failed migration left a shard frozen"
+    # the failure counters are monotone state: they survive a reset
+    again = nfl.dispatch_stats(reset=True)["reshard"]
+    assert again["migrations_failed"] == st["migrations_failed"]
+    assert again["resharding_episodes"] == st["resharding_episodes"]
+    # inject() restored the seams on exit: the fault is gone and an
+    # explicit un-faulted episode migrates cleanly
+    assert idx._reshard_fault is None
+    swapped = []
+    assert idx.start_reshard(0, 1, on_swap=lambda: swapped.append(1))
+    idx.rebuild()
+    assert swapped == [1] and idx.n_reshards == 1
+    live = np.array(sorted(orc.d))
+    res = nfl.lookup_batch(live)
+    exp = np.array([orc.d[k] for k in live.tolist()])
+    assert int((res != exp).sum()) == 0
+
+
+def test_reshard_fault_plan_validates():
+    nfl, _, _ = _build_nfl(n=200, seed=23)   # single-shard: no §18
+    with pytest.raises(ValueError, match="sharded"):
+        with faults.inject(faults.FaultPlan(fail_reshard="fold"), nfl=nfl):
+            pass
+    nfl2, _, _ = _reshard_nfl(seed=24)
+    with pytest.raises(ValueError, match="unknown fail_reshard"):
+        with faults.inject(faults.FaultPlan(fail_reshard="typo"), nfl=nfl2):
+            pass
+    # both rejections rolled the partial install back
+    assert nfl2.index._reshard_fault is None
+    nfl2.lookup_batch(np.array([1.0]))
 
 
 def test_retrain_failure_plan_requires_reflow_nfl():

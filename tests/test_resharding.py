@@ -1,0 +1,526 @@
+"""Online boundary migration under skew (DESIGN.md §18).
+
+The migration battery: dict-oracle interleavings of point / range /
+insert / delete traffic while a split (hot shard sheds domain) and a
+merge (cold neighbor absorbs domain) are in flight, flow on and off;
+boundary-straddling ranges — including cap-truncated ones — across the
+swap; the load-triggered path end to end; the ReshardManager state
+machine (cadence, backoff doubling, monotone counters, lock
+discipline); the reshard-vs-reflow exclusion token; the abort rollback;
+and the counter-vs-gauge reset semantics of the new telemetry.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.drift import (
+    ExclusionLock,
+    LockDisciplineError,
+    ReshardConfig,
+    ReshardManager,
+)
+from repro.core.flat_afli import FlatAFLIConfig
+from repro.core.nfl import NFL, NFLConfig
+from repro.core.train_flow import FlowTrainConfig
+from repro.kernels.shard_dispatch import refresh_boundaries
+
+# squeezed tier + fold budgets so a migration spans many serving
+# batches (in-flight interleavings) instead of swapping on its first
+# tick
+_TIGHT = FlatAFLIConfig(rebuild_frac=0.1, delta_cap=24, fold_step_keys=48,
+                        fold_work_factor=4.0)
+
+
+def _mk(shards, keys, pv, *, flow=False, reshard=None, epochs=1):
+    nfl = NFL(NFLConfig(backend="flat", shards=shards, force_flow=flow,
+                        flat_index=_TIGHT,
+                        flow_train=FlowTrainConfig(epochs=epochs),
+                        reshard=reshard or ReshardConfig()))
+    nfl.bulkload(keys, pv)
+    return nfl
+
+
+def _keyset(seed, n=4096, lo=0.0, hi=100.0):
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.uniform(lo, hi, n))
+    return keys, np.arange(len(keys), dtype=np.int64)
+
+
+def _check_all(nfl, oracle, step=""):
+    live = np.array(sorted(oracle))
+    res = nfl.lookup_batch(live)
+    exp = np.array([oracle[k] for k in live.tolist()])
+    wrong = int((res != exp).sum())
+    assert wrong == 0, f"{step}: {wrong} wrong lookups"
+
+
+def _range_check(nfl, oracle, lo, hi, cap, step=""):
+    """Oracle-checked [lo, hi) range (flow off: key order IS positioning
+    order), including the gapless-prefix truncation contract."""
+    pvs, cnt, tot = nfl.scan_batch([lo], [hi], cap=cap)
+    live = np.array(sorted(oracle))
+    lo32, hi32 = np.float32(lo), np.float32(hi)
+    exp = [oracle[k] for k in live.tolist()
+           if lo32 <= np.float32(k) < hi32]
+    got = pvs[0, :cnt[0]].tolist()
+    if tot[0] <= cap:
+        assert got == exp, f"{step}: untruncated range mismatch"
+    else:
+        # truncated: an exact prefix of the global order, no gaps
+        assert cnt[0] <= cap
+        assert got == exp[:cnt[0]], f"{step}: truncated prefix has gaps"
+
+
+# -------------------------------------------------- boundary splice unit
+def test_refresh_boundaries_splices_values_only():
+    b = np.array([10.0, 20.0, 30.0], np.float32)
+    out = refresh_boundaries(b, np.array([12.0], np.float32), 0)
+    assert out.tolist() == [12.0, 20.0, 30.0]
+    assert out.shape == b.shape and out.dtype == np.float32
+    # empty interior = untouched copy
+    assert refresh_boundaries(b, np.empty(0, np.float32), 1).tolist() \
+        == b.tolist()
+    with pytest.raises(ValueError, match="monotonicity"):
+        refresh_boundaries(b, np.array([25.0], np.float32), 0)
+    with pytest.raises(ValueError, match="outside"):
+        refresh_boundaries(b, np.array([40.0, 50.0], np.float32), 2)
+
+
+# ------------------------------------------- in-flight migration oracle
+@pytest.mark.parametrize("flow", [False, True])
+def test_split_migration_interleaved(flow):
+    """A hot shard 0 (insert storm shifted its key mass) splits while
+    point/range/insert/delete traffic interleaves with the in-flight
+    folds; every answer is oracle-exact before, during, and after the
+    swap, and the split moves the hot boundary."""
+    keys, pv = _keyset(0)
+    nfl = _mk(4, keys, pv, flow=flow)
+    idx = nfl.index
+    oracle = dict(zip(keys.tolist(), pv.tolist()))
+    rng = np.random.default_rng(1)
+    b0 = idx.boundaries.copy()
+    # storm: grow shard 0's key mass so the equal-mass re-partition has
+    # something to rebalance (raw-key range below the first RAW
+    # boundary; with the flow on the routed shard is boundary-of-z, so
+    # use the quantile of the original keyset instead)
+    hot_hi = float(np.quantile(keys, 0.25))
+    storm = np.unique(rng.uniform(0.0, hot_hi, 3000))
+    storm = storm[~np.isin(storm, keys)]
+    sv = np.arange(len(storm), dtype=np.int64) + 10_000_000
+    nfl.insert_batch(storm, sv)
+    oracle.update(zip(storm.tolist(), sv.tolist()))
+    idx.rebuild()
+
+    swapped = []
+    assert idx.start_reshard(0, 1, on_swap=lambda: swapped.append(1))
+    assert idx.stats()["reshard_active"]
+    steps_in_flight = 0
+    fresh = 20_000_000
+    live = np.array(sorted(oracle))
+    for step in range(400):
+        if idx._reshard is not None:
+            steps_in_flight += 1
+        op = rng.choice(["insert", "delete", "lookup", "range"],
+                        p=[0.3, 0.15, 0.4, 0.15])
+        if op == "insert":
+            k = np.unique(rng.uniform(0, 100, 12))
+            k = k[~np.isin(k, live)]
+            if not k.shape[0]:
+                continue
+            v = np.arange(fresh, fresh + k.shape[0])
+            fresh += k.shape[0]
+            nfl.insert_batch(k, v)
+            oracle.update(zip(k.tolist(), v.tolist()))
+            live = np.array(sorted(oracle))
+        elif op == "delete":
+            k = rng.choice(live, 8, replace=False)
+            assert nfl.delete_batch(k).all(), f"step {step}: live delete"
+            for kk in k.tolist():
+                del oracle[kk]
+            live = np.array(sorted(oracle))
+        elif op == "lookup":
+            k = rng.choice(live, 16, replace=False)
+            res = nfl.lookup_batch(np.concatenate([k, k + 0.12345]))
+            exp = np.array([oracle[kk] for kk in k.tolist()])
+            assert (res[:16] == exp).all(), f"step {step}: wrong lookup"
+            assert (res[16:] == -1).all(), f"step {step}: ghost hit"
+        elif not flow:
+            i = int(rng.integers(0, len(live) - 50))
+            _range_check(nfl, oracle, live[i], live[i + 49], 4096,
+                         step=f"step {step}")
+        if swapped:
+            break
+    assert swapped == [1], "migration never swapped"
+    assert steps_in_flight >= 2, \
+        "migration did not stay in flight across interleaved traffic"
+    assert idx.n_reshards == 1 and idx.n_reshard_aborts == 0
+    assert idx.boundaries.shape == b0.shape
+    if not flow:
+        # the storm tripled shard 0's mass: the split moved B[0] down
+        assert float(idx.boundaries[0]) < float(b0[0])
+    assert float(idx.boundaries[2]) == float(b0[2]), \
+        "migration touched a boundary outside the window"
+    _check_all(nfl, oracle, "post-swap")
+
+
+def test_merge_migration_interleaved():
+    """A cold shard (most of its keys deleted) merges into its hot
+    neighbor's re-partition; traffic stays oracle-exact throughout and
+    the cold slot absorbs domain from the hot one."""
+    keys, pv = _keyset(2)
+    nfl = _mk(4, keys, pv)
+    idx = nfl.index
+    oracle = dict(zip(keys.tolist(), pv.tolist()))
+    rng = np.random.default_rng(3)
+    b0 = idx.boundaries.copy()
+    # empty out shard 1 (cold), leaving shard 0 fat
+    in1 = keys[(keys.astype(np.float32) >= b0[0])
+               & (keys.astype(np.float32) < b0[1])]
+    dels = in1[:-20]
+    assert nfl.delete_batch(dels).all()
+    for k in dels.tolist():
+        del oracle[k]
+    idx.rebuild()
+    # the mass delete itself counted as write load on the emptied slot;
+    # the scenario is a shard that has gone cold SINCE, so clear the
+    # decayed gauges and let key mass alone drive the re-partition
+    idx._load_reads[:] = 0.0
+    idx._load_writes[:] = 0.0
+
+    swapped = []
+    assert idx.start_reshard(0, 1, on_swap=lambda: swapped.append(1))
+    live = np.array(sorted(oracle))
+    for step in range(400):
+        k = rng.choice(live, 16, replace=False)
+        res = nfl.lookup_batch(k)
+        exp = np.array([oracle[kk] for kk in k.tolist()])
+        assert (res == exp).all(), f"step {step}: wrong mid-merge"
+        if step % 3 == 0:
+            i = int(rng.integers(0, len(live) - 50))
+            _range_check(nfl, oracle, live[i], live[i + 49], 4096,
+                         step=f"step {step}")
+        if swapped:
+            break
+    assert swapped == [1]
+    # the emptied slot now owns part of the fat shard's old domain
+    assert float(idx.boundaries[0]) < float(b0[0])
+    assert float(idx.boundaries[2]) == float(b0[2])
+    _check_all(nfl, oracle, "post-merge")
+    # the merged slots keep serving writes routed by the NEW boundaries
+    k = np.unique(rng.uniform(0, float(b0[1]), 64))
+    k = k[~np.isin(k, np.array(sorted(oracle)))]
+    v = np.arange(len(k), dtype=np.int64) + 30_000_000
+    nfl.insert_batch(k, v)
+    oracle.update(zip(k.tolist(), v.tolist()))
+    _check_all(nfl, oracle, "post-merge insert")
+
+
+def test_straddling_range_across_moving_boundary():
+    """A range query straddling the boundary that the in-flight
+    migration is about to move answers oracle-exactly (and keeps the
+    gapless-prefix truncation contract) before, during, and after the
+    swap — same query, three boundary regimes."""
+    keys, pv = _keyset(4)
+    nfl = _mk(4, keys, pv)
+    idx = nfl.index
+    oracle = dict(zip(keys.tolist(), pv.tolist()))
+    rng = np.random.default_rng(5)
+    b0 = idx.boundaries.copy()
+    hot_hi = float(np.quantile(keys, 0.25))
+    storm = np.unique(rng.uniform(0.0, hot_hi, 2500))
+    storm = storm[~np.isin(storm, keys)]
+    sv = np.arange(len(storm), dtype=np.int64) + 10_000_000
+    nfl.insert_batch(storm, sv)
+    oracle.update(zip(storm.tolist(), sv.tolist()))
+    idx.rebuild()
+    # the query straddles B[0] — the boundary the split will move
+    qlo, qhi = float(b0[0]) - 5.0, float(b0[0]) + 5.0
+    small_cap = 64   # force truncation: the prefix contract must hold
+    _range_check(nfl, oracle, qlo, qhi, small_cap, "pre-migration")
+    _range_check(nfl, oracle, qlo, qhi, 8192, "pre-migration full")
+
+    swapped = []
+    live = np.array(sorted(oracle))
+    assert idx.start_reshard(0, 1, on_swap=lambda: swapped.append(1))
+    for step in range(400):
+        _range_check(nfl, oracle, qlo, qhi, small_cap,
+                     f"in-flight {step}")
+        _range_check(nfl, oracle, qlo, qhi, 8192,
+                     f"in-flight full {step}")
+        # scans never fund migration ticks (§18: boundaries may not
+        # move mid-query) — interleaved point lookups drive the folds
+        k = rng.choice(live, 32, replace=False)
+        res = nfl.lookup_batch(k)
+        exp = np.array([oracle[kk] for kk in k.tolist()])
+        assert (res == exp).all(), f"step {step}: wrong mid-straddle"
+        if swapped:
+            break
+    assert swapped == [1]
+    assert float(idx.boundaries[0]) != float(b0[0]), \
+        "the straddled boundary never moved"
+    _range_check(nfl, oracle, qlo, qhi, small_cap, "post-swap")
+    _range_check(nfl, oracle, qlo, qhi, 8192, "post-swap full")
+
+
+# --------------------------------------------------- load-triggered path
+def test_load_trigger_migrates_hot_shard():
+    """End to end through NFL: zipfian-ish reads concentrate on shard 0,
+    the decayed load gauges cross the hot threshold, the manager opens
+    an episode, and the swap moves the hot boundary — all while serving
+    stays oracle-exact."""
+    keys, pv = _keyset(6)
+    nfl = _mk(4, keys, pv, reshard=ReshardConfig(
+        enabled=True, hot_frac=1.8, min_load=128.0, min_keys=512,
+        check_every=256, cooldown_keys=2048, load_window_keys=1024))
+    idx = nfl.index
+    oracle = dict(zip(keys.tolist(), pv.tolist()))
+    rng = np.random.default_rng(7)
+    b0 = idx.boundaries.copy()
+    allk = np.array(sorted(oracle))
+    hot = allk[allk.astype(np.float32) < b0[0]]
+    for step in range(80):
+        q = np.concatenate([rng.choice(hot, 48), rng.choice(allk, 16)])
+        res = nfl.lookup_batch(q)
+        exp = np.array([oracle[k] for k in q.tolist()])
+        assert (res == exp).all(), f"step {step}: wrong under skew"
+        if nfl._reshard.migrations_completed >= 1 \
+                and idx._reshard is None:
+            break
+    st = nfl.dispatch_stats()["reshard"]
+    assert st["enabled"] and st["migrations_completed"] >= 1
+    assert st["resharding_episodes"] >= st["migrations_completed"]
+    assert st["last_hot_shard"] == 0
+    # the load-weighted split moved the hot boundary down: the read-hot
+    # range now spreads across two slots
+    assert float(idx.boundaries[0]) < float(b0[0])
+    _check_all(nfl, oracle, "post-trigger")
+    # per-shard load gauges ride dispatch_stats()["shards"]
+    ds = nfl.dispatch_stats()
+    for t in ds["shards"]:
+        assert set(t["load"]) == {"reads", "writes"}
+    assert sum(t["load"]["reads"] for t in ds["shards"]) > 0
+
+
+def test_migrate_off_detects_but_never_moves():
+    """``ReshardConfig(migrate=False)``: the hot-shard score is
+    telemetry only — checks run, the hot shard is named, and the
+    boundaries never move (mirroring ``DriftConfig.reflow``'s opt-in
+    split)."""
+    keys, pv = _keyset(8)
+    nfl = _mk(4, keys, pv, reshard=ReshardConfig(
+        enabled=True, migrate=False, hot_frac=1.8, min_load=128.0,
+        min_keys=512, check_every=256, load_window_keys=1024))
+    idx = nfl.index
+    b0 = idx.boundaries.copy()
+    allk = keys
+    hot = allk[allk.astype(np.float32) < b0[0]]
+    rng = np.random.default_rng(9)
+    for _ in range(40):
+        nfl.lookup_batch(np.concatenate([rng.choice(hot, 48),
+                                         rng.choice(allk, 16)]))
+    st = nfl.dispatch_stats()["reshard"]
+    assert st["checks"] >= 1 and st["last_hot_shard"] == 0
+    assert st["resharding_episodes"] == 0
+    assert np.array_equal(idx.boundaries, b0)
+    assert idx.n_reshards == 0
+
+
+# ---------------------------------------------------- abort + exclusion
+def test_fold_abort_rolls_back_and_next_attempt_succeeds():
+    """A candidate fold that raises mid-flight aborts the episode in
+    place: boundaries and serving untouched, window un-held, abort
+    counted — and the next (un-faulted) attempt migrates cleanly."""
+    keys, pv = _keyset(10)
+    nfl = _mk(4, keys, pv)
+    idx = nfl.index
+    oracle = dict(zip(keys.tolist(), pv.tolist()))
+    b0 = idx.boundaries.copy()
+    assert idx.start_reshard(0, 1, on_swap=lambda: None)
+    idx._reshard_fault = "fold"
+    nfl.lookup_batch(keys[:32])          # the tick hits the fault
+    assert idx._reshard is None
+    assert idx.n_reshard_aborts == 1 and idx.n_reshards == 0
+    assert np.array_equal(idx.boundaries, b0)
+    assert not any(s._tier_hold for s in idx.shards), \
+        "abort left a window shard frozen"
+    _check_all(nfl, oracle, "post-abort")
+    idx._reshard_fault = None
+    swapped = []
+    assert idx.start_reshard(0, 1, on_swap=lambda: swapped.append(1))
+    idx.rebuild()
+    assert swapped == [1] and idx.n_reshards == 1
+    _check_all(nfl, oracle, "post-retry")
+
+
+def test_snapshot_abort_unfreezes_partial_window():
+    keys, pv = _keyset(11)
+    nfl = _mk(4, keys, pv)
+    idx = nfl.index
+    oracle = dict(zip(keys.tolist(), pv.tolist()))
+    b0 = idx.boundaries.copy()
+    idx._reshard_fault = "snapshot"
+    with pytest.raises(RuntimeError, match="snapshot"):
+        idx.start_reshard(0, 2, on_swap=lambda: None)
+    assert idx._reshard is None and idx.n_reshard_aborts == 1
+    assert np.array_equal(idx.boundaries, b0)
+    assert not any(s._tier_hold for s in idx.shards)
+    idx._reshard_fault = None
+    _check_all(nfl, oracle, "post-snapshot-abort")
+    # the partially-frozen shard's data survived (snapshot merges the
+    # delta INTO the run tier): writes and folds still work
+    rng = np.random.default_rng(12)
+    k = np.unique(rng.uniform(0, 100, 200))
+    k = k[~np.isin(k, keys)]
+    v = np.arange(len(k), dtype=np.int64) + 40_000_000
+    nfl.insert_batch(k, v)
+    oracle.update(zip(k.tolist(), v.tolist()))
+    idx.rebuild()
+    _check_all(nfl, oracle, "post-abort fold")
+
+
+def test_reshard_vs_reflow_exclusion():
+    """The shared ExclusionLock serializes structural episodes: while a
+    re-flow owns the token the trigger becomes a backed-off failure
+    (boundaries untouched), and releasing it lets the next episode
+    migrate."""
+    keys, pv = _keyset(13)
+    nfl = _mk(4, keys, pv, reshard=ReshardConfig(
+        enabled=True, hot_frac=1.8, min_load=128.0, min_keys=512,
+        check_every=256, cooldown_keys=512, load_window_keys=1024))
+    idx = nfl.index
+    b0 = idx.boundaries.copy()
+    assert nfl._exclusion is nfl._reshard.exclusion
+    assert nfl._exclusion.acquire("reflow")   # a re-flow owns the swap
+    allk = keys
+    hot = allk[allk.astype(np.float32) < b0[0]]
+    rng = np.random.default_rng(14)
+    span0 = nfl._reshard._cooldown_span
+    while nfl._reshard.migrations_failed == 0:
+        nfl.lookup_batch(np.concatenate([rng.choice(hot, 48),
+                                         rng.choice(allk, 16)]))
+    st = nfl._reshard.stats()
+    assert st["migrations_failed"] >= 1 and st["state"] == "idle"
+    assert st["cooldown_span"] >= 2 * span0, "contention did not back off"
+    assert np.array_equal(idx.boundaries, b0)
+    assert nfl._exclusion.owner == "reflow", \
+        "a refused episode stole or dropped the re-flow's token"
+    nfl._exclusion.release("reflow")
+    while nfl._reshard.migrations_completed == 0:
+        nfl.lookup_batch(np.concatenate([rng.choice(hot, 48),
+                                         rng.choice(allk, 16)]))
+    assert idx.n_reshards >= 1
+    assert nfl._exclusion.owner is None, \
+        "the completed migration kept the exclusion token"
+
+
+def test_index_refuses_concurrent_structural_episodes():
+    keys, pv = _keyset(15)
+    nfl = _mk(2, keys, pv)
+    idx = nfl.index
+    assert idx.start_reshard(0, 1, on_swap=lambda: None)
+    # a second migration AND a re-flow are both refused while in flight
+    assert not idx.start_reshard(0, 1, on_swap=lambda: None)
+    assert not idx.start_reflow(lambda k: np.asarray(k, np.float64),
+                                None, lambda: None)
+    idx.rebuild()
+    assert idx.n_reshards == 1
+
+
+# ------------------------------------------------- manager state machine
+def _snap(reads, writes, n_keys):
+    return {"reads": list(reads), "writes": list(writes),
+            "n_keys": list(n_keys)}
+
+
+def test_manager_backoff_doubles_and_counters_stay_monotone():
+    cfg = ReshardConfig(enabled=True, hot_frac=1.5, min_load=10.0,
+                        min_keys=10, check_every=100, cooldown_keys=200,
+                        max_backoff=8)
+    mgr = ReshardManager(
+        cfg, load_snapshot=lambda: _snap([100, 1, 1, 1], [0] * 4,
+                                         [50, 50, 50, 50]),
+        start_migration=lambda lo, hi: False)   # index always busy
+    spans, fails = [], []
+    for _ in range(6):
+        mgr.observe(mgr.cooldown_until - mgr.keys_routed
+                    + cfg.check_every)
+        mgr.tick()
+        spans.append(mgr._cooldown_span)
+        fails.append(mgr.migrations_failed)
+    assert fails == sorted(fails) and fails[-1] >= 4, \
+        "failure counter must be monotone and climbing"
+    assert spans[1] == 2 * spans[0] and spans[2] == 4 * spans[0]
+    assert max(spans) <= cfg.max_backoff * cfg.cooldown_keys
+    assert mgr.migrations_completed == 0
+    assert mgr.resharding_episodes == mgr.migrations_failed
+
+
+def test_manager_lock_discipline():
+    calls = {"n": 0}
+
+    def reentrant_snapshot():
+        calls["n"] += 1
+        mgr.tick()   # an injected callable must never drive the machine
+        return _snap([1, 1], [0, 0], [10, 10])
+
+    cfg = ReshardConfig(enabled=True, check_every=1)
+    mgr = ReshardManager(cfg, load_snapshot=reentrant_snapshot,
+                         start_migration=lambda lo, hi: True)
+    mgr.observe(100)
+    with pytest.raises(LockDisciplineError):
+        mgr.tick()
+    assert calls["n"] == 1
+
+
+def test_manager_respects_gates():
+    """Cold shards, tiny tables, and in-cooldown windows never open an
+    episode even when one shard tops the load ranking."""
+    started = []
+    cfg = ReshardConfig(enabled=True, hot_frac=2.0, min_load=1000.0,
+                        min_keys=10_000, check_every=10)
+    mgr = ReshardManager(
+        cfg, load_snapshot=lambda: _snap([30, 1, 1, 1], [0] * 4,
+                                         [10, 10, 10, 10]),
+        start_migration=lambda lo, hi: started.append((lo, hi)) or True)
+    mgr.observe(100)
+    mgr.tick()
+    # hot share qualifies but min_load and min_keys do not
+    assert mgr.last_hot_shard == 0 and not started
+    assert mgr.resharding_episodes == 0
+
+
+def test_exclusion_lock_semantics():
+    ex = ExclusionLock()
+    assert ex.acquire("reflow")
+    assert ex.acquire("reflow")          # re-entrant for the owner
+    assert not ex.acquire("reshard")
+    ex.release("reshard")                # non-owner release is a no-op
+    assert ex.owner == "reflow"
+    ex.release("reflow")
+    assert ex.acquire("reshard")
+
+
+# --------------------------------------------- telemetry reset semantics
+def test_reshard_counters_and_load_gauges_survive_reset():
+    keys, pv = _keyset(16)
+    nfl = _mk(4, keys, pv, reshard=ReshardConfig(
+        enabled=True, hot_frac=1.8, min_load=128.0, min_keys=512,
+        check_every=256, cooldown_keys=2048, load_window_keys=1024))
+    idx = nfl.index
+    b0 = idx.boundaries.copy()
+    hot = keys[keys.astype(np.float32) < b0[0]]
+    rng = np.random.default_rng(17)
+    while nfl._reshard.migrations_completed == 0:
+        nfl.lookup_batch(np.concatenate([rng.choice(hot, 48),
+                                         rng.choice(keys, 16)]))
+    before = nfl.dispatch_stats(reset=True)
+    after = nfl.dispatch_stats()
+    # episode counters are monotone state: they survive the reset
+    for k in ("checks", "resharding_episodes", "migrations_completed",
+              "migrations_failed"):
+        assert after["reshard"][k] == before["reshard"][k], k
+    # the decayed load gauges survive too (they are the trigger's
+    # memory), while the router fan-out counters reset
+    assert sum(after["reshard"]["load"]["reads"]) > 0
+    assert after["router"]["point_queries"] == 0
+    assert after["router"]["per_shard_points"] == [0] * 4

@@ -242,6 +242,72 @@ def test_select_tile_policy():
 
 
 # ------------------------------------------------------------ preallocation
+# --------------------------------------------------- §18 migration swap
+def test_migration_swap_zero_retraces_on_untouched_shards():
+    """§18 satellite: an online boundary migration of shards [0, 1]
+    must leave the untouched shards' serving machinery alone — same
+    shard objects across the swap, zero tier repacks, zero ratchet
+    releases, and fixed-shape lookups reuse every warmed kernel through
+    the whole episode (0 retraces, 0 new cache entries).  Ratchet
+    release is scoped to the migrated slots by construction: the
+    candidates are fresh ``ServingState``s, so their ratchets start
+    released without ever calling ``release_ratchets`` on a live shard."""
+    from repro.core.nfl import NFL, NFLConfig
+
+    rng = np.random.default_rng(47)
+    keys = np.unique(rng.uniform(0.0, 100.0, 6_000))
+    pay = np.arange(keys.shape[0], dtype=np.int64)
+    nfl = NFL(NFLConfig(backend="flat", shards=4, force_flow=False,
+                        flat_index=FlatAFLIConfig(
+                            rebuild_frac=0.1, delta_cap=24,
+                            fold_step_keys=48, fold_work_factor=4.0)))
+    nfl.bulkload(keys, pay)
+    idx = nfl.index
+    oracle = dict(zip(keys.tolist(), pay.tolist()))
+    # a fixed-shape batch that routes only to the untouched shards 2..3
+    hi_keys = keys[keys.astype(np.float32) >= idx.boundaries[1]]
+    batch = np.ascontiguousarray(hi_keys[:256])
+    exp = np.array([oracle[k] for k in batch.tolist()])
+    for _ in range(3):   # warm the serving caches at this shape
+        assert (nfl.lookup_batch(batch) == exp).all()
+    untouched = [idx.shards[2], idx.shards[3]]
+    old_window = [idx.shards[0], idx.shards[1]]
+    base = [s.stats()["serving"] for s in untouched]
+
+    swapped = []
+    assert idx.start_reshard(0, 1, on_swap=lambda: swapped.append(1))
+    for _ in range(400):
+        assert (nfl.lookup_batch(batch) == exp).all()   # funds the ticks
+        if swapped:
+            break
+    assert swapped == [1], "migration never swapped"
+    # the swap replaced exactly the window slots
+    assert idx.shards[2] is untouched[0] and idx.shards[3] is untouched[1]
+    assert idx.shards[0] is not old_window[0]
+    assert idx.shards[1] is not old_window[1]
+    # post-swap, the warmed shape serves with zero retraces and zero new
+    # jit cache entries — the swap invalidated nothing the untouched
+    # shards were serving from (building the fresh candidates may trace
+    # THEIR fold/pack shapes mid-flight; the swap itself adds nothing)
+    warmed = ops.serving_cache_size()
+    r0 = ops.fused_lookup_stats()["retrace_count"]
+    for _ in range(4):
+        assert (nfl.lookup_batch(batch) == exp).all()
+    assert ops.serving_cache_size() == warmed, \
+        "migration swap retraced a warmed serving kernel"
+    assert ops.fused_lookup_stats()["retrace_count"] == r0
+    for s, b in zip(untouched, base):
+        now = s.stats()["serving"]
+        assert now["tier_repacks"] == b["tier_repacks"], \
+            "migration repacked an untouched shard's tiers"
+        assert now["ratchet_releases"] == b["ratchet_releases"], \
+            "migration released ratchets outside the window"
+    # fresh candidates: ratchets released by construction, not by a
+    # release call on a shard that was serving
+    for s in idx.shards[:2]:
+        assert s.stats()["serving"]["ratchet_releases"] == 0
+
+
 def test_preallocate_pins_tier_capacity():
     idx, _ = _mk_index(4_000, seed=46, delta_cap=128)
     serving = idx._serving
